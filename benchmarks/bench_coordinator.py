@@ -1,0 +1,59 @@
+"""Coordinator scalability (paper §III-A): two-phase barrier latency vs worker
+count, real TCP sockets, trivial saves — isolates protocol cost from I/O."""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def run(results_dir: Path | None = None, worker_counts=(1, 4, 16, 64),
+        rounds: int = 5):
+    from repro.core.coordinator import CheckpointCoordinator
+    from repro.core.worker import CkptClient
+
+    rows = []
+    detail = {}
+    for n in worker_counts:
+        coord = CheckpointCoordinator(expected_workers=n, straggler_timeout=30,
+                                      commit_fn=lambda step, num_workers: {"step": step})
+        stop = threading.Event()
+
+        def worker(wid):
+            c = CkptClient(coord.host, coord.port, wid)
+            while not stop.is_set():
+                c.service(0, lambda label: {})
+                time.sleep(0.001)
+            c.close()
+
+        threads = [threading.Thread(target=worker, args=(w,), daemon=True)
+                   for w in range(n)]
+        for t in threads:
+            t.start()
+        coord.wait_for_workers(n)
+        lat = []
+        for r in range(rounds):
+            t0 = time.perf_counter()
+            rec = coord.trigger_checkpoint(step=r)
+            assert rec["ok"], rec
+            lat.append(time.perf_counter() - t0)
+        stop.set()
+        for t in threads:
+            t.join(timeout=5)
+        coord.close()
+        detail[n] = {"mean_s": float(np.mean(lat)), "p_max_s": float(np.max(lat))}
+    base = detail[worker_counts[0]]["mean_s"]
+    for n in worker_counts:
+        rows.append({
+            "name": f"coordinator_barrier_w{n}",
+            "us_per_call": detail[n]["mean_s"] * 1e6,
+            "derived": f"vs_1worker={detail[n]['mean_s']/base:.2f}x "
+                       f"max={detail[n]['p_max_s']*1e3:.1f}ms",
+        })
+    if results_dir:
+        results_dir.mkdir(parents=True, exist_ok=True)
+        (results_dir / "coordinator.json").write_text(json.dumps(detail, indent=1))
+    return rows

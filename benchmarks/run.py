@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper artifact.  Prints
+``name,us_per_call,derived`` CSV.
+
+  bench_cr_overhead   Fig. 4: no-C/R vs checkpoint-only vs checkpoint+restart
+  bench_startup       Fig. 2: restore latency vs ranks x storage tier
+  bench_coordinator   §III-A: two-phase barrier latency vs worker count
+  bench_kernels       kernel-layer + checkpoint-substrate throughput
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def main() -> None:
+    from benchmarks import bench_coordinator, bench_cr_overhead, bench_kernels, bench_startup
+
+    rows = []
+    for mod in (bench_kernels, bench_startup, bench_coordinator, bench_cr_overhead):
+        rows.extend(mod.run(RESULTS))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

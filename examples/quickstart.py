@@ -1,0 +1,66 @@
+"""Quickstart: train a small LM with transparent checkpoint-restart.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs ~60 steps of a reduced qwen2 on CPU with interval checkpoints; then
+*simulates a crash* by rebuilding everything from scratch and restoring the
+latest committed checkpoint — training continues exactly where it left off.
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore
+from repro.configs.base import get_config, reduced
+from repro.core.cr_manager import CRManager
+from repro.data.pipeline import PipelineState, SyntheticTokens
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.parallel.mesh_rules import Rules
+from repro.train import step as TS
+
+
+def make_session(ckpt_dir):
+    cfg = reduced(get_config("qwen2-0.5b"))
+    oc = adamw.OptConfig(lr=1e-3, warmup_steps=5, decay_steps=60)
+    mesh = make_host_mesh()
+    rules = Rules(mesh)
+    step_fn, *_ = TS.make_train_step(cfg, mesh, oc, rules=rules, donate=False)
+    ckpt = CheckpointManager(TieredStore(Path(ckpt_dir)))
+    crm = CRManager(ckpt, interval_steps=10, cfg=cfg, rules=rules)
+    pipe = SyntheticTokens(cfg, batch_size=4, seq_len=64, seed=0)
+    templates = {"state": TS.abstract_train_state(cfg, oc)}
+    axes = {"state": TS.state_logical_axes(cfg)}
+    init = lambda: TS.init_train_state(cfg, oc, jax.random.PRNGKey(0))
+    return cfg, step_fn, crm, pipe, templates, axes, init
+
+
+def train(ckpt_dir, until_step):
+    cfg, step_fn, crm, pipe, templates, axes, init = make_session(ckpt_dir)
+    state, meta, start = crm.restore_or_init(init, templates, axes)
+    if meta and "data_state" in meta:
+        pipe.restore(PipelineState.from_dict(meta["data_state"]))
+    for step in range(start, until_step):
+        state, metrics = step_fn(state, next(pipe))
+        if step % 10 == 0:
+            print(f"  step {step:3d}  loss {float(metrics['loss']):.4f}")
+        crm.step_boundary(step, lambda: state,
+                          extra_meta={"data_state": pipe.state().to_dict()})
+    crm.checkpoint_now(until_step - 1, lambda: state,
+                       extra_meta={"data_state": pipe.state().to_dict()})
+    crm.close()
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as d:
+        print("phase 1: train to step 30, checkpointing every 10 steps")
+        train(d, 30)
+        print("phase 2: 'crash' — fresh process state; restore and continue to 60")
+        loss = train(d, 60)
+        print(f"done. final loss {loss:.4f}")

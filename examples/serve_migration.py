@@ -1,0 +1,73 @@
+"""Serving with pause/migrate/resume — C/R applied to inference state.
+
+    PYTHONPATH=src python examples/serve_migration.py
+
+The paper highlights DMTCP's ability to "pause, migrate, or resume computations
+across different machines".  For an LM server the live state is the KV cache +
+generation cursor.  This example serves a batch of requests, snapshots the
+engine mid-generation through the checkpoint substrate, tears the engine down,
+"migrates" to a fresh engine (new object, could be a new host), restores, and
+verifies the continuation is token-identical to an unmigrated run.
+"""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore
+from repro.configs.base import get_config, reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serve.engine import Engine
+
+ARCH = "llama3.2-1b"
+BATCH, PROMPT, MAX_SEQ = 4, 12, 64
+
+
+def main():
+    cfg = reduced(get_config(ARCH))
+    mesh = make_host_mesh()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (BATCH, PROMPT)), jnp.int32)}
+
+    # ---- reference: uninterrupted generation --------------------------------
+    ref = Engine(cfg, mesh, params, batch=BATCH, max_seq=MAX_SEQ)
+    ref.prefill(prompts)
+    ref_tokens = np.concatenate([ref.generate(10), ref.generate(10)], axis=1)
+
+    # ---- serve 10 tokens, snapshot, migrate, resume -------------------------
+    eng = Engine(cfg, mesh, params, batch=BATCH, max_seq=MAX_SEQ)
+    eng.prefill(prompts)
+    first = eng.generate(10)
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(TieredStore(Path(d)))
+        snap = eng.snapshot()
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), snap)
+        mgr.save(0, host)
+        mgr.commit(0)
+        del eng                                     # old server gone
+        print("engine checkpointed; migrating to a fresh engine...")
+
+        eng2 = Engine(cfg, mesh, params, batch=BATCH, max_seq=MAX_SEQ)
+        restored, _ = mgr.restore(host)
+        eng2.restore(jax.tree_util.tree_map(jnp.asarray, restored))
+        second = eng2.generate(10)
+
+    got = np.concatenate([first, second], axis=1)
+    assert np.array_equal(got, ref_tokens), "migrated continuation diverged!"
+    print(f"OK — {BATCH} requests x 20 tokens; migrated continuation is "
+          f"token-identical to the unmigrated run")
+    print("sample continuation (request 0):", got[0].ravel()[:10], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Background checkpoint writer (beyond-paper optimization).
+
+The paper's DMTCP checkpoint is synchronous: user threads are quiesced for the
+whole image write (the CPU dips in its Fig. 4).  Here the quiesce only lasts for
+the device->host snapshot (double buffer); the serialization + store write run
+on a daemon thread overlapped with training.  ``wait()`` drains the queue —
+called before a requeue/exit so the last image is durable, and by the two-phase
+coordinator barrier before WRITTEN is sent.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import traceback
+from typing import Callable, Optional
+
+
+class AsyncWriter:
+    def __init__(self, max_inflight: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
+        self._err: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self._inflight = 0
+        self._done = threading.Condition()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn = item
+            try:
+                fn()
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                with self._lock:
+                    self._err = e
+                traceback.print_exc()
+            finally:
+                with self._done:
+                    self._inflight -= 1
+                    self._done.notify_all()
+
+    def submit(self, fn: Callable[[], None]) -> None:
+        self.raise_if_failed()
+        with self._done:
+            self._inflight += 1
+        self._q.put(fn)
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        with self._done:
+            self._done.wait_for(lambda: self._inflight == 0, timeout=timeout)
+        self.raise_if_failed()
+
+    def raise_if_failed(self) -> None:
+        with self._lock:
+            if self._err is not None:
+                err, self._err = self._err, None
+                raise RuntimeError("async checkpoint write failed") from err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=5)

@@ -1,0 +1,217 @@
+"""CheckpointManager: sharded, atomic, optionally async/incremental checkpoints.
+
+Layout under the store (per tier):
+  <prefix>/step_<N>/shard_w<world-id>.bin     one shard per worker
+  <prefix>/step_<N>/wpart_<id>.json           per-worker manifest part
+  <prefix>/step_<N>/MANIFEST.json             atomic commit marker (written LAST,
+                                              by the coordinator / single worker)
+
+A checkpoint exists iff MANIFEST.json exists — a preemption mid-write leaves no
+manifest and the restart falls back to the previous step (two-phase commit, the
+framework analogue of DMTCP's coordinator barrier).
+
+Leaf ownership: leaf i belongs to worker (i % num_workers).  Restore reads every
+worker part, so a checkpoint taken with N workers restores under M workers (the
+MxN / elastic-restart property; mesh placement is re-derived by
+core/virtualization.py).
+
+Incremental mode (beyond-paper): a leaf whose crc32 is unchanged since the
+previous *committed* checkpoint is not rewritten — its manifest entry points at
+the older shard file.  GC keeps referenced base files alive.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.async_writer import AsyncWriter
+from repro.checkpoint.store import TieredStore
+
+
+def _step_dir(prefix: str, step: int) -> str:
+    return f"{prefix}/step_{step:010d}"
+
+
+class CheckpointManager:
+    def __init__(self, store: TieredStore, *, tier: str = "shared",
+                 worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
+                 mode: str = "sync", incremental: bool = False,
+                 keep_last: int = 3, prefix: str = "ckpt"):
+        assert mode in ("sync", "async")
+        self.store = store
+        self.tier = tier
+        self.worker_id = worker_id
+        self.num_workers = num_workers
+        self.replicas = replicas
+        self.mode = mode
+        self.incremental = incremental
+        self.keep_last = keep_last
+        self.prefix = prefix
+        self._writer = AsyncWriter() if mode == "async" else None
+        self._prev_manifest: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    def _my_leaves(self, records):
+        return [
+            (i, name, arr) for i, (name, arr) in enumerate(records)
+            if i % self.num_workers == self.worker_id
+        ]
+
+    def save(self, step: int, tree, extra_meta: Optional[dict] = None) -> dict:
+        """Snapshot + write this worker's shard.  Returns the worker part dict.
+
+        In async mode the device->host snapshot happens here (the only quiesced
+        section); serialization and store writes run on the writer thread.
+        """
+        t0 = time.time()
+        records = SER.tree_to_records(tree)            # snapshot (device_get)
+        snap_s = time.time() - t0
+        mine = self._my_leaves(records)
+        sdir = _step_dir(self.prefix, step)
+        shard_rel = f"{sdir}/shard_w{self.worker_id:05d}.bin"
+
+        prev_entries = {}
+        if self.incremental and self._prev_manifest:
+            prev_entries = {
+                e["path"]: e for e in self._prev_manifest["leaves"]
+            }
+
+        entries, to_write = [], []
+        for idx, name, arr in mine:
+            crc = SER.leaf_checksum(arr)
+            prev = prev_entries.get(name)
+            if prev is not None and prev["crc32"] == crc and prev.get("file"):
+                entries.append({**prev, "reused": True})
+            else:
+                to_write.append((name, arr))
+                entries.append({
+                    "path": name, "index": idx, "crc32": crc,
+                    "dtype": str(arr.dtype), "shape": list(arr.shape),
+                    "file": shard_rel, "reused": False,
+                })
+
+        part = {
+            "worker_id": self.worker_id,
+            "num_workers": self.num_workers,
+            "step": step,
+            "leaves": entries,
+            "snapshot_s": snap_s,
+            "meta": extra_meta or {},
+        }
+
+        def do_write():
+            if to_write:
+                data = SER.write_shard_bytes(to_write, meta={"step": step})
+                self.store.put(self.tier, shard_rel, data, replicas=self.replicas)
+            self.store.put(
+                self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
+                json.dumps(part).encode(), replicas=self.replicas)
+
+        if self._writer is not None:
+            self._writer.submit(do_write)
+        else:
+            do_write()
+        return part
+
+    def wait_writes(self, timeout: Optional[float] = None) -> None:
+        if self._writer is not None:
+            self._writer.wait(timeout)
+
+    # ------------------------------------------------------------------
+    def commit(self, step: int, *, num_workers: Optional[int] = None,
+               extra_meta: Optional[dict] = None) -> dict:
+        """Coordinator-side: verify all worker parts exist, write MANIFEST last."""
+        self.wait_writes()
+        nw = num_workers or self.num_workers
+        sdir = _step_dir(self.prefix, step)
+        leaves = []
+        meta: dict = {}
+        for w in range(nw):
+            raw = self.store.get(self.tier, f"{sdir}/wpart_{w:05d}.json")
+            part = json.loads(raw.decode())
+            leaves.extend(part["leaves"])
+            meta.update(part.get("meta") or {})   # worker metas merge (w0 first)
+        leaves.sort(key=lambda e: e["index"])
+        meta.update(extra_meta or {})
+        manifest = {
+            "step": step,
+            "num_workers": nw,
+            "leaves": leaves,
+            "committed_at": time.time(),
+            "meta": meta,
+        }
+        self.store.put(self.tier, f"{sdir}/MANIFEST.json",
+                       json.dumps(manifest).encode(), replicas=self.replicas)
+        self._prev_manifest = manifest
+        self.gc()
+        return manifest
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        rels = self.store.list_prefix(self.tier, self.prefix)
+        out = set()
+        for r in rels:
+            parts = Path(r).parts
+            if len(parts) >= 2 and parts[-1] == "MANIFEST.json":
+                out.add(int(parts[-2].split("_")[1]))
+        return sorted(out)
+
+    def read_manifest(self, step: int) -> dict:
+        raw = self.store.get(self.tier, f"{_step_dir(self.prefix, step)}/MANIFEST.json")
+        return json.loads(raw.decode())
+
+    def restore(self, template, step: Optional[int] = None):
+        """Returns (host_tree, manifest).  Verifies per-leaf crcs; replica
+        fallback happens inside the store."""
+        all_steps = self.steps()
+        if not all_steps:
+            raise FileNotFoundError("no committed checkpoint found")
+        step = all_steps[-1] if step is None else step
+        manifest = self.read_manifest(step)
+        by_file: dict[str, list[dict]] = {}
+        for e in manifest["leaves"]:
+            by_file.setdefault(e["file"], []).append(e)
+        named: dict[str, np.ndarray] = {}
+        for rel, ents in by_file.items():
+            tensors, _ = self.store.get_verified(self.tier, rel)
+            for e in ents:
+                arr = tensors[e["path"]]
+                if SER.leaf_checksum(arr) != e["crc32"]:
+                    raise SER.ChecksumError(f"manifest crc mismatch: {e['path']}")
+                named[e["path"]] = arr
+        tree = SER.restore_tree(template, named)
+        self._prev_manifest = manifest
+        return tree, manifest
+
+    # ------------------------------------------------------------------
+    def gc(self) -> None:
+        """Old manifests are always removed (a checkpoint 'exists' iff its
+        manifest does); step dirs survive only while an incremental manifest in
+        the kept set references their shard files."""
+        steps = self.steps()
+        keep = set(steps[-self.keep_last:]) if self.keep_last else set(steps)
+        referenced_dirs = set()
+        for s in keep:
+            man = self.read_manifest(s)
+            for e in man["leaves"]:
+                referenced_dirs.add(str(Path(e["file"]).parent))
+        for s in steps:
+            if s in keep:
+                continue
+            sdir = _step_dir(self.prefix, s)
+            if sdir in referenced_dirs:
+                # keep the shard data, retire the manifest + parts
+                self.store.delete_file(self.tier, f"{sdir}/MANIFEST.json")
+                for w in range(self.num_workers):
+                    self.store.delete_file(self.tier, f"{sdir}/wpart_{w:05d}.json")
+            else:
+                self.store.delete_prefix(self.tier, sdir)
+
+    def close(self) -> None:
+        if self._writer is not None:
+            self._writer.close()

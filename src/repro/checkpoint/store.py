@@ -1,0 +1,126 @@
+"""Tiered checkpoint storage with k-replication.
+
+Models the paper's Fig.-2 filesystem hierarchy: a container-image-cache-like
+node-local tier (``ram`` / ``local``) vs a shared parallel filesystem
+(``shared``).  Tiers carry simulated bandwidth/latency so benchmarks can
+reproduce the paper's startup-time-vs-ranks effect on a single box; simulation
+is off (factor 0) everywhere except the benchmarks.
+
+Replication: a shard written at replication k lands in k distinct "node"
+directories of the tier; reads fall back across replicas on checksum failure
+(the paper: "redundantly storing checkpoint images").
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import shutil
+import time
+from pathlib import Path
+from typing import Optional
+
+from repro.checkpoint import serialization as SER
+
+
+@dataclasses.dataclass
+class TierSpec:
+    name: str
+    bandwidth_gbps: float      # simulated sequential bandwidth
+    latency_s: float           # simulated per-op latency
+    nodes: int = 1             # distinct failure domains within the tier
+
+
+DEFAULT_TIERS = {
+    "ram": TierSpec("ram", 40.0, 0.00005, nodes=1),
+    "local": TierSpec("local", 3.0, 0.0005, nodes=1),
+    "shared": TierSpec("shared", 1.0, 0.02, nodes=8),
+}
+
+
+class TieredStore:
+    def __init__(self, root: Path, tiers: Optional[dict] = None,
+                 sim_io_factor: float = 0.0):
+        self.root = Path(root)
+        self.tiers = tiers or dict(DEFAULT_TIERS)
+        self.sim_io_factor = sim_io_factor
+
+    # ------------------------------------------------------------------
+    def _node_dirs(self, tier: str) -> list[Path]:
+        spec = self.tiers[tier]
+        return [self.root / tier / f"node{i}" for i in range(spec.nodes)]
+
+    def _simulate(self, tier: str, nbytes: int) -> None:
+        if not self.sim_io_factor:
+            return
+        spec = self.tiers[tier]
+        t = spec.latency_s + nbytes / (spec.bandwidth_gbps * 1e9)
+        time.sleep(t * self.sim_io_factor)
+
+    # ------------------------------------------------------------------
+    def put(self, tier: str, rel: str, data: bytes, *, replicas: int = 1) -> list[str]:
+        nodes = self._node_dirs(tier)
+        replicas = min(replicas, len(nodes))
+        chosen = nodes[:replicas] if replicas == len(nodes) else random.sample(nodes, replicas)
+        written = []
+        for nd in chosen:
+            p = nd / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            tmp = p.with_suffix(p.suffix + ".tmp")
+            tmp.write_bytes(data)
+            tmp.rename(p)
+            self._simulate(tier, len(data))
+            written.append(str(p.relative_to(self.root)))
+        return written
+
+    def get(self, tier: str, rel: str) -> bytes:
+        """Read with replica fallback; raises FileNotFoundError if no replica."""
+        last_err: Exception | None = None
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            if not p.exists():
+                continue
+            data = p.read_bytes()
+            self._simulate(tier, len(data))
+            return data
+        raise FileNotFoundError(f"{tier}:{rel}") from last_err
+
+    def get_verified(self, tier: str, rel: str):
+        """Read + parse a shard, falling back across replicas on crc failure."""
+        errs = []
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            if not p.exists():
+                continue
+            try:
+                data = p.read_bytes()
+                self._simulate(tier, len(data))
+                return SER.read_shard_bytes(data, verify=True)
+            except SER.ChecksumError as e:  # corrupted replica: try the next
+                errs.append((str(p), str(e)))
+                continue
+        raise SER.ChecksumError(f"no intact replica for {tier}:{rel}: {errs}")
+
+    def exists(self, tier: str, rel: str) -> bool:
+        return any((nd / rel).exists() for nd in self._node_dirs(tier))
+
+    def delete_prefix(self, tier: str, prefix: str) -> None:
+        for nd in self._node_dirs(tier):
+            p = nd / prefix
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
+
+    def delete_file(self, tier: str, rel: str) -> None:
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            if p.exists():
+                p.unlink()
+
+    def list_prefix(self, tier: str, prefix: str) -> set[str]:
+        out: set[str] = set()
+        for nd in self._node_dirs(tier):
+            p = nd / prefix
+            if p.is_dir():
+                for f in p.rglob("*"):
+                    if f.is_file() and not f.name.endswith(".tmp"):
+                        out.add(str(f.relative_to(nd)))
+        return out

@@ -1,0 +1,133 @@
+"""CRManager — glues the C/R core into a training loop (paper Fig. 3 workflow).
+
+One object owns: the checkpoint manager (storage), the coordinator client (or
+inline coordinator), the signal trap, and the walltime tracker.  The training
+loop touches three methods:
+
+    state, data_state, start_step = crm.restore_or_init(init_fn)
+    for step in range(start_step, total):
+        state = train_step(state, batch)
+        action = crm.step_boundary(step, state_snapshot_fn, data_state_fn)
+        if action == "exit":           # preempted / walltime -> checkpointed
+            crm.request_requeue(step); break
+
+Exit paths mirror the paper: trapped SIGTERM/USR1, coordinator EXIT_REQ,
+walltime margin — each forces a final checkpoint round, records the requeue
+file, and returns "exit".  Periodic checkpoints happen every
+``interval_steps`` or via a coordinator interval trigger.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.manifest import capture_manifest, verify_manifest
+from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.core.signals import SignalTrap
+from repro.core.virtualization import fetch_tree, place_tree
+from repro.core.worker import CkptClient, InlineCoordinator
+
+
+class CRManager:
+    def __init__(self, ckpt: CheckpointManager, *,
+                 client=None,
+                 signal_trap: Optional[SignalTrap] = None,
+                 walltime: Optional[WalltimeTracker] = None,
+                 requeue_file: Optional[RequeueFile] = None,
+                 interval_steps: Optional[int] = None,
+                 cfg=None, rules=None,
+                 log: Callable[[str], None] = print):
+        self.ckpt = ckpt
+        self.client = client or InlineCoordinator(commit_fn=ckpt.commit)
+        self.signal_trap = signal_trap
+        self.walltime = walltime
+        self.requeue_file = requeue_file
+        self.interval_steps = interval_steps
+        self.cfg = cfg
+        self.rules = rules
+        self.log = log
+        self.events: list[dict] = []
+        self._restored_meta: Optional[dict] = None
+
+    # ------------------------------------------------------------------
+    def restore_or_init(self, init_fn, templates: dict, axes: Optional[dict] = None):
+        """templates: {"state": host-template pytree}.  Returns
+        (device_state, manifest_meta|None, start_step)."""
+        try:
+            host_state, manifest = self.ckpt.restore(templates["state"])
+        except FileNotFoundError:
+            state = init_fn()
+            self.log("[cr] no checkpoint found — cold start")
+            return state, None, 0
+        meta = manifest.get("meta", {})
+        if meta.get("run_manifest"):
+            verify_manifest(meta["run_manifest"], cfg=self.cfg, log=self.log)
+        state = place_tree(host_state, axes["state"] if axes else None,
+                           self.rules) if axes else place_tree(host_state, None, None)
+        start_step = int(meta.get("next_step", manifest["step"] + 1))
+        self._restored_meta = meta
+        self.log(f"[cr] restored checkpoint step={manifest['step']} "
+                 f"-> resuming at {start_step}")
+        return state, meta, start_step
+
+    # ------------------------------------------------------------------
+    def _save_fn(self, step: int, state_fn, extra_meta: dict):
+        def save(label=None):
+            state = state_fn()
+            host = fetch_tree(state)        # quiesce point: device -> host
+            meta = dict(extra_meta)
+            meta["next_step"] = step + 1
+            meta["run_manifest"] = capture_manifest(self.cfg)
+            return self.ckpt.save(label if label is not None else step,
+                                  host, extra_meta=meta)
+        return save
+
+    def checkpoint_now(self, step: int, state_fn, *, reason: str = "manual",
+                       extra_meta: Optional[dict] = None) -> Optional[dict]:
+        if isinstance(self.client, InlineCoordinator):
+            self.client.request(reason)
+        outcome = self.client.service(
+            step, self._save_fn(step, state_fn, extra_meta or {}))
+        if outcome:
+            self.events.append({"step": step, "reason": reason, **outcome})
+        return outcome
+
+    # ------------------------------------------------------------------
+    def exit_reason(self) -> Optional[str]:
+        if self.signal_trap is not None and self.signal_trap.triggered:
+            return f"signal:{self.signal_trap.received}"
+        if getattr(self.client, "exit_requested", False):
+            return f"coordinator:{self.client.exit_reason}"
+        if self.walltime is not None and self.walltime.near_limit():
+            return "walltime"
+        return None
+
+    def step_boundary(self, step: int, state_fn, *,
+                      extra_meta: Optional[dict] = None) -> str:
+        """Returns 'exit' | 'checkpointed' | 'continue'."""
+        reason = self.exit_reason()
+        if reason is not None:
+            self.log(f"[cr] exit condition at step {step}: {reason}")
+            self.checkpoint_now(step, state_fn, reason=reason,
+                                extra_meta=extra_meta)
+            return "exit"
+        if self.client.checkpoint_pending():
+            self.client.service(step, self._save_fn(step, state_fn,
+                                                    extra_meta or {}))
+            return "checkpointed"
+        if self.interval_steps and step > 0 and step % self.interval_steps == 0:
+            self.checkpoint_now(step, state_fn, reason="interval",
+                                extra_meta=extra_meta)
+            return "checkpointed"
+        return "continue"
+
+    # ------------------------------------------------------------------
+    def request_requeue(self, step: int, reason: str = "") -> None:
+        if self.requeue_file is not None and self.walltime is not None:
+            rec = self.requeue_file.save(self.walltime, step, reason=reason)
+            self.log(f"[cr] requeue recorded: {rec}")
+
+    def close(self) -> None:
+        self.ckpt.close()
+        self.client.close()

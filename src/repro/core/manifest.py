@@ -1,0 +1,68 @@
+"""Run manifest — the "container image" of a training run.
+
+The paper embeds DMTCP inside the container image so the restored process sees
+identical libraries and env vars.  We cannot freeze a Python environment from
+inside it, but we can capture and *verify* it: a manifest of library versions,
+relevant env vars, and the config hash is written with every checkpoint; on
+restore a mismatch is surfaced (warn or refuse), catching the
+restored-into-a-different-image failure mode the containers prevent.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import platform
+import sys
+from dataclasses import asdict, is_dataclass
+from typing import Optional
+
+_ENV_KEYS = ("XLA_FLAGS", "JAX_PLATFORMS", "JAX_ENABLE_X64", "LD_LIBRARY_PATH")
+
+
+def config_hash(cfg) -> str:
+    d = asdict(cfg) if is_dataclass(cfg) else dict(cfg)
+    return hashlib.sha256(json.dumps(d, sort_keys=True, default=str).encode()).hexdigest()[:16]
+
+
+def capture_manifest(cfg=None, extra: Optional[dict] = None) -> dict:
+    import jax
+    import numpy as np
+
+    man = {
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "backend": jax.default_backend(),
+        "env": {k: os.environ.get(k, "") for k in _ENV_KEYS},
+    }
+    if cfg is not None:
+        man["config_hash"] = config_hash(cfg)
+        man["config_name"] = getattr(cfg, "name", "?")
+    if extra:
+        man.update(extra)
+    return man
+
+
+class ManifestMismatch(RuntimeError):
+    pass
+
+
+def verify_manifest(saved: dict, *, cfg=None, strict: bool = False,
+                    log=print) -> list[str]:
+    """Compare the saved manifest with the current environment.
+
+    Returns the list of mismatches; raises in strict mode."""
+    current = capture_manifest(cfg)
+    problems = []
+    for key in ("python", "jax", "numpy", "backend"):
+        if key in saved and saved[key] != current[key]:
+            problems.append(f"{key}: saved={saved[key]} current={current[key]}")
+    if cfg is not None and saved.get("config_hash") not in (None, current["config_hash"]):
+        problems.append("config_hash mismatch — model/config changed since checkpoint")
+    for p in problems:
+        log(f"[manifest] {p}")
+    if problems and strict:
+        raise ManifestMismatch("; ".join(problems))
+    return problems

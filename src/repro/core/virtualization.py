@@ -1,0 +1,44 @@
+"""Topology virtualization — elastic (MxN) restart.
+
+DMTCP virtualizes PIDs/fds so a restarted process keeps working on a different
+node.  The framework analogue: checkpoints never record mesh coordinates — a
+leaf is (path, global shape, dtype) and sharding is *re-derived* from the
+logical-axis rules against whatever mesh the restarted job has.  A checkpoint
+taken on (16,16) restores onto (2,16,16), (8,8), or one CPU device unchanged.
+
+``place_tree`` is the single entry point: host pytree -> device pytree laid out
+for the current mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.parallel.mesh_rules import Rules
+
+tree_map = jax.tree_util.tree_map
+
+
+def place_tree(host_tree, axes_tree, rules: Optional[Rules]):
+    """device_put every leaf with the sharding derived from its logical axes.
+
+    ``rules=None`` places on the default device (single-device restore)."""
+    if rules is None:
+        return tree_map(jax.device_put, host_tree)
+
+    flat_h, treedef = jax.tree_util.tree_flatten(host_tree)
+    flat_a = treedef.flatten_up_to(axes_tree)
+    out = []
+    for arr, axes in zip(flat_h, flat_a):
+        arr = np.asarray(arr)
+        sh = rules.sharding(axes, arr.shape)
+        out.append(jax.device_put(arr, sh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def fetch_tree(device_tree):
+    """Device pytree -> host (numpy) pytree; works for any sharding because
+    jax gathers fully-addressable arrays transparently."""
+    return tree_map(lambda x: np.asarray(jax.device_get(x)), device_tree)

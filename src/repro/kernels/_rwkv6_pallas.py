@@ -1,0 +1,99 @@
+"""Pallas TPU kernel for the RWKV6 WKV chunked recurrence.
+
+Same TPU shape as the SSD kernel: grid (B, H, chunks), the (D x D) per-head
+state rides in VMEM scratch across sequential chunk steps.  Within a chunk the
+token-vs-token decay matrix is built from cumulative log-decays and the three
+matmuls (r_dec @ k_dec^T, scores @ v, k_carry^T @ v) hit the MXU.  Decays are
+data-dependent per channel (Finch), so cum-logs are per (token, channel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, st0_ref, y_ref, stout_ref,
+                state_ref, *, nc, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = st0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)              # (Q, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    w = w_ref[0, :, 0, :].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)                       # (D,)
+    state = state_ref[...]                                 # (D, D) k-major
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cw = jnp.cumsum(logw, axis=0)                          # (Q, D) inclusive
+    cw_prev = cw - logw                                    # exclusive
+    r_dec = r * jnp.exp(cw_prev)
+    k_dec = k * jnp.exp(-cw)
+    scores = jax.lax.dot_general(r_dec, k_dec, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(jj < ii, scores, 0.0)               # strictly lower
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (Q,D)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)             # (Q,)
+    y = y + diag[:, None] * v
+    y = y + jax.lax.dot_general(r_dec, state, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    total = jnp.exp(cw[-1])                                # (D,)
+    k_carry = k * jnp.exp(cw[-1][None, :] - cw)            # (Q, D)
+    kv = jax.lax.dot_general(k_carry, v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)      # (D,D)
+    state_ref[...] = state * total[:, None] + kv
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        stout_ref[0, 0] = state_ref[...].astype(stout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state", "interpret"))
+def wkv6_pallas(r, k, v, w, u, *, chunk=128, init_state=None,
+                return_state=False, interpret=False):
+    """Contract identical to kernels/ref.py::wkv6."""
+    B, S, H, D = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    kernel = functools.partial(_wkv_kernel, nc=nc, chunk=chunk)
+    y, stout = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, D), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, D), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, D, D), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, D), r.dtype),
+            jax.ShapeDtypeStruct((B, H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, init_state)
+    if return_state:
+        return y, stout
+    return y

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+One (batch, head) pair per outer grid step; the innermost grid dim walks chunks
+sequentially, carrying the (P x N) SSM state in VMEM scratch — the recurrence
+never leaves the core.  Within a chunk everything is MXU matmuls:
+CB^T (Q x Q), the masked-decay score @ x, and the B^T (w*x) state update.
+A second output (the final state) is written on the last chunk for decode
+handoff / checkpointing of in-flight sequences.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, d_ref, st0_ref,
+                y_ref, stout_ref, state_ref, *, nc, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = st0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)              # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)               # (Q,)
+    Bm = b_ref[0].astype(jnp.float32)                      # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                      # (Q, N)
+    A = -jnp.exp(alog_ref[0].astype(jnp.float32))          # scalar
+    D = d_ref[0].astype(jnp.float32)
+
+    a = dt * A                                             # (Q,)
+    cA = jnp.cumsum(a)                                     # inclusive
+    state = state_ref[...]                                 # (P, N)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(cA[:, None] - cA[None, :])
+    scores = jnp.where(jj <= ii, cb * decay * dt[None, :], 0.0)
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q,P)
+    # incoming-state contribution: exp(cA_i) * C_i @ state^T
+    cst = jax.lax.dot_general(Cm, state, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32) # (Q,P)
+    y = y + cst * jnp.exp(cA)[:, None]
+    y = y + x * D
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state' = state*exp(cA_Q) + sum_j w_j B_j x_j^T  -> (P,N)
+    w = jnp.exp(cA[-1] - cA) * dt                          # (Q,)
+    bx = jax.lax.dot_general(x * w[:, None], Bm, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P,N)
+    state_ref[...] = state * jnp.exp(cA[-1]) + bx
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        stout_ref[0, 0] = state_ref[...].astype(stout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "return_state", "interpret"))
+def ssd_pallas(x, dt, A_log, Bm, Cm, D, *, chunk=128, init_state=None,
+               return_state=False, interpret=False):
+    """Contract identical to kernels/ref.py::ssd."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, chunk=chunk)
+    y, stout = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A_log, Bm, Cm, D, init_state)
+    if return_state:
+        return y, stout
+    return y

@@ -1,0 +1,111 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Decode is memory-bound (every cache byte read once per token), so the kernel's
+job is to stream KV blocks through VMEM at full HBM bandwidth while the online
+softmax rides along in scratch.  All H query heads are processed per grid step
+— the (H x Dq) @ (Dq x block_k) matmul keeps the MXU's 128-lane dimension full
+even at batch 1.  ``kv_len`` masks unwritten cache slots (ring-buffer serving).
+
+Grid: (B, num_kv_blocks) — KV innermost, sequential per core, scratch persists.
+GQA/MLA: per-kv-head q groups are handled by a reshape inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                   *, scale, block_k, num_kv_blocks, G):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = kvlen_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)          # (H, Dq)
+        k = k_ref[0, :, :, :].astype(jnp.float32)          # (bk, Hkv, Dq)
+        v = v_ref[0, :, :, :].astype(jnp.float32)          # (bk, Hkv, Dv)
+        H, Dq = q.shape
+        Hkv = k.shape[1]
+        qg = q.reshape(Hkv, G, Dq)
+        # scores: (Hkv, G, bk)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (Hkv, G, s.shape[-1]), 2)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...].reshape(Hkv, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])                  # (Hkv, G, bk)
+        l_new = l_ref[...].reshape(Hkv, G) * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)            # (Hkv, G, Dv)
+        acc = acc_ref[...].reshape(Hkv, G, -1)
+        acc_ref[...] = (acc * alpha[..., None] + pv).reshape(H, -1)
+        m_ref[...] = m_new.reshape(H)
+        l_ref[...] = l_new.reshape(H)
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def flash_decode(q, k, v, *, kv_len=None, scale=None, block_k=256,
+                 interpret=False):
+    """q: (B,1,H,Dq); k: (B,S,Hkv,Dq); v: (B,S,Hkv,Dv) -> (B,1,H,Dv)."""
+    B, Sq, H, Dq = q.shape
+    assert Sq == 1
+    Skv, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / float(np.sqrt(Dq))
+    scale = float(scale)
+    block_k = min(block_k, Skv)
+    assert Skv % block_k == 0
+    nk = Skv // block_k
+    if kv_len is None:
+        kv_len = Skv
+    kv_len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, num_kv_blocks=nk, G=G)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),         # kv_len scalar
+            pl.BlockSpec((1, 1, H, Dq), lambda b, ki: (b, 0, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, Dq), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1, block_k, Hkv, Dv), lambda b, ki: (b, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H, Dv), lambda b, ki: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dv), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)

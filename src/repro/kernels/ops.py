@@ -1,0 +1,121 @@
+"""Jit-friendly dispatching wrappers over the kernel implementations.
+
+``impl`` selects the backend:
+  auto             small shapes -> naive oracle; long sequences -> blockwise XLA;
+                   decode -> full-cache einsum (the flash-decode data movement)
+  xla              naive oracle
+  xla_chunked      blockwise XLA scan (FLOP-exact causal)
+  pallas           Pallas TPU kernel (compiled; TPU target)
+  pallas_interpret Pallas kernel body interpreted on CPU (validation)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref, xla_attention
+
+_NAIVE_MAX_SEQ = 2048
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_len=None,
+    impl: str = "auto",
+    decode: bool = False,
+    scale=None,
+    q_offset=0,
+) -> jax.Array:
+    Sq = q.shape[1]
+    if impl == "ring" and not (decode or Sq == 1):
+        from repro.kernels.ring_attention import ring_attention
+        from repro.parallel.context import current_mesh
+
+        mesh = current_mesh()
+        if mesh is not None:
+            return ring_attention(q, k, v, mesh=mesh, scale=scale, causal=causal)
+        impl = "auto"  # no mesh context (tests): fall through
+    if impl in ("pallas", "pallas_interpret"):
+        interpret = impl == "pallas_interpret"
+        if decode or Sq == 1:
+            from repro.kernels import decode_attention
+
+            return decode_attention.flash_decode(
+                q, k, v, kv_len=kv_len, scale=scale, interpret=interpret
+            )
+        from repro.kernels import flash_attention
+
+        return flash_attention.flash(
+            q, k, v, causal=causal, scale=scale, interpret=interpret
+        )
+
+    if decode or Sq == 1:
+        # One-token step: a single masked einsum over the cache is already the
+        # minimal data movement (reads each cache byte once).
+        return ref.attention(
+            q, k, v, causal=False, kv_len=kv_len, scale=scale, q_offset=q_offset
+        )
+    if impl == "xla" or (impl == "auto" and Sq <= _NAIVE_MAX_SEQ) or not causal:
+        return ref.attention(
+            q, k, v, causal=causal, kv_len=kv_len, scale=scale, q_offset=q_offset
+        )
+    # long-sequence causal self-attention
+    return xla_attention.causal_blockwise(q, k, v, scale=scale)
+
+
+def ssd(x, dt, A_log, Bm, Cm, D, *, chunk=256, impl="auto", init_state=None,
+        return_state=False):
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import ssd_scan
+
+        return ssd_scan.ssd_chunked(
+            x, dt, A_log, Bm, Cm, D, chunk=chunk,
+            init_state=init_state, return_state=return_state,
+            interpret=(impl == "pallas_interpret"),
+        )
+    if impl == "xla_chunked" or (impl == "auto" and x.shape[1] > 64):
+        from repro.kernels import ssd_scan
+
+        return ssd_scan.ssd_chunked_xla(
+            x, dt, A_log, Bm, Cm, D, chunk=chunk,
+            init_state=init_state, return_state=return_state,
+        )
+    return ref.ssd(x, dt, A_log, Bm, Cm, D, init_state=init_state,
+                   return_state=return_state)
+
+
+def wkv6(r, k, v, w, u, *, impl="auto", init_state=None, return_state=False,
+         chunk=128):
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import rwkv6_scan
+
+        return rwkv6_scan.wkv6_chunked(
+            r, k, v, w, u, chunk=chunk, init_state=init_state,
+            return_state=return_state, interpret=(impl == "pallas_interpret"),
+        )
+    if impl == "xla_chunked" or (impl == "auto" and r.shape[1] > 64):
+        from repro.kernels import rwkv6_scan
+
+        return rwkv6_scan.wkv6_chunked_xla(
+            r, k, v, w, u, chunk=chunk, init_state=init_state,
+            return_state=return_state,
+        )
+    return ref.wkv6(r, k, v, w, u, init_state=init_state, return_state=return_state)
+
+
+def checksum(words: jax.Array, *, impl="auto", block: int = 2048) -> jax.Array:
+    """Digest of a uint32 word stream; input zero-padded to a block multiple so
+    every impl (ref oracle, pallas, pallas_interpret) agrees bit-for-bit."""
+    pad = (-words.shape[0]) % block
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import checksum as ck
+
+        return ck.checksum_pallas(words, block=block,
+                                  interpret=(impl == "pallas_interpret"))
+    return ref.checksum(words)

@@ -1,0 +1,145 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels (interpret mode on CPU, compiled on
+TPU) are validated against, and the small-shape fast path used by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _grouped(q: jax.Array, num_kv_heads: int) -> jax.Array:
+    """(B,S,H,D) -> (B,S,Hkv,G,D) where H = Hkv*G."""
+    B, S, H, D = q.shape
+    G = H // num_kv_heads
+    return q.reshape(B, S, num_kv_heads, G, D)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_len=None,
+    scale=None,
+    q_offset=0,
+) -> jax.Array:
+    """Naive masked attention oracle.
+
+    q: (B,Sq,H,Dq)   k: (B,Skv,Hkv,Dq)   v: (B,Skv,Hkv,Dv)  with H % Hkv == 0.
+    ``kv_len`` (scalar) masks cache positions >= kv_len.  ``q_offset`` shifts the
+    causal diagonal (query i attends keys <= q_offset + i).
+    """
+    B, Sq, H, Dq = q.shape
+    Hkv = k.shape[2]
+    if scale is None:
+        scale = 1.0 / np.sqrt(Dq)
+    qg = _grouped(q, Hkv).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    Skv = k.shape[1]
+    mask = None
+    if causal:
+        qi = jnp.arange(Sq)[:, None] + q_offset
+        ki = jnp.arange(Skv)[None, :]
+        mask = ki <= qi
+    if kv_len is not None:
+        lm = jnp.arange(Skv)[None, :] < kv_len
+        mask = lm if mask is None else (mask & lm)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------------------
+# Mamba2 SSD oracle: sequential recurrence over time.
+# ----------------------------------------------------------------------------------
+
+
+def ssd(x, dt, A_log, Bm, Cm, D, *, init_state=None, return_state=False):
+    """Mamba2 selective-state-space oracle (per-step recurrence).
+
+    x:  (B,S,H,P)   channels grouped into H heads of dim P
+    dt: (B,S,H)     softplus-activated step sizes (already positive)
+    A_log: (H,)     state decay (A = -exp(A_log))
+    Bm: (B,S,N)     input matrix  (single group)
+    Cm: (B,S,N)     output matrix (single group)
+    D:  (H,)        skip
+    state: (B,H,P,N)
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32) * A)            # (B,H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32), bt.astype(jnp.float32), xt.astype(jnp.float32))
+        state = state * decay[..., None, None] + dbx
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
+        return state, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1)                                   # (B,S,H,P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, state
+    return y
+
+
+# ----------------------------------------------------------------------------------
+# RWKV6 WKV oracle: sequential recurrence over time.
+# ----------------------------------------------------------------------------------
+
+
+def wkv6(r, k, v, w, u, *, init_state=None, return_state=False):
+    """RWKV6 recurrence oracle.
+
+    r,k,v: (B,S,H,D)    w: (B,S,H,D) per-step decay in (0,1)    u: (H,D) bonus.
+    state: (B,H,D,D)  maps k-dim -> v-dim.
+    y_t = r_t . (state + u*k_t v_t^T);  state' = diag(w_t) state + k_t v_t^T
+    """
+    B, S, H, D = r.shape
+    if init_state is None:
+        init_state = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = [z.astype(jnp.float32) for z in inp]    # (B,H,D)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        yt = jnp.einsum("bhk,bhkv->bhv", rt, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, yt
+
+    xs = tuple(jnp.moveaxis(z, 1, 0) for z in (r, k, v, w))
+    state, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+    if return_state:
+        return y, state
+    return y
+
+
+# ----------------------------------------------------------------------------------
+# Checkpoint checksum oracle (blocked FNV-style rolling hash over int32 words).
+# ----------------------------------------------------------------------------------
+
+
+def checksum(words: jax.Array) -> jax.Array:
+    """words: (N,) uint32 -> scalar uint32 digest (order-dependent)."""
+    PRIME = jnp.uint32(16777619)
+    idx = jnp.arange(words.shape[0], dtype=jnp.uint32)
+    mixed = (words.astype(jnp.uint32) ^ (idx * PRIME)) * (idx | jnp.uint32(1))
+    return jnp.bitwise_xor.reduce(mixed) + jnp.sum(mixed, dtype=jnp.uint32)

@@ -1,0 +1,96 @@
+"""FLOP-exact blockwise causal attention in pure XLA (lax.scan over visible blocks).
+
+This is the dry-run / CPU execution path for long sequences: memory is bounded by
+one (block_q x block_k) score tile per step, and — unlike a naive masked softmax —
+only *visible* (lower-triangular) blocks are ever computed, so ``cost_analysis``
+FLOPs match the causal-attention roofline instead of double-counting masked work.
+The Pallas flash kernel (kernels/flash_attention.py) is the TPU-target equivalent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def causal_blockwise(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale=None,
+    block_q: int = 1024,
+    block_k: int = 1024,
+) -> jax.Array:
+    """q: (B,Sq,H,Dq)  k: (B,Skv,Hkv,Dq)  v: (B,Skv,Hkv,Dv) ; self-attention (Sq==Skv)."""
+    B, Sq, H, Dq = q.shape
+    Skv, Hkv, Dv = k.shape[1], k.shape[2], v.shape[-1]
+    G = H // Hkv
+    if scale is None:
+        scale = 1.0 / np.sqrt(Dq)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    # pad ragged sequences up to a block multiple; padded keys sit *after* all
+    # real queries on the causal diagonal, so the causal mask hides them.
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    if pq or pk:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        out = causal_blockwise(q, k, v, scale=scale, block_q=block_q,
+                               block_k=block_k)
+        return out[:, :Sq]
+    nq, nk = Sq // block_q, Skv // block_k
+
+    # Enumerate visible (q-block, k-block) pairs in row-major order (j ascending per i)
+    pairs = [
+        (i, j)
+        for i in range(nq)
+        for j in range(nk)
+        if j * block_k <= (i + 1) * block_q - 1
+    ]
+    ii = jnp.array([p[0] for p in pairs], jnp.int32)
+    jj = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    qg = q.reshape(B, Sq, Hkv, G, Dq)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, Dv), jnp.float32)
+    m0 = jnp.full((B, Sq, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+
+    def body(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        qs, ks = i * block_q, j * block_k
+        qb = jax.lax.dynamic_slice_in_dim(qg, qs, block_q, axis=1)   # (B,bq,Hkv,G,Dq)
+        kb = jax.lax.dynamic_slice_in_dim(k, ks, block_k, axis=1)    # (B,bk,Hkv,Dq)
+        vb = jax.lax.dynamic_slice_in_dim(v, ks, block_k, axis=1)    # (B,bk,Hkv,Dv)
+        s = jnp.einsum(
+            "bqkgd,bskd->bqkgs", qb.astype(jnp.float32), kb.astype(jnp.float32)
+        ) * scale                                                     # (B,bq,Hkv,G,bk)
+        qpos = qs + jnp.arange(block_q)
+        kpos = ks + jnp.arange(block_k)
+        mask = kpos[None, :] <= qpos[:, None]                         # (bq,bk)
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+
+        mb = jax.lax.dynamic_slice_in_dim(m, qs, block_q, axis=1)
+        lb = jax.lax.dynamic_slice_in_dim(l, qs, block_q, axis=1)
+        ab = jax.lax.dynamic_slice_in_dim(acc, qs, block_q, axis=1)
+
+        m_new = jnp.maximum(mb, jnp.max(s, axis=-1))
+        # rows with everything masked so far keep m=-inf; guard the exp
+        alpha = jnp.exp(jnp.where(jnp.isinf(mb), -jnp.inf, mb - m_new))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        l_new = lb * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", p, vb.astype(jnp.float32))
+        a_new = ab * alpha[..., None] + pv
+
+        m = jax.lax.dynamic_update_slice_in_dim(m, m_new, qs, axis=1)
+        l = jax.lax.dynamic_update_slice_in_dim(l, l_new, qs, axis=1)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, a_new, qs, axis=1)
+        return (acc, m, l), None
+
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), (ii, jj))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)

@@ -1,0 +1,204 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The first two statements set XLA_FLAGS before ANY jax import — jax locks the
+device count on first init.
+
+For each cell this produces, into results/dryrun/<cell>.json:
+  - compiled memory_analysis (bytes per device: args/outputs/temps/code)
+  - compiled cost_analysis (flops / bytes accessed -- NOTE: scan bodies counted
+    once; launch/hlo_costs.py re-walks the HLO multiplying by known_trip_count)
+  - trip-count-corrected flops / bytes / per-collective bytes
+  - wall compile time
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh pod|multipod|both]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+from repro.parallel.mesh_rules import Rules, batch_logical_axes
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def build_step(cfg, shape, mesh, *, rules=None, impl=None, microbatches=None,
+               moment_dtype=None):
+    """Returns (jitted_fn, args_sds, in_shardings)."""
+    rules = rules or Rules(mesh)
+    kind, args = SP.input_specs(cfg, shape)
+    if kind == "train":
+        from repro.train.step import make_train_step
+
+        oc = adamw.OptConfig(moment_dtype=moment_dtype or (
+            "bfloat16" if cfg.param_dtype == "bfloat16" else "float32"))
+        if moment_dtype:
+            _, args = SP.input_specs(cfg, shape, oc)  # state dtypes follow oc
+        step, st_sh, batch_sh_fn = make_train_step(
+            cfg, mesh, oc, rules=rules, impl=impl,
+            microbatches=microbatches or SP.train_microbatches(cfg))
+        in_sh = (st_sh, batch_sh_fn(args[1]))
+        return step, args, in_sh
+    if kind == "prefill":
+        from repro.serve.engine import make_prefill_step
+
+        step, param_sh, _ = make_prefill_step(
+            cfg, mesh, batch=shape.global_batch, seq_len=shape.seq_len,
+            rules=rules, impl=impl)
+        batch_sh = {
+            k: rules.sharding(batch_logical_axes(args[1])[k], v.shape)
+            for k, v in args[1].items()
+        }
+        return step, args, (param_sh, batch_sh)
+    if kind == "decode":
+        from repro.serve.engine import make_decode_step
+
+        step, param_sh, cache_sh, tok_sh = make_decode_step(
+            cfg, mesh, batch=shape.global_batch, max_seq=shape.seq_len,
+            rules=rules, donate=False, impl=impl)
+        return step, args, (param_sh, cache_sh, tok_sh)
+    raise ValueError(kind)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save: bool = True,
+             hlo_dir=None, tag: str = "", impl=None, microbatches=None,
+             moment_dtype=None, rules_overrides=None, cfg_overrides=None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rules = Rules(mesh, overrides=rules_overrides)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "mesh_shape": list(mesh.devices.shape), "tag": tag,
+                 "variant": {"impl": impl, "microbatches": microbatches,
+                             "moment_dtype": moment_dtype,
+                             "rules_overrides": bool(rules_overrides),
+                             "cfg_overrides": cfg_overrides}}
+    t0 = time.time()
+    try:
+        step, args, in_sh = build_step(cfg, shape, mesh, rules=rules, impl=impl,
+                                       microbatches=microbatches,
+                                       moment_dtype=moment_dtype)
+        # attach shardings to the arg specs so donation aliasing is consistent
+        args = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            args, in_sh)
+        with mesh:
+            lowered = step.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", None),
+            "output_size": getattr(mem, "output_size_in_bytes", None),
+            "temp_size": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+        # trip-count-corrected walk of the optimized HLO
+        from repro.launch.hlo_costs import analyze_hlo_text
+
+        hlo = compiled.as_text()
+        rec["hlo_costs"] = analyze_hlo_text(hlo)
+        suffix = f"__{tag}" if tag else ""
+        if hlo_dir:
+            Path(hlo_dir).mkdir(parents=True, exist_ok=True)
+            (Path(hlo_dir) / f"{arch}__{shape_name}__{mesh_kind}{suffix}.hlo"
+             ).write_text(hlo)
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, don't die
+        suffix = f"__{tag}" if tag else ""
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    if save:
+        out_dir = RESULTS if not tag else RESULTS.parent / "perf"
+        out_dir.mkdir(parents=True, exist_ok=True)
+        out = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+        out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells(mesh_kinds=("pod", "multipod")):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            for mk in mesh_kinds:
+                yield arch, shape.name, mk
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--hlo-dir", default=None)
+    # perf-variant knobs (results land in results/perf/<...>__<tag>.json)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--attn-impl", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--moment-dtype", default=None)
+    ap.add_argument("--cfg-override", action="append", default=[],
+                    help="key=value (value eval'd), e.g. remat=dots")
+    args = ap.parse_args(argv)
+    cfg_overrides = {}
+    for kv in args.cfg_override:
+        k, v = kv.split("=", 1)
+        try:
+            cfg_overrides[k] = eval(v)  # noqa: S307 — operator-supplied
+        except Exception:
+            cfg_overrides[k] = v
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    cells = (
+        list(all_cells(meshes)) if args.all
+        else [(args.arch, args.shape, mk) for mk in meshes]
+    )
+    n_ok = 0
+    for arch, shape, mk in cells:
+        out = RESULTS / f"{arch}__{shape}__{mk}.json"
+        if args.skip_done and out.exists() and json.loads(out.read_text()).get("ok"):
+            n_ok += 1
+            print(f"SKIP {arch} {shape} {mk} (done)")
+            continue
+        rec = run_cell(arch, shape, mk, hlo_dir=args.hlo_dir, tag=args.tag,
+                       impl=args.attn_impl, microbatches=args.microbatches,
+                       moment_dtype=args.moment_dtype,
+                       cfg_overrides=cfg_overrides or None)
+        status = "OK " if rec["ok"] else "FAIL"
+        print(f"{status} {arch:24s} {shape:12s} {mk:8s} "
+              f"compile={rec.get('compile_s', '-')}s "
+              f"{rec.get('error', '')}", flush=True)
+        n_ok += int(rec["ok"])
+    print(f"{n_ok}/{len(cells)} cells ok")
+    return 0 if n_ok == len(cells) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

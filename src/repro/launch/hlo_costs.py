@@ -1,0 +1,425 @@
+"""While-loop-aware cost analysis over optimized HLO text.
+
+``compiled.cost_analysis()`` counts a ``lax.scan`` body ONCE (verified
+empirically — see EXPERIMENTS.md §Roofline), which would understate FLOPs and
+collective bytes by the trip count everywhere this framework scans (layers,
+microbatches, attention blocks).  This module re-walks the optimized HLO:
+
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":"N"}}`` —
+    bodies are charged N times (nested loops multiply).
+  * ``dot``/``convolution`` FLOPs are computed from operand/result shapes.
+  * collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute, incl. async -start forms) are summed per op kind,
+    times the enclosing trip counts.
+  * HBM bytes ≈ Σ (operand + result bytes) of materialized ops (fusion
+    internals excluded — only fusion boundaries touch HBM).
+
+These are per-*device* numbers: post-SPMD HLO shapes are already the local
+shard shapes.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s2": 0.25, "u2": 0.25,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "tuple-select",
+    "get-dimension-size", "domain", "opt-barrier",
+}
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class _Instr:
+    __slots__ = ("name", "type_str", "opcode", "operands", "attrs")
+
+    def __init__(self, name, type_str, opcode, operands, attrs):
+        self.name = name
+        self.type_str = type_str
+        self.opcode = opcode
+        self.operands = operands
+        self.attrs = attrs
+
+
+def _balanced(s: str, i: int) -> int:
+    """Index just past the balanced paren group starting at s[i] == '('."""
+    depth = 0
+    for j in range(i, len(s)):
+        if s[j] == "(":
+            depth += 1
+        elif s[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+    return len(s)
+
+
+def _parse_instr(line: str) -> Optional[_Instr]:
+    line = line.strip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%") or " = " not in line:
+        return None
+    name, rest = line.split(" = ", 1)
+    rest = rest.strip()
+    if rest.startswith("("):
+        end = _balanced(rest, 0)
+        type_str, rest = rest[:end], rest[end:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest = rest[:sp], rest[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)", rest)
+    if not m:
+        return None
+    opcode = m.group(1)
+    i = rest.find("(", m.end())
+    if i < 0:
+        return None
+    end = _balanced(rest, i)
+    operand_str, attrs = rest[i + 1 : end - 1], rest[end:]
+    operands = [o.lstrip("%") for o in _OPERAND_RE.findall(operand_str)]
+    return _Instr(name.strip().lstrip("%"), type_str, opcode, operands, attrs)
+
+
+def _parse_computations(hlo: str) -> tuple[dict, Optional[str], dict]:
+    comps: dict[str, list[_Instr]] = {}
+    roots: dict[str, str] = {}
+    entry = None
+    current = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith(" ") and ("{" in line) and ("(" in line):
+            m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", line.strip())
+            if m:
+                current = m.group(2)
+                comps[current] = []
+                if m.group(1):
+                    entry = current
+            continue
+        if line.strip() == "}":
+            continue
+        if current is None:
+            continue
+        is_root = line.strip().startswith("ROOT ")
+        ins = _parse_instr(line)
+        if ins is not None:
+            comps[current].append(ins)
+            if is_root:
+                roots[current] = ins.name
+    return comps, entry, roots
+
+
+def _dot_flops(ins: _Instr, shapes: dict) -> float:
+    out_dims = _shape_dims(ins.type_str) or []
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    contract = 1
+    if m and ins.operands:
+        lhs = shapes.get(ins.operands[0])
+        if lhs:
+            for idx in m.group(1).split(","):
+                if idx and int(idx) < len(lhs):
+                    contract *= lhs[int(idx)]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(ins: _Instr, shapes: dict) -> float:
+    out_dims = _shape_dims(ins.type_str) or []
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    if len(ins.operands) < 2:
+        return 0.0
+    ker = shapes.get(ins.operands[1]) or []
+    ker_n = 1
+    for d in ker:
+        ker_n *= d
+    # flops ~= 2 * out_elems * (kernel_elems / out_features); crude but rare here
+    of = out_dims[-1] if out_dims else 1
+    return 2.0 * out_n * (ker_n / max(of, 1))
+
+
+def analyze_hlo_text(hlo: str) -> dict:
+    comps, entry, roots = _parse_computations(hlo)
+    if entry is None:
+        for name in comps:
+            if "while" not in name and comps[name]:
+                entry = name
+                break
+    # map computation -> {instr name -> result dims/bytes} for fast lookups
+    shape_tables = {
+        cname: {i.name: _shape_dims(i.type_str) for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    byte_tables = {
+        cname: {i.name: _type_bytes(i.type_str) for i in instrs}
+        for cname, instrs in comps.items()
+    }
+
+    totals = {"flops": 0.0, "bytes": 0.0, "bytes_native": 0.0, "unknown_while": 0}
+    coll = defaultdict(float)
+    coll_corr = defaultdict(float)
+    coll_instances: list[tuple[float, str]] = []
+
+    def walk(cname: str, mult: float, in_fusion: bool, depth: int = 0):
+        if cname not in comps or depth > 64:
+            return
+        shapes = shape_tables[cname]
+        for ins in comps[cname]:
+            op = ins.opcode
+            if op == "while":
+                tm = _TRIP_RE.search(ins.attrs)
+                trip = int(tm.group(1)) if tm else 1
+                if not tm:
+                    totals["unknown_while"] += 1
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+                if body:
+                    walk(body.group(1), mult * trip, in_fusion, depth + 1)
+                if cond:
+                    walk(cond.group(1), mult * trip, in_fusion, depth + 1)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                called = re.search(r"calls=%?([\w.\-]+)", ins.attrs) or re.search(
+                    r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if called:
+                    # recurse for flops/collectives; HBM bytes are charged at the
+                    # fusion boundary by walk_bytes
+                    walk(called.group(1), mult,
+                         in_fusion or op == "fusion", depth + 1)
+                continue
+            if op == "conditional":
+                for mm in re.finditer(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-]+)", ins.attrs):
+                    walk(mm.group(1), mult, in_fusion, depth + 1)
+                continue
+            if op == "dot":
+                totals["flops"] += _dot_flops(ins, shapes) * mult
+            elif op == "convolution":
+                totals["flops"] += _conv_flops(ins, shapes) * mult
+            base = op.replace("-start", "")
+            if base in COLLECTIVES:
+                nbytes = _type_bytes(ins.type_str)
+                if base == "all-gather":
+                    # charge operand (shard) bytes, per instructions
+                    bt = byte_tables[cname]
+                    nbytes = sum(bt.get(o, 0.0) for o in ins.operands)
+                coll[base] += nbytes * mult
+                # CPU-backend artifact: bf16 dots lower as convert->f32 dot, and
+                # SPMD reduces the f32 accumulator; on TPU the wire dtype is
+                # bf16.  Track the corrected (native-dtype) number separately.
+                corr = nbytes
+                if "f32[" in ins.type_str and "dot_general" in ins.attrs:
+                    corr = nbytes / 2.0
+                coll_corr[base] += corr * mult
+                coll_instances.append(
+                    (nbytes * mult, f"{base} {ins.type_str[:70]} x{mult:g}"))
+        return
+
+    # ---- bytes: second pass, boundary-level, slice-aware -------------------
+    # In-place patterns must not charge whole buffers: a dynamic-update-slice
+    # writes |update| bytes, a dynamic-slice/gather reads |result| bytes — XLA
+    # executes scan-carried accumulators in place, so charging the full carry
+    # per iteration overstates HBM traffic by orders of magnitude.
+    _PASSTHRU = ("bitcast", "copy", "reshape", "transpose", "convert")
+
+    def _fusion_io_bytes(ins, cname) -> float:
+        fname_m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        bt = byte_tables[cname]
+        if not fname_m or fname_m.group(1) not in comps:
+            b = _type_bytes(ins.type_str)
+            return b + sum(bt.get(o, 0.0) for o in ins.operands)
+        fname = fname_m.group(1)
+        fcomp = comps[fname]
+        fbt = byte_tables[fname]
+        defs = {fi.name: fi for fi in fcomp}
+        users: dict[str, list] = {}
+        for fi in fcomp:
+            for o in fi.operands:
+                users.setdefault(o, []).append(fi)
+
+        def resolve_param(name, hops=0):
+            """Chase bitcast/copy chains back to a parameter name (or None)."""
+            d = defs.get(name)
+            while d is not None and hops < 8:
+                if d.opcode == "parameter":
+                    return d.name
+                if d.opcode in _PASSTHRU and d.operands:
+                    d = defs.get(d.operands[0])
+                    hops += 1
+                    continue
+                return None
+            return None
+
+        total = 0.0
+        inplace_params: set[str] = set()
+        dus_names: set[str] = set()
+        for fi in fcomp:
+            if fi.opcode in ("dynamic-update-slice", "scatter"):
+                upd = fi.operands[1 if fi.opcode == "dynamic-update-slice" else 2] \
+                    if len(fi.operands) > 1 else None
+                total += 2 * (fbt.get(upd, 0.0) if upd else _type_bytes(fi.type_str))
+                dus_names.add(fi.name)
+                p = resolve_param(fi.operands[0]) if fi.operands else None
+                if p:
+                    inplace_params.add(p)   # buffer is updated in place
+        # inputs
+        for fi in fcomp:
+            if fi.opcode != "parameter" or fi.name in inplace_params:
+                continue
+            us = users.get(fi.name, [])
+            # chase pass-through uses one level (bitcast of param -> slice)
+            eff = []
+            for u in us:
+                if u.opcode in _PASSTHRU:
+                    eff.extend(users.get(u.name, []) or [u])
+                else:
+                    eff.append(u)
+            if eff and all(u.opcode in ("dynamic-slice", "gather", "slice")
+                           for u in eff):
+                total += sum(_type_bytes(u.type_str) for u in eff)
+            else:
+                total += _type_bytes(fi.type_str)
+        # output: skip buffers already counted as in-place DUS writes
+        rname = roots.get(fname)
+        root = defs.get(rname) if rname else (fcomp[-1] if fcomp else None)
+
+        def out_elem_bytes(name):
+            d = defs.get(name)
+            hops = 0
+            while d is not None and d.opcode in _PASSTHRU and d.operands and hops < 8:
+                d = defs.get(d.operands[0])
+                hops += 1
+            if d is not None and d.name in dus_names:
+                return 0.0                       # already charged as slice write
+            return fbt.get(name, 0.0)
+
+        if root is None:
+            total += _type_bytes(ins.type_str)
+        elif root.opcode == "tuple":
+            for o in root.operands:
+                total += out_elem_bytes(o)
+        else:
+            total += out_elem_bytes(root.name)
+        return total
+
+    byte_instances: list[tuple[float, str]] = []
+
+    def _is_convert_only_fusion(ins) -> bool:
+        m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        if not m or m.group(1) not in comps:
+            return False
+        body = [fi for fi in comps[m.group(1)] if fi.opcode != "parameter"]
+        return len(body) == 1 and body[0].opcode == "convert"
+
+    def _charge(nbytes: float, ins, cname: str, mult: float):
+        totals["bytes"] += nbytes * mult
+        # native-dtype (TPU) estimate: bf16 dots don't round-trip through f32
+        # buffers on TPU — halve f32 dot outputs, drop pure convert fusions.
+        native = nbytes
+        if ins.opcode == "fusion" and _is_convert_only_fusion(ins):
+            native = 0.0
+        elif "f32[" in ins.type_str and "dot_general" in ins.attrs:
+            native = nbytes / 2.0
+        totals["bytes_native"] += native * mult
+        if nbytes * mult > 1e9:
+            byte_instances.append(
+                (nbytes * mult,
+                 f"{cname[:24]}/{ins.opcode} {ins.type_str[:60]} x{mult:g}"))
+
+    def walk_bytes(cname: str, mult: float, depth: int = 0):
+        if cname not in comps or depth > 64:
+            return
+        bt = byte_tables[cname]
+        for ins in comps[cname]:
+            op = ins.opcode
+            if op == "while":
+                tm = _TRIP_RE.search(ins.attrs)
+                trip = int(tm.group(1)) if tm else 1
+                body = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+                if body:
+                    walk_bytes(body.group(1), mult * trip, depth + 1)
+                continue
+            if op == "call":
+                called = re.search(r"to_apply=%?([\w.\-]+)", ins.attrs)
+                if called:
+                    walk_bytes(called.group(1), mult, depth + 1)
+                continue
+            if op in _SKIP_BYTES_OPS or op == "conditional":
+                continue
+            if op == "fusion":
+                _charge(_fusion_io_bytes(ins, cname), ins, cname, mult)
+                continue
+            if op in ("dynamic-slice", "slice", "gather"):
+                _charge(2 * _type_bytes(ins.type_str), ins, cname, mult)
+                continue
+            if op == "dynamic-update-slice":
+                upd = ins.operands[1] if len(ins.operands) > 1 else None
+                _charge(2 * bt.get(upd, _type_bytes(ins.type_str)), ins, cname, mult)
+                continue
+            b = _type_bytes(ins.type_str)
+            for o in ins.operands:
+                b += bt.get(o, 0.0)
+            _charge(b, ins, cname, mult)
+
+    if entry:
+        walk(entry, 1.0, False)
+        walk_bytes(entry, 1.0)
+    totals["collectives"] = dict(coll)
+    totals["collective_bytes"] = float(sum(coll.values()))
+    totals["collective_bytes_native"] = float(sum(coll_corr.values()))
+    coll_instances.sort(reverse=True)
+    totals["top_collectives"] = [f"{b:.3e}B {d}" for b, d in coll_instances[:10]]
+    byte_instances.sort(reverse=True)
+    totals["top_bytes"] = [f"{b:.3e}B {d}" for b, d in byte_instances[:12]]
+    return totals
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(json.dumps(analyze_hlo_text(open(sys.argv[1]).read()), indent=1))

@@ -1,0 +1,21 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never touches
+jax device state.  The dry-run sets XLA_FLAGS host-device-count *before* any jax
+import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a (data, model) mesh with model=1."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

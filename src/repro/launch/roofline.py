@@ -1,0 +1,184 @@
+"""Roofline analysis over the dry-run artifacts (TPU v5e targets).
+
+Reads results/dryrun/<arch>__<shape>__<mesh>.json (produced by launch/dryrun.py)
+and derives, per cell:
+
+    compute term    = FLOPs_per_device / 197e12            [s]
+    memory term     = HBM_bytes_per_device / 819e9         [s]
+    collective term = collective_bytes_per_device / 50e9   [s]
+
+FLOPs / bytes / collective bytes come from the trip-count-corrected HLO walk
+(launch/hlo_costs.py) because ``compiled.cost_analysis()`` counts scan bodies
+once.  All quantities are per-device (post-SPMD local shapes), so the "/chips"
+in the assignment's formulas is already applied.
+
+MODEL_FLOPS uses the classic estimator per shape kind (per device):
+    train:   6 * N_active * tokens / chips
+    prefill: 2 * N_active * tokens / chips
+    decode:  2 * N_active * batch  / chips   (one new token per sequence)
+
+useful_fraction = ideal compute time / max(term): the fraction of the
+bottleneck-limited step that would be useful model FLOPs at peak — the score
+§Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int) -> float:
+    from repro.models.model import count_active_params
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = count_active_params(cfg)
+    if shape.kind == "train":
+        total = 6.0 * n * shape.tokens
+    elif shape.kind == "prefill":
+        total = 2.0 * n * shape.tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def decode_min_bytes_per_device(arch: str, shape_name: str, chips: int) -> float:
+    """Decode ideal: every active-param byte + every live cache byte read once
+    per token — the true decode roofline is HBM, not FLOPs."""
+    from repro.models.model import cache_specs, count_active_params
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    pbytes = count_active_params(cfg) * (2 if cfg.param_dtype == "bfloat16" else 4)
+    sds, _ = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    import numpy as np
+
+    cbytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                 for s in __import__("jax").tree_util.tree_leaves(sds)
+                 if hasattr(s, "shape"))
+    return (pbytes + cbytes) / chips
+
+
+def analyze_cell(rec: dict) -> dict:
+    chips = 1
+    for d in rec["mesh_shape"]:
+        chips *= d
+    hc = rec["hlo_costs"]
+    compute_s = hc["flops"] / PEAK_FLOPS
+    # native-dtype estimates (TPU target) preferred; raw CPU-lowering numbers
+    # retained in the record (see hlo_costs.py on the f32-accumulator artifact)
+    memory_s = hc.get("bytes_native", hc["bytes"]) / HBM_BW
+    collective_s = hc.get("collective_bytes_native",
+                          hc["collective_bytes"]) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], chips)
+    if SHAPES[rec["shape"]].kind == "decode":
+        ideal_s = decode_min_bytes_per_device(rec["arch"], rec["shape"], chips) / HBM_BW
+    else:
+        ideal_s = mf / PEAK_FLOPS
+    frac = ideal_s / max(max(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": hc["flops"],
+        "useful_ratio": mf / max(hc["flops"], 1e-30),
+        "useful_fraction": frac,
+        "collectives": hc.get("collectives", {}),
+        "temp_bytes": rec.get("memory", {}).get("temp_size"),
+        "arg_bytes": rec.get("memory", {}).get("argument_size"),
+    }
+
+
+_SUGGEST = {
+    "compute": "cut non-model FLOPs: remat policy (dots_saveable), avoid "
+               "replicated attention (shard heads/seq), fuse MTP/loss work",
+    "memory": "reduce HBM traffic: larger microbatches amortize weight reads, "
+              "bf16 activations, fewer remat recomputes, fuse normalizations",
+    "collective": "reshard: move FSDP all-gathers off the critical path "
+                  "(overlap), 2D-shard params, reduce-scatter grads instead of "
+                  "all-reduce, shrink MoE all-to-all via capacity tuning",
+}
+
+
+def render_table(cells: list[dict], mesh: str = "pod") -> str:
+    rows = [c for c in cells if c["mesh"] == mesh]
+    rows.sort(key=lambda c: (c["arch"], c["shape"]))
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "6ND/HLO | useful frac | what would move the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in rows:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['compute_s']:.3e} | "
+            f"{c['memory_s']:.3e} | {c['collective_s']:.3e} | {c['dominant']} | "
+            f"{c['useful_ratio']:.2f} | {c['useful_fraction']:.3f} | "
+            f"{_SUGGEST[c['dominant']][:60]}… |")
+    return "\n".join(out)
+
+
+def load_cells(dryrun_dir: Path) -> list[dict]:
+    cells = []
+    for f in sorted(dryrun_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("ok") and "hlo_costs" in rec:
+            cells.append(analyze_cell(rec))
+    return cells
+
+
+def reanalyze(dryrun_dir: Path, hlo_dir: Path) -> int:
+    """Re-parse saved HLO dumps with the current cost model (no recompiles)."""
+    from repro.launch.hlo_costs import analyze_hlo_text
+
+    n = 0
+    for f in sorted(dryrun_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        tag = f"__{rec['tag']}" if rec.get("tag") else ""
+        hlo = hlo_dir / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.hlo"
+        if rec.get("ok") and hlo.exists():
+            rec["hlo_costs"] = analyze_hlo_text(hlo.read_text())
+            f.write_text(json.dumps(rec, indent=1))
+            n += 1
+    return n
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default=str(RESULTS / "dryrun"))
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--out", default=str(RESULTS / "roofline.json"))
+    ap.add_argument("--reanalyze-hlo", default=None,
+                    help="re-parse saved HLO dumps with the current cost model")
+    args = ap.parse_args(argv)
+    if args.reanalyze_hlo:
+        n = reanalyze(Path(args.dryrun_dir), Path(args.reanalyze_hlo))
+        print(f"re-analyzed {n} cells from saved HLO")
+    cells = load_cells(Path(args.dryrun_dir))
+    Path(args.out).write_text(json.dumps(cells, indent=1))
+    print(render_table(cells, args.mesh))
+    picks = sorted((c for c in cells if c["mesh"] == args.mesh),
+                   key=lambda c: c["useful_fraction"])
+    if picks:
+        print("\nworst useful_fraction:",
+              [(c["arch"], c["shape"], round(c["useful_fraction"], 4))
+               for c in picks[:3]])
+        coll = sorted((c for c in cells if c["mesh"] == args.mesh),
+                      key=lambda c: -c["collective_s"] /
+                      max(c["compute_s"] + c["memory_s"], 1e-30))
+        print("most collective-bound:",
+              [(c["arch"], c["shape"]) for c in coll[:3]])
+
+
+if __name__ == "__main__":
+    main()

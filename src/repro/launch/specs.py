@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns exactly what the corresponding jitted step is lowered
+with — no device allocation.  Modality frontends are stubs per the assignment:
+llava gets precomputed patch embeddings, musicgen gets codebook token ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, TRAIN_MICROBATCHES
+from repro.models import model as M
+from repro.optim import adamw
+from repro.train.step import abstract_train_state
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    tok_shape = (batch, seq, cfg.num_codebooks) if cfg.num_codebooks else (batch, seq)
+    out = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    if cfg.num_image_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, oc: adamw.OptConfig | None = None):
+    """Returns (kind, args) where args are the SDS positional args of the step."""
+    oc = oc or adamw.OptConfig(moment_dtype=(
+        "bfloat16" if cfg.param_dtype == "bfloat16" else "float32"))
+    if shape.kind == "train":
+        state = abstract_train_state(cfg, oc)
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        return "train", (state, batch)
+    if shape.kind == "prefill":
+        params = M.abstract_params(cfg)
+        batch = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        return "prefill", (params, batch)
+    if shape.kind == "decode":
+        params = M.abstract_params(cfg)
+        cache, _ = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        tok_shape = ((shape.global_batch, cfg.num_codebooks) if cfg.num_codebooks
+                     else (shape.global_batch,))
+        tokens = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+        return "decode", (params, cache, tokens)
+    raise ValueError(shape.kind)
+
+
+def train_microbatches(cfg: ModelConfig) -> int:
+    return TRAIN_MICROBATCHES.get(cfg.name, 1)

@@ -1,0 +1,163 @@
+"""End-to-end training driver with first-class checkpoint-restart.
+
+This is the job script of the paper's Fig. 3, as a framework CLI:
+
+  python -m repro.launch.train --arch qwen2-0.5b --reduced --steps 200 \\
+      --batch 8 --seq 128 --ckpt-dir /tmp/run1 --interval-steps 25 \\
+      --walltime 300 --margin 10
+
+Behaviour:
+  * restores the latest committed checkpoint if one exists (else cold start);
+  * checkpoints every --interval-steps, on trapped SIGTERM/SIGUSR1, and when
+    the walltime margin is reached;
+  * exits with code 85 (REQUEUE_EXIT) when interrupted mid-run so the batch
+    scheduler (sched/slurmsim.py or a real Slurm wrapper) requeues it;
+  * optionally attaches to an external checkpoint coordinator
+    (--coordinator host:port --worker-id N) for multi-worker rounds.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore
+from repro.configs.base import get_config, reduced as reduce_cfg
+from repro.core.cr_manager import CRManager
+from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.core.signals import SignalTrap
+from repro.core.worker import CkptClient, InlineCoordinator
+from repro.data.pipeline import PipelineState, SyntheticTokens
+from repro.launch.mesh import make_host_mesh
+from repro.optim import adamw
+from repro.parallel.mesh_rules import Rules
+from repro.train import step as TS
+
+REQUEUE_EXIT = 85
+
+
+def build_argparser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--ckpt-mode", default="sync", choices=["sync", "async"])
+    ap.add_argument("--ckpt-incremental", action="store_true")
+    ap.add_argument("--ckpt-replicas", type=int, default=1)
+    ap.add_argument("--interval-steps", type=int, default=0)
+    ap.add_argument("--walltime", type=float, default=0.0)
+    ap.add_argument("--margin", type=float, default=5.0)
+    ap.add_argument("--coordinator", default=None, help="host:port")
+    ap.add_argument("--worker-id", type=int, default=0)
+    ap.add_argument("--num-workers", type=int, default=1)
+    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--step-sleep", type=float, default=0.0,
+                    help="artificial per-step delay (benchmark pacing)")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    # trap preemption signals from the very start: a USR1 during jit compile /
+    # restore must checkpoint-and-requeue, not kill the process (default USR1
+    # action is terminate) — the paper's startup-time lesson (Fig. 2) applies
+    # to the C/R loop itself.
+    trap = SignalTrap()
+    trap.__enter__()
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    oc = adamw.OptConfig(lr=args.lr, warmup_steps=10, decay_steps=max(args.steps, 2))
+
+    mesh = make_host_mesh()
+    rules = Rules(mesh)
+    jitted, st_sh, batch_sh_fn = TS.make_train_step(
+        cfg, mesh, oc, microbatches=args.microbatches, rules=rules, donate=False)
+
+    store = TieredStore(Path(args.ckpt_dir))
+    ckpt = CheckpointManager(
+        store, worker_id=args.worker_id, num_workers=args.num_workers,
+        replicas=args.ckpt_replicas, mode=args.ckpt_mode,
+        incremental=args.ckpt_incremental)
+
+    if args.coordinator:
+        host, port = args.coordinator.rsplit(":", 1)
+        client = CkptClient(host, int(port), args.worker_id)
+    else:
+        client = InlineCoordinator(commit_fn=ckpt.commit)
+
+    walltime = None
+    requeue_file = RequeueFile(Path(args.ckpt_dir) / "requeue.json")
+    prior = requeue_file.load()
+    if args.walltime:
+        walltime = WalltimeTracker(args.walltime, args.margin,
+                                   consumed_s=prior.get("consumed_s", 0.0))
+
+    pipe = SyntheticTokens(cfg, args.batch, args.seq, seed=args.seed)
+
+    try:
+        crm = CRManager(ckpt, client=client, signal_trap=trap, walltime=walltime,
+                        requeue_file=requeue_file,
+                        interval_steps=args.interval_steps or None,
+                        cfg=cfg, rules=rules)
+
+        def init_fn():
+            return TS.init_train_state(cfg, oc, jax.random.PRNGKey(args.seed))
+
+        # template for restore: abstract state (host arrays will be placed in)
+        templates = {"state": TS.abstract_train_state(cfg, oc)}
+        axes = {"state": TS.state_logical_axes(cfg)}
+        state, meta, start_step = crm.restore_or_init(init_fn, templates, axes)
+        if meta is not None and "data_state" in meta:
+            pipe.restore(PipelineState.from_dict(meta["data_state"]))
+
+        metrics_log = []
+        exit_code = 0
+        step = start_step
+        for step in range(start_step, args.steps):
+            batch = next(pipe)
+            state, metrics = jitted(state, batch)
+            if args.step_sleep:
+                time.sleep(args.step_sleep)
+            loss = float(metrics["loss"])
+            metrics_log.append({"step": step, "loss": loss,
+                                "t": time.time()})
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step} loss {loss:.4f}", flush=True)
+
+            extra = {"data_state": pipe.state().to_dict()}
+            action = crm.step_boundary(step, lambda: state, extra_meta=extra)
+            if action == "exit":
+                crm.request_requeue(step, reason=crm.exit_reason() or "")
+                print(f"[train] interrupted at step {step} -> requeue", flush=True)
+                exit_code = REQUEUE_EXIT
+                break
+        else:
+            # run completed: final checkpoint so eval/serving can pick it up
+            crm.checkpoint_now(args.steps - 1, lambda: state, reason="final",
+                               extra_meta={"data_state": pipe.state().to_dict(),
+                                           "completed": True})
+            print(f"[train] completed {args.steps} steps", flush=True)
+
+        if args.metrics_out:
+            Path(args.metrics_out).write_text(json.dumps(metrics_log))
+        crm.close()
+    finally:
+        trap.__exit__(None, None, None)
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,176 @@
+"""Attention mixers: MHA/GQA (+qkv-bias, qk_norm) and DeepSeek MLA.
+
+Two execution paths per mixer:
+  * ``*_full``  — train / prefill over a full sequence (causal).
+  * ``*_decode``— one new token against a cache.  MLA decode runs in *absorbed*
+    form (latent-space attention over the compressed KV cache, DeepSeek-style),
+    so the per-head K/V are never materialized over the whole cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, shard_hint
+
+
+# ----------------------------------------------------------------------------------
+# GQA / MHA
+# ----------------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig) -> dict:
+    H, Hkv, D, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.d_model, cfg.head_dim
+    s = {
+        "wq": L.linear_spec(D, H * Dh, "embed", "heads", bias=cfg.qkv_bias),
+        "wk": L.linear_spec(D, Hkv * Dh, "embed", "kv_heads", bias=cfg.qkv_bias),
+        "wv": L.linear_spec(D, Hkv * Dh, "embed", "kv_heads", bias=cfg.qkv_bias),
+        "wo": L.linear_spec(H * Dh, D, "heads", "embed"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = L.rms_norm_spec(Dh)
+        s["k_norm"] = L.rms_norm_spec(Dh)
+    return s
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions, dt):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = L.linear(p["wq"], x, dt).reshape(B, S, H, Dh)
+    k = L.linear(p["wk"], x, dt).reshape(B, S, Hkv, Dh)
+    v = L.linear(p["wv"], x, dt).reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_full(p, cfg: ModelConfig, x, positions, impl=None):
+    """x: (B,S,D) -> (out, kv) ; kv returned for prefill cache construction."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, dt)
+    q = shard_hint(q, ("batch", "seq", "heads_dim", None))
+    k = shard_hint(k, ("batch", "seq", "kv_heads_dim", None))
+    out = ops.attention(q, k, v, causal=True, impl=impl or cfg.attn_impl)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return L.linear(p["wo"], out, dt), (k, v)
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache_k, cache_v, t, impl=None):
+    """One-token decode.  x: (B,1,D); cache_k/v: (B,Smax,Hkv,Dh); t: scalar index."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(t, (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, dt)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), t, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), t, axis=1)
+    out = ops.attention(
+        q, cache_k.astype(dt), cache_v.astype(dt),
+        causal=False, kv_len=t + 1, impl=impl or cfg.attn_impl, decode=True,
+    )
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    return L.linear(p["wo"], out, dt), (cache_k, cache_v)
+
+
+# ----------------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ----------------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.num_heads
+    nope, rope, vdim = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    s: dict = {
+        # KV down-projection: latent c_kv + shared rope key
+        "wkv_a": L.linear_spec(D, cfg.kv_lora_rank + rope, "embed", None),
+        "kv_norm": L.rms_norm_spec(cfg.kv_lora_rank),
+        # up-projections from the latent
+        "wk_b": ParamSpec((cfg.kv_lora_rank, H, nope), (None, "heads_dim", None), "normal"),
+        "wv_b": ParamSpec((cfg.kv_lora_rank, H, vdim), (None, "heads_dim", None), "normal"),
+        "wo": L.linear_spec(H * vdim, D, "heads", "embed"),
+    }
+    if cfg.q_lora_rank:
+        s["wq_a"] = L.linear_spec(D, cfg.q_lora_rank, "embed", None)
+        s["q_norm"] = L.rms_norm_spec(cfg.q_lora_rank)
+        s["wq_b"] = ParamSpec(
+            (cfg.q_lora_rank, H, nope + rope), (None, "heads_dim", None), "normal"
+        )
+    else:
+        s["wq"] = ParamSpec((D, H, nope + rope), ("embed", "heads_dim", None), "normal")
+    return s
+
+
+def _mla_q(p, cfg: ModelConfig, x, positions, dt):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = L.rms_norm(p["q_norm"], L.linear(p["wq_a"], x, dt), cfg.norm_eps)
+        q = jnp.einsum("bsr,rhd->bshd", cq, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsD,Dhd->bshd", x.astype(dt), p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg: ModelConfig, x, positions, dt):
+    kv = L.linear(p["wkv_a"], x, dt)
+    c_kv = L.rms_norm(p["kv_norm"], kv[..., : cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = kv[..., cfg.kv_lora_rank:][:, :, None, :]          # (B,S,1,rope)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope[:, :, 0, :]
+
+
+def mla_full(p, cfg: ModelConfig, x, positions, impl=None):
+    """Naive (expanded) MLA for train/prefill; returns compressed cache."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, dt)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions, dt)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, p["wv_b"].astype(dt))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    out = ops.attention(q, k, v, causal=True, impl=impl or cfg.attn_impl)
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    return L.linear(p["wo"], out, dt), jnp.concatenate([c_kv, k_rope], axis=-1)
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache, t, impl=None):
+    """Absorbed-form decode: attention in the 512-dim latent space.
+
+    cache: (B, Smax, kv_lora_rank + rope_dim) compressed entries.
+    """
+    dt = jnp.dtype(cfg.compute_dtype)
+    B = x.shape[0]
+    H, R = cfg.num_heads, cfg.kv_lora_rank
+    positions = jnp.broadcast_to(t, (B, 1))
+    q_nope, q_rope = _mla_q(p, cfg, x, positions, dt)           # (B,1,H,*)
+    c_new, kr_new = _mla_latent(p, cfg, x, positions, dt)       # (B,1,R), (B,1,rope)
+    entry = jnp.concatenate([c_new, kr_new], axis=-1)
+    cache = jax.lax.dynamic_update_slice_in_dim(cache, entry.astype(cache.dtype), t, axis=1)
+    c_all = cache[..., :R].astype(dt)                           # (B,S,R)
+    kr_all = cache[..., R:].astype(dt)                          # (B,S,rope)
+    # absorb W_uk into q:  q_abs = q_nope @ W_uk  -> latent-space query
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["wk_b"].astype(dt))  # (B,1,H,R)
+    q_cat = jnp.concatenate([q_abs, q_rope], axis=-1)           # (B,1,H,R+rope)
+    k_cat = jnp.concatenate([c_all, kr_all], axis=-1)[:, :, None, :]    # (B,S,1,R+rope)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.qk_head_dim))        # true head-dim scale
+    out_lat = ops.attention(
+        q_cat, k_cat, c_all[:, :, None, :],
+        causal=False, kv_len=t + 1, impl=impl or cfg.attn_impl, decode=True, scale=scale,
+    )                                                            # (B,1,H,R)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, p["wv_b"].astype(dt))
+    out = out.reshape(B, 1, H * cfg.v_head_dim)
+    return L.linear(p["wo"], out, dt), cache

@@ -1,0 +1,241 @@
+"""Per-layer blocks: spec + full-sequence + decode application, per block kind.
+
+Kinds:
+  attn_dense  pre-LN GQA attention + pre-LN SwiGLU
+  attn_moe    pre-LN GQA attention + pre-LN MoE FFN
+  mla_dense   pre-LN MLA attention + pre-LN SwiGLU
+  mla_moe     pre-LN MLA attention + pre-LN MoE FFN (DeepSeek)
+  mamba2      pre-LN Mamba2 mixer (no separate FFN)
+  rwkv6       RWKV6 time-mix + channel-mix (LN-per-submodule)
+  zamba_group ``inner`` Mamba2 layers + one shared-attention invocation
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rwkv as R
+from repro.models import ssm as S
+
+
+# ----------------------------------------------------------------------------------
+# Specs
+# ----------------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, kind: str) -> dict:
+    D = cfg.d_model
+    if kind in ("attn_dense", "attn_moe", "mla_dense", "mla_moe"):
+        s = {
+            "ln1": L.rms_norm_spec(D),
+            "ln2": L.rms_norm_spec(D),
+            "attn": A.mla_spec(cfg) if kind.startswith("mla") else A.gqa_spec(cfg),
+        }
+        if kind.endswith("moe"):
+            s["ffn"] = M.moe_spec(cfg)
+        else:
+            s["ffn"] = L.swiglu_spec(D, cfg.d_ff)
+        return s
+    if kind == "mamba2":
+        return {"ln1": L.rms_norm_spec(D), "mixer": S.mamba2_spec(cfg)}
+    if kind == "rwkv6":
+        return {
+            "ln1": L.rms_norm_spec(D),
+            "ln2": L.rms_norm_spec(D),
+            "tmix": R.time_mix_spec(cfg),
+            "cmix": R.channel_mix_spec(cfg),
+        }
+    if kind == "zamba_group":
+        inner = cfg.shared_attn_period
+        return {
+            "mamba": stacked(block_spec(cfg, "mamba2"), inner),
+            "shared_in": L.linear_spec(2 * D, D, "embed", "embed"),
+        }
+    raise ValueError(kind)
+
+
+def shared_attn_spec(cfg: ModelConfig) -> dict:
+    """The zamba2 shared transformer block (weights reused across invocations)."""
+    return block_spec(cfg, "attn_dense")
+
+
+def stacked(specs, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: L.ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs,
+        is_leaf=lambda x: isinstance(x, L.ParamSpec),
+    )
+
+
+# ----------------------------------------------------------------------------------
+# Cache specs: (shape, dtype, logical_axes) descriptors per kind
+# ----------------------------------------------------------------------------------
+
+
+def cache_entry_spec(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> dict:
+    dt = jnp.dtype(cfg.compute_dtype)
+    if kind in ("attn_dense", "attn_moe"):
+        shp = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        ax = ("batch", "cache_seq", "kv_heads_dim", None)
+        return {"k": (shp, dt, ax), "v": (shp, dt, ax)}
+    if kind in ("mla_dense", "mla_moe"):
+        shp = (batch, max_seq, cfg.mla_cache_dim)
+        return {"ckv": (shp, dt, ("batch", "cache_seq", None))}
+    if kind == "mamba2":
+        E, N, H, P, W = S._dims(cfg)
+        return {
+            "conv": ((batch, W - 1, E + 2 * N), dt, ("batch", None, "ssm_inner")),
+            "ssm": ((batch, H, P, N), jnp.float32, ("batch", "ssm_heads_dim", None, None)),
+        }
+    if kind == "rwkv6":
+        D, H, Dh = R._dims(cfg)
+        return {
+            "xt": ((batch, D), dt, ("batch", None)),
+            "xc": ((batch, D), dt, ("batch", None)),
+            "wkv": ((batch, H, Dh, Dh), jnp.float32, ("batch", "ssm_heads_dim", None, None)),
+        }
+    if kind == "zamba_group":
+        inner = cfg.shared_attn_period
+        mamba = cache_entry_spec(cfg, "mamba2", batch, max_seq)
+        mamba = {
+            k: ((inner,) + shp, d, ("layers",) + ax) for k, (shp, d, ax) in mamba.items()
+        }
+        kvshape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+        kvax = ("batch", "cache_seq", "kv_heads_dim", None)
+        return {"mamba": mamba, "shared_k": (kvshape, dt, kvax), "shared_v": (kvshape, dt, kvax)}
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------------
+# Full-sequence application (train / prefill)
+# ----------------------------------------------------------------------------------
+
+
+def block_full(kind, p, cfg: ModelConfig, h, positions, *, moe_groups=16,
+               want_cache=False, emb0=None, shared_p=None, impl=None):
+    """Returns (h, cache_entry | None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn_dense", "attn_moe", "mla_dense", "mla_moe"):
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        if kind.startswith("mla"):
+            attn_out, kv = A.mla_full(p["attn"], cfg, xn, positions, impl=impl)
+            if want_cache:
+                cache = {"ckv": kv}
+        else:
+            attn_out, (k, v) = A.gqa_full(p["attn"], cfg, xn, positions, impl=impl)
+            if want_cache:
+                cache = {"k": k, "v": v}
+        h = h + attn_out
+        xn = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+        if kind.endswith("moe"):
+            ffn_out, aux = M.moe_ffn(p["ffn"], cfg, xn, moe_groups)
+        else:
+            ffn_out = L.swiglu(p["ffn"], xn, jnp.dtype(cfg.compute_dtype))
+        h = h + ffn_out
+        return h, cache, aux
+
+    if kind == "mamba2":
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        out, state = S.mamba2_full(p["mixer"], cfg, xn, want_state=want_cache, impl=impl)
+        if want_cache:
+            cache = {"conv": state[0], "ssm": state[1]}
+        return h + out, cache, aux
+
+    if kind == "rwkv6":
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        out, st = R.time_mix_full(p["tmix"], cfg, xn, want_state=want_cache, impl=impl)
+        h = h + out
+        xn2 = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+        if want_cache:
+            cm_out, xc = R.channel_mix(p["cmix"], cfg, xn2, want_state=True)
+            cache = {"xt": st[0], "xc": xc, "wkv": st[1]}
+        else:
+            cm_out = R.channel_mix(p["cmix"], cfg, xn2)
+        return h + cm_out, cache, aux
+
+    if kind == "zamba_group":
+        inner = cfg.shared_attn_period
+        mcaches = []
+        for i in range(inner):
+            pi = jax.tree_util.tree_map(lambda x: x[i], p["mamba"])
+            h, ci, _ = block_full("mamba2", pi, cfg, h, positions,
+                                  want_cache=want_cache, impl=impl)
+            if want_cache:
+                mcaches.append(ci)
+        # shared attention invocation on concat(h, embedding stream)
+        x_in = L.linear(p["shared_in"],
+                        jnp.concatenate([h, emb0.astype(h.dtype)], axis=-1),
+                        jnp.dtype(cfg.compute_dtype))
+        hs, scache, _ = block_full("attn_dense", shared_p, cfg, x_in, positions,
+                                   want_cache=want_cache, impl=impl)
+        h = h + hs
+        if want_cache:
+            mstack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *mcaches)
+            cache = {"mamba": mstack, "shared_k": scache["k"], "shared_v": scache["v"]}
+        return h, cache, aux
+
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------------------------
+# Decode application (one token)
+# ----------------------------------------------------------------------------------
+
+
+def block_decode(kind, p, cfg: ModelConfig, h, cache, t, *, emb0=None,
+                 shared_p=None, impl=None):
+    """Returns (h, cache)."""
+    if kind in ("attn_dense", "attn_moe", "mla_dense", "mla_moe"):
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        if kind.startswith("mla"):
+            attn_out, ckv = A.mla_decode(p["attn"], cfg, xn, cache["ckv"], t, impl=impl)
+            cache = {"ckv": ckv}
+        else:
+            attn_out, (k, v) = A.gqa_decode(p["attn"], cfg, xn, cache["k"],
+                                            cache["v"], t, impl=impl)
+            cache = {"k": k, "v": v}
+        h = h + attn_out
+        xn = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+        if kind.endswith("moe"):
+            ffn_out, _ = M.moe_ffn(p["ffn"], cfg, xn, moe_groups=1)
+        else:
+            ffn_out = L.swiglu(p["ffn"], xn, jnp.dtype(cfg.compute_dtype))
+        return h + ffn_out, cache
+
+    if kind == "mamba2":
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        out, (conv, ssm) = S.mamba2_decode(p["mixer"], cfg, xn, cache["conv"], cache["ssm"])
+        return h + out, {"conv": conv, "ssm": ssm}
+
+    if kind == "rwkv6":
+        xn = L.rms_norm(p["ln1"], h, cfg.norm_eps)
+        out, (xt, wkv) = R.time_mix_decode(p["tmix"], cfg, xn, cache["xt"], cache["wkv"])
+        h = h + out
+        xn2 = L.rms_norm(p["ln2"], h, cfg.norm_eps)
+        cm_out, xc = R.channel_mix(p["cmix"], cfg, xn2, x_prev0=cache["xc"], want_state=True)
+        return h + cm_out, {"xt": xt, "xc": xc, "wkv": wkv}
+
+    if kind == "zamba_group":
+        inner = cfg.shared_attn_period
+        new_m = []
+        for i in range(inner):
+            pi = jax.tree_util.tree_map(lambda x: x[i], p["mamba"])
+            ci = jax.tree_util.tree_map(lambda x: x[i], cache["mamba"])
+            h, ci = block_decode("mamba2", pi, cfg, h, ci, t, impl=impl)
+            new_m.append(ci)
+        x_in = L.linear(p["shared_in"],
+                        jnp.concatenate([h, emb0.astype(h.dtype)], axis=-1),
+                        jnp.dtype(cfg.compute_dtype))
+        hs, skv = block_decode("attn_dense", shared_p, cfg, x_in,
+                               {"k": cache["shared_k"], "v": cache["shared_v"]}, t,
+                               impl=impl)
+        h = h + hs
+        mstack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_m)
+        return h, {"mamba": mstack, "shared_k": skv["k"], "shared_v": skv["v"]}
+
+    raise ValueError(kind)

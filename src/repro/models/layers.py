@@ -1,0 +1,219 @@
+"""Parameter-spec system + basic layers (pure JAX; no flax).
+
+Every parameter is declared once as a :class:`ParamSpec` carrying its shape, its
+*logical axes* (used by ``repro.parallel`` to derive NamedShardings), and its
+initializer.  ``materialize`` turns a spec tree into a param tree; ``logical_axes``
+extracts the matching axis tree.  Model code is plain functions over param dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextvars import ContextVar
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.tree import path_str
+
+# ----------------------------------------------------------------------------------
+# Param specs
+# ----------------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple              # logical axis name (or None) per dim; len == len(shape)
+    init: str = "normal"     # normal | zeros | ones | embed | small | ssm_a | decay
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, shape) * 0.02 * spec.scale).astype(dtype)
+    if spec.init == "small":
+        return (jax.random.normal(key, shape) * 0.02 * spec.scale).astype(dtype)
+    if spec.init == "ssm_a":  # mamba2 A_log: log of Uniform[1, 16]
+        u = jax.random.uniform(key, shape, minval=1.0, maxval=16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "decay":  # rwkv decay base, negative-ish
+        return (jax.random.normal(key, shape) * 0.5 - 1.0).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def materialize(specs, key: jax.Array, dtype=jnp.float32):
+    """Spec tree -> param tree.  Each leaf gets a key folded from its path hash.
+
+    crc32, NOT python hash(): hash() is salted per process and would make init
+    non-reproducible across restarts (bit-identity under C/R requires process-
+    independent initialization)."""
+    import zlib
+
+    def make(path, spec):
+        leaf_key = jax.random.fold_in(key, zlib.crc32(path_str(path).encode()) % (2**31))
+        return _init_leaf(leaf_key, spec, dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        make, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """Spec tree -> ShapeDtypeStruct tree (for dry-run lowering, no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes(specs):
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+# ----------------------------------------------------------------------------------
+# Activation sharding hints.  The train/serve step factory installs a resolver
+# (logical axes tuple -> jax.sharding.Sharding | None); the model calls shard_hint.
+# ----------------------------------------------------------------------------------
+_SHARD_RESOLVER: ContextVar[Optional[Callable]] = ContextVar("shard_resolver", default=None)
+
+
+class use_shard_resolver:
+    def __init__(self, resolver):
+        self.resolver = resolver
+        self._tok = None
+
+    def __enter__(self):
+        self._tok = _SHARD_RESOLVER.set(self.resolver)
+        return self
+
+    def __exit__(self, *exc):
+        _SHARD_RESOLVER.reset(self._tok)
+
+
+def shard_hint(x: jax.Array, axes: tuple) -> jax.Array:
+    resolver = _SHARD_RESOLVER.get()
+    if resolver is None:
+        return x
+    sharding = resolver(axes, x.shape)
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ----------------------------------------------------------------------------------
+# Layers
+# ----------------------------------------------------------------------------------
+
+
+def rms_norm_spec(dim: int) -> dict:
+    return {"scale": ParamSpec((dim,), (None,), "ones")}
+
+
+def rms_norm(p, x, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x, num_groups: int, eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the last dim (used by RWKV6 wkv output)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    g = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(g, axis=-1, keepdims=True)
+    var = jnp.var(g, axis=-1, keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + eps)
+    return g.reshape(*lead, d).astype(dt)
+
+
+def linear_spec(d_in: int, d_out: int, in_ax, out_ax, bias: bool = False,
+                init: str = "normal", scale: float = 1.0) -> dict:
+    s = {"w": ParamSpec((d_in, d_out), (in_ax, out_ax), init, scale)}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (out_ax,), "zeros")
+    return s
+
+
+def linear(p, x, compute_dtype=None) -> jax.Array:
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def swiglu_spec(d_model: int, d_ff: int, in_ax="embed", mid_ax="mlp") -> dict:
+    return {
+        "gate": linear_spec(d_model, d_ff, in_ax, mid_ax),
+        "up": linear_spec(d_model, d_ff, in_ax, mid_ax),
+        "down": linear_spec(d_ff, d_model, mid_ax, in_ax),
+    }
+
+
+def swiglu(p, x, compute_dtype=None) -> jax.Array:
+    g = linear(p["gate"], x, compute_dtype)
+    u = linear(p["up"], x, compute_dtype)
+    h = jax.nn.silu(g) * u
+    h = shard_hint(h, ("batch", "seq", "mlp"))
+    return linear(p["down"], h, compute_dtype)
+
+
+def embedding_spec(vocab: int, dim: int) -> dict:
+    return {"table": ParamSpec((vocab, dim), ("vocab", "embed"), "embed")}
+
+
+def embed(p, ids, compute_dtype=None) -> jax.Array:
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(p, x) -> jax.Array:
+    """Logits in fp32 for loss stability."""
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+
+
+# ----------------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dt = x.dtype
+    head_dim = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(head_dim, theta), jnp.float32)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)

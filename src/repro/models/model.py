@@ -1,0 +1,408 @@
+"""LM assembly: param specs, forward, loss, prefill, decode — for all 10 archs.
+
+Layers are grouped into homogeneous *segments* (same block kind) and scanned with
+``lax.scan`` + optional remat, so compile time and HLO size stay bounded at 61
+layers.  Heterogeneous archs (deepseek first-dense, zamba2 shared-attn groups)
+become multiple segments.  Caches mirror the segment structure, stacked on a
+leading layer dim, and are scanned through during decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks as BL
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, shard_hint
+
+tree_map = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str
+    count: int
+
+
+def layer_plan(cfg: ModelConfig) -> list[Segment]:
+    if cfg.mixer == "rwkv6":
+        return [Segment("rwkv6", cfg.num_layers)]
+    if cfg.mixer == "mamba2":
+        if cfg.shared_attn_period:
+            inner = cfg.shared_attn_period
+            groups = cfg.num_layers // inner
+            tail = cfg.num_layers - groups * inner
+            plan = [Segment("zamba_group", groups)]
+            if tail:
+                plan.append(Segment("mamba2", tail))
+            return plan
+        return [Segment("mamba2", cfg.num_layers)]
+    base = "mla" if cfg.mixer == "mla" else "attn"
+    if cfg.num_experts:
+        plan = []
+        if cfg.first_dense_layers:
+            plan.append(Segment(f"{base}_dense", cfg.first_dense_layers))
+        plan.append(Segment(f"{base}_moe", cfg.num_layers - cfg.first_dense_layers))
+        return plan
+    return [Segment(f"{base}_dense", cfg.num_layers)]
+
+
+# ----------------------------------------------------------------------------------
+# Param specs
+# ----------------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_size
+    specs: dict[str, Any] = {}
+    if cfg.num_codebooks:
+        specs["embed"] = {
+            "table": ParamSpec((cfg.num_codebooks, V, D), (None, "vocab", "embed"), "embed")
+        }
+    else:
+        specs["embed"] = L.embedding_spec(V, D)
+    if cfg.mixer == "rwkv6":
+        specs["ln0"] = L.rms_norm_spec(D)
+    for i, seg in enumerate(layer_plan(cfg)):
+        specs[f"seg{i}"] = BL.stacked(BL.block_spec(cfg, seg.kind), seg.count)
+    if cfg.shared_attn_period:
+        specs["shared_attn"] = BL.shared_attn_spec(cfg)
+    specs["final_norm"] = L.rms_norm_spec(D)
+    if not cfg.tie_embeddings:
+        if cfg.num_codebooks:
+            specs["head"] = ParamSpec((cfg.num_codebooks, D, V), (None, "embed", "vocab"), "normal")
+        else:
+            specs["head"] = ParamSpec((D, V), ("embed", "vocab"), "normal")
+    if cfg.mtp_depth:
+        specs["mtp"] = {
+            "proj": L.linear_spec(2 * D, D, "embed", "embed"),
+            "block": BL.block_spec(cfg, "mla_dense" if cfg.mixer == "mla" else "attn_dense"),
+            "norm": L.rms_norm_spec(D),
+        }
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return L.materialize(param_specs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return L.abstract_params(param_specs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_logical_axes(cfg: ModelConfig):
+    return L.logical_axes(param_specs(cfg))
+
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree_util.tree_leaves(
+            param_specs(cfg), is_leaf=lambda x: isinstance(x, ParamSpec)
+        )
+    )
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Per-token active params (MoE: top-k + shared experts only)."""
+    total = count_params_analytic(cfg)
+    if not cfg.num_experts:
+        return total
+    D, F, E, K = cfg.d_model, cfg.moe_d_ff, cfg.num_experts, cfg.num_experts_per_tok
+    moe_layers = cfg.num_layers - cfg.first_dense_layers
+    per_expert = 3 * D * F
+    total -= moe_layers * E * per_expert          # remove all routed experts
+    total += moe_layers * K * per_expert          # add back the active ones
+    return total
+
+
+# ----------------------------------------------------------------------------------
+# Embedding / head
+# ----------------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    if cfg.num_codebooks:
+        # tokens: (B,S,K); sum the K codebook embeddings
+        tabs = params["embed"]["table"].astype(dt)          # (K,V,D)
+        h = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), dt)
+        for k in range(cfg.num_codebooks):
+            h = h + jnp.take(tabs[k], tokens[..., k], axis=0)
+    else:
+        h = L.embed(params["embed"], tokens, dt)
+    if cfg.num_image_tokens and "image_embeds" in batch:
+        n = cfg.num_image_tokens
+        img = batch["image_embeds"].astype(dt)              # (B,n,D)
+        h = jnp.concatenate([img, h[:, n:]], axis=1)
+    if cfg.mixer == "rwkv6":
+        h = L.rms_norm(params["ln0"], h, cfg.norm_eps)
+    return h
+
+
+def logits_fn(params, cfg: ModelConfig, h: jax.Array) -> jax.Array:
+    """h: (B,C,D) -> fp32 logits (B,C,V) or (B,C,K,V)."""
+    hf = h.astype(jnp.float32)
+    if cfg.num_codebooks:
+        if cfg.tie_embeddings:
+            tabs = params["embed"]["table"].astype(jnp.float32)
+            return jnp.einsum("bcd,kvd->bckv", hf, tabs)
+        return jnp.einsum("bcd,kdv->bckv", hf, params["head"].astype(jnp.float32))
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], h)
+    return hf @ params["head"].astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------------------
+# Forward (full sequence)
+# ----------------------------------------------------------------------------------
+
+
+def _remat_wrap(fn, cfg: ModelConfig, enable: bool):
+    if not enable or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_segment_full(seg: Segment, seg_params, cfg: ModelConfig, h, positions, *,
+                      moe_groups, want_cache, emb0, shared_p, impl, remat):
+    def body(carry, xs):
+        hh, aux = carry
+        p = xs
+        hh, cache, a = BL.block_full(
+            seg.kind, p, cfg, hh, positions, moe_groups=moe_groups,
+            want_cache=want_cache, emb0=emb0, shared_p=shared_p, impl=impl,
+        )
+        return (hh, aux + a), cache
+
+    body = _remat_wrap(body, cfg, remat)
+    if cfg.scan_layers and seg.count > 1:
+        (h, aux), caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), seg_params)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for i in range(seg.count):
+            pi = tree_map(lambda x: x[i], seg_params)
+            (h, aux), c = body((h, aux), pi)
+            caches.append(c)
+        if want_cache:
+            caches = tree_map(lambda *xs: jnp.stack(xs), *caches)
+        else:
+            caches = None
+    return h, caches, aux
+
+
+def forward_full(params, cfg: ModelConfig, batch: dict, *, want_cache=False,
+                 moe_groups=16, impl=None, remat=True):
+    """Returns (h_final, caches per segment | None, aux_loss)."""
+    h = embed_inputs(params, cfg, batch)
+    h = shard_hint(h, ("batch", "seq", "embed"))
+    B, S, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    emb0 = h if cfg.shared_attn_period else None
+    shared_p = params.get("shared_attn")
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for i, seg in enumerate(layer_plan(cfg)):
+        h, c, a = _run_segment_full(
+            seg, params[f"seg{i}"], cfg, h, positions, moe_groups=moe_groups,
+            want_cache=want_cache, emb0=emb0, shared_p=shared_p, impl=impl,
+            remat=remat,
+        )
+        aux = aux + a
+        caches.append(c)
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    return h, (caches if want_cache else None), aux
+
+
+# ----------------------------------------------------------------------------------
+# Loss (chunked over sequence so fp32 logits never materialize at (B,S,V))
+# ----------------------------------------------------------------------------------
+
+
+def _ce_from_logits(logits, labels, mask):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    zl = jnp.square(lse) * mask
+    return jnp.sum(ce), jnp.sum(zl)
+
+
+def chunked_ce(params, cfg: ModelConfig, h, labels, mask, chunk: int = 1024):
+    """h: (B,S,D); labels: (B,S[,K]); mask: (B,S) fp32. Returns (ce_sum, z_sum, n)."""
+    B, S, _ = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    def body(carry, xs):
+        hc, lc, mc = xs
+
+        def compute(hc, lc, mc):
+            logits = logits_fn(params, cfg, hc)
+            if cfg.num_codebooks:
+                mce, mz = 0.0, 0.0
+                for k in range(cfg.num_codebooks):
+                    c, z = _ce_from_logits(logits[:, :, k], lc[..., k], mc)
+                    mce, mz = mce + c, mz + z
+                return mce / cfg.num_codebooks, mz / cfg.num_codebooks
+            return _ce_from_logits(logits, lc, mc)
+
+        ce, z = jax.checkpoint(compute)(hc, lc, mc)
+        ce_s, z_s = carry
+        return (ce_s + ce, z_s + z), None
+
+    hs = h.reshape(B, nc, chunk, -1).swapaxes(0, 1)
+    if cfg.num_codebooks:
+        ls = labels.reshape(B, nc, chunk, -1).swapaxes(0, 1)
+    else:
+        ls = labels.reshape(B, nc, chunk).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, chunk).swapaxes(0, 1)
+    (ce, z), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hs, ls, ms))
+    return ce, z, jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _shift_labels(cfg: ModelConfig, batch: dict):
+    tokens = batch["tokens"]
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    B, S = tokens.shape[:2]
+    mask = jnp.ones((B, S), jnp.float32).at[:, -1].set(0.0)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"].astype(jnp.float32)
+    if cfg.num_image_tokens:
+        pos_ok = jnp.arange(S) >= max(cfg.num_image_tokens - 1, 0)
+        mask = mask * pos_ok[None].astype(jnp.float32)
+    return labels, mask
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, moe_groups=16, impl=None,
+            z_loss: float = 1e-4):
+    h, _, aux = forward_full(params, cfg, batch, moe_groups=moe_groups, impl=impl)
+    labels, mask = _shift_labels(cfg, batch)
+    ce, z, n = chunked_ce(params, cfg, h, labels, mask)
+    loss = ce / n + z_loss * z / n + aux
+    metrics = {"ce": ce / n, "aux": aux, "tokens": n}
+
+    if cfg.mtp_depth and not cfg.num_codebooks:
+        tokens = batch["tokens"]
+        dt = jnp.dtype(cfg.compute_dtype)
+        emb_next = L.embed(params["embed"], tokens, dt)
+        x = jnp.concatenate(
+            [h[:, :-1], emb_next[:, 1:]], axis=-1)
+        x = L.linear(params["mtp"]["proj"], x, dt)
+        B, S1, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(S1)[None], (B, S1))
+        kind = "mla_dense" if cfg.mixer == "mla" else "attn_dense"
+        x, _, _ = BL.block_full(kind, params["mtp"]["block"], cfg, x, pos, impl=impl)
+        x = L.rms_norm(params["mtp"]["norm"], x, cfg.norm_eps)
+        # predict token t+2 at position t: labels shifted by 2
+        mtp_labels = jnp.concatenate([tokens[:, 2:], tokens[:, -2:]], axis=1)[:, :S1]
+        mtp_mask = jnp.ones((B, S1), jnp.float32).at[:, -2:].set(0.0) * mask[:, :S1]
+        ce2, _, n2 = chunked_ce(params, cfg, x, mtp_labels, mtp_mask)
+        loss = loss + 0.3 * ce2 / n2
+        metrics["mtp_ce"] = ce2 / n2
+
+    return loss, metrics
+
+
+# ----------------------------------------------------------------------------------
+# Decode / prefill
+# ----------------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Returns ({path: (ShapeDtypeStruct)}, matching logical-axes tree)."""
+    sds, axes = {}, {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        entry = BL.cache_entry_spec(cfg, seg.kind, batch, max_seq)
+
+        def expand(e):
+            out_s, out_a = {}, {}
+            for k, v in e.items():
+                if isinstance(v, dict):
+                    out_s[k], out_a[k] = expand(v)
+                else:
+                    shp, dt, ax = v
+                    out_s[k] = jax.ShapeDtypeStruct((seg.count,) + shp, dt)
+                    out_a[k] = ("layers",) + ax
+            return out_s, out_a
+
+        sds[f"seg{i}"], axes[f"seg{i}"] = expand(entry)
+    sds["t"] = jax.ShapeDtypeStruct((), jnp.int32)
+    axes["t"] = ()
+    return sds, axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    sds, _ = cache_specs(cfg, batch, max_seq)
+    return tree_map(lambda s: jnp.zeros(s.shape, s.dtype), sds)
+
+
+def decode_step(params, cfg: ModelConfig, tokens_new, cache, *, impl=None):
+    """tokens_new: (B,) or (B,K). Returns (fp32 logits (B,V)|(B,K,V), new cache)."""
+    t = cache["t"]
+    batch = {"tokens": tokens_new[:, None]}
+    h = embed_inputs(params, cfg, batch)
+    emb0 = h if cfg.shared_attn_period else None
+    shared_p = params.get("shared_attn")
+    new_cache: dict[str, Any] = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        seg_p = params[f"seg{i}"]
+        seg_c = cache[f"seg{i}"]
+
+        def body(h, xs):
+            p, c = xs
+            h, c = BL.block_decode(seg.kind, p, cfg, h, c, t, emb0=emb0,
+                                   shared_p=shared_p, impl=impl)
+            return h, c
+
+        if cfg.scan_layers and seg.count > 1:
+            h, new_c = jax.lax.scan(body, h, (seg_p, seg_c))
+        else:
+            cs = []
+            for j in range(seg.count):
+                pj = tree_map(lambda x: x[j], seg_p)
+                cj = tree_map(lambda x: x[j], seg_c)
+                h, cj = body(h, (pj, cj))
+                cs.append(cj)
+            new_c = tree_map(lambda *xs: jnp.stack(xs), *cs)
+        new_cache[f"seg{i}"] = new_c
+    h = L.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = logits_fn(params, cfg, h)[:, 0]
+    new_cache["t"] = t + 1
+    return logits, new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_seq: int, *, impl=None,
+            moe_groups=16):
+    """Full-sequence prefill; returns (last-position logits, cache of len max_seq)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape[:2]
+    h, caches, _ = forward_full(params, cfg, batch, want_cache=True,
+                                moe_groups=moe_groups, impl=impl, remat=False)
+    full = init_cache(cfg, B, max_seq)
+
+    def place(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        # sequence-indexed buffers: pad the prefill entries into [0:S]
+        idx = dst.ndim - src.ndim  # 0
+        start = (0,) * dst.ndim
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+    for i, seg in enumerate(layer_plan(cfg)):
+        full[f"seg{i}"] = tree_map(place, full[f"seg{i}"], caches[i])
+    full["t"] = jnp.asarray(S, jnp.int32)
+    logits = logits_fn(params, cfg, h[:, -1:])[:, 0]  # h already final-normed
+    return logits, full

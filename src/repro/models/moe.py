@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN with capacity-based gather/scatter dispatch.
+
+GShard-style grouped routing: tokens are split into ``moe_groups`` routing groups
+(sharded along the data axis), each group computes top-k assignments and packs
+tokens into per-expert capacity slots *locally* (no cross-shard routing state).
+Dispatch/combine are gathers/scatters — real data movement, not the dense one-hot
+einsum of the original GShard formulation (which would fabricate O(E*C*D) fake
+FLOPs per token and wreck both the roofline and actual TPU throughput).
+
+Sharding: groups -> data axis before dispatch; expert dim -> data axis after
+dispatch (XLA SPMD inserts the all-to-all); expert FFN weights are TP-sharded on
+the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, shard_hint
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    s = {
+        "router": ParamSpec((D, E), ("embed", None), "normal"),
+        "wi_gate": ParamSpec((E, D, F), ("expert", "embed", "mlp"), "normal"),
+        "wi_up": ParamSpec((E, D, F), ("expert", "embed", "mlp"), "normal"),
+        "wo": ParamSpec((E, F, D), ("expert", "mlp", "embed"), "normal"),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = L.swiglu_spec(D, cfg.moe_d_ff * cfg.num_shared_experts)
+    return s
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _quant_transport(x, hint, dt_name):
+    """int8-quantized resharding: the dispatch all-to-all moves 1-byte lanes +
+    per-slot scales instead of bf16 (DeepSeek-V3's FP8 dispatch, TPU-native).
+    Gradients take the straight-through path (bf16 combine-side transport,
+    matching DSv3's bf16 combine)."""
+    return _quant_transport_impl(x, hint, dt_name)
+
+
+def _quant_transport_impl(x, hint, dt_name):
+    # NOTE: pinning the pre-quant tensor to the source sharding (to force the
+    # int8 wire) was tried and REFUTED — it added a bf16 gather-side reshard
+    # that outweighed the int8 saving (EXPERIMENTS §Perf i5).  Unpinned, XLA
+    # places the reshard wherever it is cheapest and the quant still shrinks
+    # whatever crosses it.
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = (jnp.maximum(amax, 1e-6) / 127.0).astype(jnp.dtype(dt_name))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    q = shard_hint(q, hint)                       # <- int8 all-to-all
+    scale = shard_hint(scale, hint[:-1] + (None,))
+    return q.astype(jnp.dtype(dt_name)) * scale
+
+
+def _quant_fwd(x, hint, dt_name):
+    return _quant_transport_impl(x, hint, dt_name), None
+
+
+def _quant_bwd(hint, dt_name, _res, g):
+    return (g,)                                    # straight-through; XLA
+                                                   # reshards the cotangent
+
+
+_quant_transport.defvjp(_quant_fwd, _quant_bwd)
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(np.ceil(tokens_per_group * cfg.num_experts_per_tok
+                    / cfg.num_experts * cfg.capacity_factor))
+    return max(8, int(np.ceil(c / 8) * 8))
+
+
+def moe_ffn(p, cfg: ModelConfig, x: jax.Array, moe_groups: int):
+    """x: (B,S,D) -> (out, aux_loss). Token order is preserved."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    G = min(moe_groups, T)
+    while T % G:
+        G -= 1
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+
+    xg = x.reshape(G, Tg, D)
+    xg = shard_hint(xg, ("exp_group", None, "embed"))
+
+    # ---- routing (fp32) -------------------------------------------------------
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (G,Tg,E)
+    top_p, top_e = jax.lax.top_k(probs, K)                       # (G,Tg,K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch style)
+    density = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * mean_prob) * E * cfg.router_aux_weight
+
+    # ---- slot assignment: position of each (token, k) in its expert's queue ----
+    flat_e = top_e.reshape(G, Tg * K)                            # routing order: token-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)          # (G,Tg*K,E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - 1                    # (G,Tg*K,E)
+    slot = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=-1)[..., 0]
+    valid = slot < C                                             # dropped beyond capacity
+    slot = jnp.where(valid, slot, 0)
+
+    # ---- inverse map: which token fills (e, c)? -------------------------------
+    tok_idx = jnp.broadcast_to(jnp.arange(Tg)[:, None], (Tg, K)).reshape(Tg * K)
+
+    def invert(fe, sl, vd):
+        # fe/sl/vd: (Tg*K,) -> slot_tok (E*C,), slot_filled (E*C,)
+        target = fe * C + sl
+        slot_tok = jnp.zeros((E * C,), jnp.int32).at[target].set(
+            jnp.where(vd, tok_idx, 0), mode="drop")
+        slot_filled = jnp.zeros((E * C,), jnp.bool_).at[target].set(
+            vd, mode="drop")
+        return slot_tok, slot_filled
+
+    slot_tok, slot_filled = jax.vmap(invert)(flat_e, slot, valid)  # (G,E*C)
+
+    # ---- dispatch: gather tokens into (G,E,C,D), reshard expert->data ----------
+    # NOTE: sharding the capacity dim over data when E doesn't divide (granite-
+    # moe's 40e) was tried and REFUTED — it distributed expert FLOPs (1.35x) but
+    # moved more bytes overall (EXPERIMENTS §Perf i3); the "moe_cap" rule entry
+    # remains documented-but-unbound.
+    xe = jnp.take_along_axis(xg, slot_tok[..., None], axis=1)     # (G,E*C,D)
+    xe = xe.reshape(G, E, C, D)
+    xe = xe * slot_filled.reshape(G, E, C, 1).astype(xe.dtype)
+    hint = (None, "expert", None, "embed")
+    if cfg.moe_dispatch_bits == 8:
+        xe = _quant_transport(xe, hint, str(dt))                  # int8 a2a
+    else:
+        xe = shard_hint(xe, hint)                                 # bf16 a2a
+
+    # ---- expert FFN (TP on model axis) -----------------------------------------
+    g = jnp.einsum("gecd,edf->gecf", xe.astype(dt), p["wi_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xe.astype(dt), p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = shard_hint(h, (None, "expert", None, "mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    ye = shard_hint(ye, ("exp_group", None, None, "embed"))       # <- all-to-all back
+
+    # ---- combine: weighted scatter-add back to token order ---------------------
+    ye = ye.reshape(G, E * C, D)
+    gathered = jnp.take_along_axis(
+        ye, (flat_e * C + slot)[..., None], axis=1)               # (G,Tg*K,D)
+    w = (top_p.reshape(G, Tg * K) * valid.astype(jnp.float32)).astype(dt)
+    contrib = gathered * w[..., None]
+    out = jnp.sum(contrib.reshape(G, Tg, K, D), axis=2)           # (G,Tg,D)
+
+    if cfg.num_shared_experts:
+        out = out + L.swiglu(p["shared"], xg, dt)
+
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,148 @@
+"""RWKV6 ("Finch") layer: data-dependent-decay time-mix + channel-mix.
+
+Faithful structure: token-shift ddlerp with a rank-`rwkv_lora_mix` LoRA producing
+per-channel mix offsets for (r,k,v,w,g); decay ``w = exp(-exp(w0 + lora(x_w)))``;
+WKV6 recurrence; per-head GroupNorm; gated output.  Decode state per layer:
+(x_prev for time-mix, x_prev for channel-mix, wkv state (H,D,D)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.kernels.rwkv6_scan import wkv6_step
+from repro.models import layers as L
+from repro.models.layers import ParamSpec, shard_hint
+
+_MIX_NAMES = ("r", "k", "v", "w", "g")  # 5 ddlerp channels
+
+
+def _dims(cfg: ModelConfig):
+    D = cfg.d_model
+    Dh = cfg.head_dim
+    H = D // Dh
+    return D, H, Dh
+
+
+def time_mix_spec(cfg: ModelConfig) -> dict:
+    D, H, Dh = _dims(cfg)
+    R = cfg.rwkv_lora_mix
+    R2 = cfg.rwkv_lora_decay
+    return {
+        "mu_x": ParamSpec((D,), (None,), "small"),
+        "mu": ParamSpec((5, D), (None, None), "small"),
+        "lora_w1": ParamSpec((D, 5 * R), ("embed", None), "small"),
+        "lora_w2": ParamSpec((5, R, D), (None, None, "embed"), "small"),
+        "wr": L.linear_spec(D, D, "embed", "heads"),
+        "wk": L.linear_spec(D, D, "embed", "heads"),
+        "wv": L.linear_spec(D, D, "embed", "heads"),
+        "wg": L.linear_spec(D, D, "embed", "heads"),
+        "w0": ParamSpec((D,), (None,), "decay"),
+        "decay_w1": ParamSpec((D, R2), ("embed", None), "small"),
+        "decay_w2": ParamSpec((R2, D), (None, "embed"), "small"),
+        "u": ParamSpec((H, Dh), ("ssm_heads", None), "small"),
+        "ln_scale": ParamSpec((D,), (None,), "ones"),
+        "ln_bias": ParamSpec((D,), (None,), "zeros"),
+        "wo": L.linear_spec(D, D, "heads", "embed"),
+    }
+
+
+def channel_mix_spec(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    F = cfg.d_ff
+    return {
+        "mu_k": ParamSpec((D,), (None,), "small"),
+        "mu_r": ParamSpec((D,), (None,), "small"),
+        "wk": L.linear_spec(D, F, "embed", "mlp"),
+        "wv": L.linear_spec(F, D, "mlp", "embed"),
+        "wr": L.linear_spec(D, D, "embed", "embed"),
+    }
+
+
+def _ddlerp(p, x, x_prev, dt):
+    """Returns the 5 mixed inputs (r,k,v,w,g). x/x_prev: (B,S,D)."""
+    xx = x_prev - x
+    xxx = x + xx * p["mu_x"].astype(dt)
+    R = p["lora_w1"].shape[1] // 5
+    lo = jnp.tanh(xxx @ p["lora_w1"].astype(dt))             # (B,S,5R)
+    B_, S_, _ = lo.shape
+    lo = lo.reshape(B_, S_, 5, R)
+    offs = jnp.einsum("bsfr,frd->bsfd", lo, p["lora_w2"].astype(dt))
+    mixed = []
+    for i in range(5):
+        mix = p["mu"][i].astype(dt) + offs[:, :, i]
+        mixed.append(x + xx * mix)
+    return mixed
+
+
+def time_mix_full(p, cfg: ModelConfig, x, *, x_prev0=None, want_state=False,
+                  impl=None):
+    """x: (B,S,D). x_prev0: (B,D) carried shift state (decode handoff)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    D, H, Dh = _dims(cfg)
+    B, S, _ = x.shape
+    if x_prev0 is None:
+        x_prev0 = jnp.zeros((B, D), dt)
+    x_prev = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev, dt)
+    r = L.linear(p["wr"], xr, dt).reshape(B, S, H, Dh)
+    k = L.linear(p["wk"], xk, dt).reshape(B, S, H, Dh)
+    v = L.linear(p["wv"], xv, dt).reshape(B, S, H, Dh)
+    g = L.linear(p["wg"], xg, dt)
+    w_raw = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"].astype(dt)) @ p["decay_w2"].astype(dt)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, S, H, Dh)
+    r = shard_hint(r, ("batch", "seq", "ssm_heads_dim", None))
+    out = ops.wkv6(r, k, v, w.astype(dt), p["u"], impl=impl or "auto",
+                   return_state=want_state)
+    state = None
+    if want_state:
+        out, wkv_state = out
+        state = (x[:, -1].astype(dt), wkv_state)
+    y = out.reshape(B, S, D)
+    y = L.group_norm(y, H, cfg.norm_eps) * p["ln_scale"].astype(dt) + p["ln_bias"].astype(dt)
+    y = y * jax.nn.silu(g)
+    return L.linear(p["wo"], y, dt), state
+
+
+def time_mix_decode(p, cfg: ModelConfig, x, x_prev, wkv_state):
+    """x: (B,1,D); x_prev: (B,D); wkv_state: (B,H,Dh,Dh) fp32."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    D, H, Dh = _dims(cfg)
+    B = x.shape[0]
+    xp = x_prev[:, None]
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xp, dt)
+    r = L.linear(p["wr"], xr, dt).reshape(B, H, Dh)
+    k = L.linear(p["wk"], xk, dt).reshape(B, H, Dh)
+    v = L.linear(p["wv"], xv, dt).reshape(B, H, Dh)
+    g = L.linear(p["wg"], xg, dt)
+    w_raw = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"].astype(dt)) @ p["decay_w2"].astype(dt)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_raw)).reshape(B, H, Dh)
+    y, wkv_state = wkv6_step(r, k, v, w.astype(dt), p["u"], wkv_state)
+    y = y.reshape(B, 1, D)
+    y = L.group_norm(y, H, cfg.norm_eps) * p["ln_scale"].astype(dt) + p["ln_bias"].astype(dt)
+    y = y * jax.nn.silu(g)
+    return L.linear(p["wo"], y, dt), (x[:, 0].astype(dt), wkv_state)
+
+
+def channel_mix(p, cfg: ModelConfig, x, x_prev0=None, want_state=False):
+    """Works for full sequences and single steps alike."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S, D = x.shape
+    if x_prev0 is None:
+        x_prev0 = jnp.zeros((B, D), dt)
+    x_prev = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(dt)
+    xr = x + xx * p["mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(L.linear(p["wk"], xk, dt)))
+    kk = shard_hint(kk, ("batch", "seq", "mlp"))
+    out = jax.nn.sigmoid(L.linear(p["wr"], xr, dt)) * L.linear(p["wv"], kk, dt)
+    if want_state:
+        return out, x[:, -1].astype(dt)
+    return out

@@ -1,0 +1,81 @@
+"""Pure-JAX AdamW with dtype-configurable moments + cosine/warmup schedule.
+
+No optax in this environment; this is the production optimizer.  Moment dtype is
+configurable (fp32 default; bf16 for the 671B config so optimizer state fits the
+pod — see EXPERIMENTS.md) and the checkpoint substrate serializes whatever dtype
+is in use.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def init_opt_state(params, oc: OptConfig) -> dict:
+    dt = jnp.dtype(oc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": tree_map(zeros, params), "v": tree_map(zeros, params)}
+
+
+def schedule(oc: OptConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps) / jnp.maximum(oc.decay_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, opt, step, oc: OptConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    mdt = jnp.dtype(oc.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32) * b1 + g32 * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g32) * (1 - b2)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt["m"])
+    flat_v = treedef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}

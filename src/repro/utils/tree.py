@@ -1,0 +1,71 @@
+"""Small pytree helpers used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def tree_map(f: Callable, *trees) -> Any:
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_path(f: Callable, tree, *rest) -> Any:
+    return jax.tree_util.tree_map_with_path(f, tree, *rest)
+
+
+def flatten_with_names(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), v) for p, v in flat]
+
+
+def unflatten_like(template, named: dict[str, Any]) -> Any:
+    """Rebuild a pytree shaped like ``template`` from a {path: leaf} dict."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, old in flat:
+        name = path_str(p)
+        if name not in named:
+            raise KeyError(f"missing leaf {name!r} while unflattening")
+        leaves.append(named[name])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+def tree_count(tree) -> int:
+    return sum(
+        int(np.prod(x.shape))
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "shape")
+    )
+
+
+_SAFE = re.compile(r"[^A-Za-z0-9_.\-]")
+
+
+def safe_filename(name: str) -> str:
+    return _SAFE.sub("_", name)

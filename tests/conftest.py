@@ -1,0 +1,17 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# real (single) device; only launch/dryrun.py forces 512 host devices.
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

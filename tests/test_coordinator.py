@@ -1,0 +1,147 @@
+"""Coordinator protocol: two-phase commit, straggler timeout, worker-death
+abort, EXIT_REQ propagation — workers are real threads over real TCP sockets."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore
+from repro.core.coordinator import CheckpointCoordinator
+from repro.core.worker import CkptClient
+
+
+class WorkerThread(threading.Thread):
+    """Tiny 'training loop': counts steps, services checkpoint rounds."""
+
+    def __init__(self, host, port, wid, store, num_workers, *, save_delay=0.0,
+                 die_during_save=False, steps=400):
+        super().__init__(daemon=True)
+        self.client = CkptClient(host, port, wid)
+        self.mgr = CheckpointManager(store, worker_id=wid, num_workers=num_workers)
+        self.save_delay = save_delay
+        self.die_during_save = die_during_save
+        self.steps = steps
+        self.state = {"w": np.arange(10, dtype=np.float32) * (wid + 1)}
+        self.serviced = []
+        self.error = None
+
+    def run(self):
+        try:
+            for step in range(self.steps):
+                time.sleep(0.003)  # "train"
+                if self.client.exit_requested:
+                    return
+
+                def save(label):
+                    if self.die_during_save:
+                        self.client.close()          # simulated node death
+                        raise RuntimeError("node died")
+                    time.sleep(self.save_delay)
+                    return self.mgr.save(label, self.state)
+
+                out = self.client.service(step, save)
+                if out is not None:
+                    self.serviced.append(out)
+        except Exception as e:  # noqa: BLE001
+            self.error = e
+
+
+@pytest.fixture
+def store(tmp_path):
+    return TieredStore(tmp_path)
+
+
+def _mk(store, n, straggler_timeout=15.0):
+    mgr0 = CheckpointManager(store, worker_id=0, num_workers=n)
+    coord = CheckpointCoordinator(
+        expected_workers=n, straggler_timeout=straggler_timeout,
+        commit_fn=mgr0.commit)
+    return coord
+
+
+def test_two_phase_commit_happy_path(store):
+    n = 3
+    coord = _mk(store, n)
+    workers = [WorkerThread(coord.host, coord.port, w, store, n) for w in range(n)]
+    for w in workers:
+        w.start()
+    coord.wait_for_workers(n)
+    rec = coord.trigger_checkpoint(step=7, reason="test")
+    assert rec["ok"], rec
+    # every worker observed COMMIT
+    time.sleep(0.2)
+    mgr = CheckpointManager(store, num_workers=n)
+    out, man = mgr.restore({"w": np.zeros(10, np.float32)})
+    assert man["step"] == 7 and man["num_workers"] == n
+    coord.request_exit("done")
+    for w in workers:
+        w.join(timeout=10)
+        assert w.error is None
+    coord.close()
+
+
+def test_straggler_timeout_aborts(store):
+    n = 2
+    coord = _mk(store, n, straggler_timeout=0.5)
+    w0 = WorkerThread(coord.host, coord.port, 0, store, n)
+    w1 = WorkerThread(coord.host, coord.port, 1, store, n, save_delay=5.0)
+    w0.start(); w1.start()
+    coord.wait_for_workers(n)
+    rec = coord.trigger_checkpoint(step=3)
+    assert not rec["ok"] and "barrier failed" in rec["error"]
+    # no manifest must exist (abort => previous checkpoint stays authoritative)
+    mgr = CheckpointManager(store, num_workers=n)
+    assert mgr.steps() == []
+    coord.request_exit("done")
+    w0.join(timeout=10); w1.join(timeout=10)
+    coord.close()
+
+
+def test_worker_death_aborts_round(store):
+    n = 2
+    coord = _mk(store, n)
+    w0 = WorkerThread(coord.host, coord.port, 0, store, n)
+    w1 = WorkerThread(coord.host, coord.port, 1, store, n, die_during_save=True)
+    w0.start(); w1.start()
+    coord.wait_for_workers(n)
+    rec = coord.trigger_checkpoint(step=4)
+    assert not rec["ok"]
+    mgr = CheckpointManager(store, num_workers=n)
+    assert mgr.steps() == []
+    coord.request_exit("done")
+    w0.join(timeout=10)
+    coord.close()
+
+
+def test_exit_request_propagates(store):
+    n = 2
+    coord = _mk(store, n)
+    workers = [WorkerThread(coord.host, coord.port, w, store, n, steps=10_000)
+               for w in range(n)]
+    for w in workers:
+        w.start()
+    coord.wait_for_workers(n)
+    coord.request_exit("preemption")
+    for w in workers:
+        w.join(timeout=10)
+        assert not w.is_alive()
+        assert w.client.exit_reason == "preemption"
+    coord.close()
+
+
+def test_interval_trigger(store):
+    n = 1
+    mgr0 = CheckpointManager(store, worker_id=0, num_workers=n)
+    coord = CheckpointCoordinator(expected_workers=n, interval_s=0.4,
+                                  commit_fn=mgr0.commit, straggler_timeout=10)
+    w = WorkerThread(coord.host, coord.port, 0, store, n, steps=10_000)
+    w.start()
+    coord.wait_for_workers(1)
+    time.sleep(1.5)
+    coord.request_exit("done")
+    w.join(timeout=10)
+    ok_rounds = [h for h in coord.history if h.get("ok")]
+    assert len(ok_rounds) >= 2, coord.history
+    coord.close()

@@ -1,0 +1,145 @@
+"""Per-kernel validation: Pallas (interpret mode) and XLA-chunked vs pure-jnp
+oracles, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels._rwkv6_pallas import wkv6_pallas
+from repro.kernels._ssd_pallas import ssd_pallas
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import flash
+from repro.kernels.rwkv6_scan import wkv6_chunked_xla, wkv6_step
+from repro.kernels.ssd_scan import ssd_chunked_xla, ssd_step
+from repro.kernels.xla_attention import causal_blockwise
+
+TOL = {np.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+def _mk_qkv(rng, B, Sq, Skv, H, Hkv, Dq, Dv, dtype):
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, Dq), np.float32), dtype)
+    k = jnp.asarray(rng.standard_normal((B, Skv, Hkv, Dq), np.float32), dtype)
+    v = jnp.asarray(rng.standard_normal((B, Skv, Hkv, Dv), np.float32), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,Hkv,Dq,Dv", [
+    (2, 256, 4, 2, 64, 64),     # GQA
+    (1, 128, 8, 1, 128, 64),    # MQA-ish, d_qk != d_v (MLA shape)
+    (2, 128, 4, 4, 32, 32),     # MHA
+    (1, 512, 2, 2, 64, 64),     # longer seq
+])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(rng, B, S, H, Hkv, Dq, Dv, dtype):
+    q, k, v = _mk_qkv(rng, B, S, S, H, Hkv, Dq, Dv, dtype)
+    out = flash(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    want = ref.attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                         v.astype(jnp.float32), causal=True)
+    tol = TOL[np.float32 if dtype is np.float32 else jnp.bfloat16]
+    assert float(jnp.abs(out.astype(jnp.float32) - want).max()) < tol
+
+
+@pytest.mark.parametrize("Sq", [96, 256, 1000])
+def test_blockwise_xla_vs_ref(rng, Sq):
+    q, k, v = _mk_qkv(rng, 2, Sq, Sq, 4, 2, 32, 32, np.float32)
+    out = causal_blockwise(q, k, v, block_q=64, block_k=64)
+    want = ref.attention(q, k, v, causal=True)
+    assert float(jnp.abs(out - want).max()) < 2e-5
+
+
+@pytest.mark.parametrize("B,H,Hkv,Dq,Dv,S,kvl", [
+    (2, 8, 2, 64, 64, 512, 300),
+    (1, 16, 1, 128, 64, 256, 256),   # MLA-ish absorbed shape
+    (4, 4, 4, 32, 32, 128, 77),
+])
+def test_flash_decode_vs_ref(rng, B, H, Hkv, Dq, Dv, S, kvl):
+    q, k, v = _mk_qkv(rng, B, 1, S, H, Hkv, Dq, Dv, np.float32)
+    out = flash_decode(q, k, v, kv_len=kvl, block_k=128, interpret=True)
+    want = ref.attention(q, k, v, causal=False, kv_len=kvl)
+    assert float(jnp.abs(out - want).max()) < 2e-5
+
+
+def _mk_ssd(rng, B, S, H, P, N):
+    x = jnp.asarray(rng.standard_normal((B, S, H, P), np.float32)) * 0.5
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, H))).astype(np.float32)) * 0.5
+    Al = jnp.asarray(rng.standard_normal((H,)).astype(np.float32)) * 0.3
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32)) * 0.5
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)).astype(np.float32)) * 0.5
+    D = jnp.ones((H,), jnp.float32)
+    return x, dt, Al, Bm, Cm, D
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 3, 32, 16, 32), (1, 256, 2, 16, 64, 64), (2, 64, 4, 8, 8, 16),
+])
+def test_ssd_chunked_and_pallas_vs_ref(rng, B, S, H, P, N, chunk):
+    x, dt, Al, Bm, Cm, D = _mk_ssd(rng, B, S, H, P, N)
+    want, wst = ref.ssd(x, dt, Al, Bm, Cm, D, return_state=True)
+    g1, s1 = ssd_chunked_xla(x, dt, Al, Bm, Cm, D, chunk=chunk, return_state=True)
+    g2, s2 = ssd_pallas(x, dt, Al, Bm, Cm, D, chunk=chunk, return_state=True,
+                        interpret=True)
+    for g, s in ((g1, s1), (g2, s2)):
+        assert float(jnp.abs(g - want).max()) < 5e-5
+        assert float(jnp.abs(s - wst).max()) < 5e-5
+
+
+def test_ssd_decode_step_matches_scan(rng):
+    B, S, H, P, N = 2, 16, 2, 8, 8
+    x, dt, Al, Bm, Cm, D = _mk_ssd(rng, B, S, H, P, N)
+    _, st = ref.ssd(x, dt, Al, Bm, Cm, D, return_state=True)
+    st2 = jnp.zeros_like(st)
+    for t in range(S):
+        y, st2 = ssd_step(x[:, t], dt[:, t], Al, Bm[:, t], Cm[:, t], D, st2)
+    assert float(jnp.abs(st2 - st).max()) < 5e-5
+
+
+def _mk_wkv(rng, B, S, H, Dh):
+    r, k, v = (jnp.asarray(rng.standard_normal((B, S, H, Dh), np.float32)) * 0.5
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.7, 0.999, (B, S, H, Dh)).astype(np.float32))
+    u = jnp.asarray(rng.standard_normal((H, Dh)).astype(np.float32)) * 0.3
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("B,S,H,Dh,chunk", [
+    (2, 128, 3, 32, 32), (1, 64, 2, 64, 16), (2, 96, 1, 16, 32),
+])
+def test_wkv6_chunked_and_pallas_vs_ref(rng, B, S, H, Dh, chunk):
+    r, k, v, w, u = _mk_wkv(rng, B, S, H, Dh)
+    want, wst = ref.wkv6(r, k, v, w, u, return_state=True)
+    g1, s1 = wkv6_chunked_xla(r, k, v, w, u, chunk=chunk, return_state=True)
+    g2, s2 = wkv6_pallas(r, k, v, w, u, chunk=chunk, return_state=True,
+                         interpret=True)
+    for g, s in ((g1, s1), (g2, s2)):
+        assert float(jnp.abs(g - want).max()) < 1e-4
+        assert float(jnp.abs(s - wst).max()) < 1e-4
+
+
+def test_wkv6_decode_step_matches_scan(rng):
+    B, S, H, Dh = 1, 12, 2, 16
+    r, k, v, w, u = _mk_wkv(rng, B, S, H, Dh)
+    ys, st = ref.wkv6(r, k, v, w, u, return_state=True)
+    st2 = jnp.zeros_like(st)
+    outs = []
+    for t in range(S):
+        y, st2 = wkv6_step(r[:, t], k[:, t], v[:, t], w[:, t], u, st2)
+        outs.append(y)
+    got = jnp.stack(outs, axis=1)
+    assert float(jnp.abs(got - ys).max()) < 1e-4
+    assert float(jnp.abs(st2 - st).max()) < 1e-4
+
+
+@pytest.mark.parametrize("n", [64, 2048, 5000, 100_000])
+def test_checksum_pallas_vs_ref(rng, n):
+    words = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    a = ops.checksum(words, impl="auto")
+    b = ops.checksum(words, impl="pallas_interpret")
+    assert int(a) == int(b)
+
+
+def test_checksum_detects_flip(rng):
+    words = jnp.asarray(rng.integers(0, 2**32, size=4096, dtype=np.uint32))
+    a = ops.checksum(words)
+    flipped = words.at[1234].set(words[1234] ^ 1)
+    assert int(a) != int(ops.checksum(flipped))

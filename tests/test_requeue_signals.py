@@ -1,0 +1,76 @@
+"""Signal trapping, walltime accounting, requeue records, slurmsim basics."""
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.core.signals import SignalTrap
+from repro.sched.slurmsim import REQUEUE_EXIT, JobSpec, SlurmSim
+
+
+def test_signal_trap_sets_flag_only():
+    with SignalTrap((signal.SIGUSR1,)) as trap:
+        assert not trap.triggered
+        os.kill(os.getpid(), signal.SIGUSR1)
+        assert trap.wait(2.0)
+        assert trap.received == signal.SIGUSR1
+        trap.reset()
+        assert not trap.triggered
+    # handler restored after exit
+    assert signal.getsignal(signal.SIGUSR1) != trap._handler
+
+
+def test_walltime_tracker_margin_and_budget():
+    t = WalltimeTracker(limit_s=0.2, margin_s=0.15, total_budget_s=0.5,
+                        consumed_s=0.4)
+    assert not t.budget_exhausted()
+    time.sleep(0.11)
+    assert t.near_limit()
+    time.sleep(0.05)
+    assert t.budget_exhausted()
+    assert ":" in t.human()
+
+
+def test_requeue_file_accumulates(tmp_path):
+    rf = RequeueFile(tmp_path / "rq.json")
+    t = WalltimeTracker(limit_s=100)
+    time.sleep(0.02)
+    rec1 = rf.save(t, last_step=5, reason="walltime")
+    assert rec1["requeues"] == 1 and rec1["last_step"] == 5
+    t2 = WalltimeTracker(limit_s=100, consumed_s=rec1["consumed_s"])
+    rec2 = rf.save(t2, last_step=9)
+    assert rec2["requeues"] == 2
+    assert rec2["consumed_s"] >= rec1["consumed_s"]
+
+
+def test_slurmsim_completion_and_failure(tmp_path):
+    sim = SlurmSim(tmp_path)
+    ok = sim.submit(JobSpec("ok", [sys.executable, "-c", "print('hi')"],
+                            walltime_s=30, requeue=False))
+    bad = sim.submit(JobSpec("bad", [sys.executable, "-c", "raise SystemExit(3)"],
+                             walltime_s=30, requeue=False))
+    sim.run(timeout_s=60)
+    assert sim.job(ok).state == "COMPLETED"
+    assert sim.job(bad).state == "FAILED"
+    # append-mode output survives
+    assert "hi" in (tmp_path / "ok.out").read_text()
+
+
+def test_slurmsim_requeue_on_85(tmp_path):
+    # first attempt exits 85 (checkpointed), second completes — via a flag file
+    prog = (
+        "import sys, os; p='%s';\n"
+        "sys.exit(0) if os.path.exists(p) else (open(p,'w').write('x'), sys.exit(85))"
+    ) % (tmp_path / "flag")
+    jid = sim_jid = None
+    sim = SlurmSim(tmp_path)
+    jid = sim.submit(JobSpec("rq", [sys.executable, "-c", prog], walltime_s=30))
+    sim.run(timeout_s=60)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED" and rec.requeues == 1
+    assert rec.exit_codes == [REQUEUE_EXIT, 0]
