@@ -5,6 +5,11 @@ mid-run, restore, finish).  Plus the beyond-paper async-checkpoint mode, to
 quantify how much of the paper's checkpoint stall the double-buffered writer
 hides.  Memory is RSS sampled every step (the paper's LDMS traces).
 
+Also benchmarks the checkpoint I/O plane itself (``run_ckpt_io``): the legacy
+double-copy v1 writer vs the zero-copy streaming v2 engine, reporting save /
+restore GB/s and peak extra memory, emitted to ``BENCH_ckpt_io.json`` at the
+repo root so the perf trajectory is tracked PR-over-PR.
+
 Paper claims reproduced (see EXPERIMENTS.md): checkpointing adds a small
 runtime overhead and ~sub-percent memory overhead; checkpoint+restart completes
 with total compute ~= baseline + restart cost instead of recomputing from
@@ -13,7 +18,9 @@ scratch.
 from __future__ import annotations
 
 import json
+import threading
 import time
+import tracemalloc
 from pathlib import Path
 
 import jax
@@ -25,6 +32,164 @@ def _rss_mb() -> float:
         if line.startswith("VmRSS"):
             return int(line.split()[1]) / 1024.0
     return 0.0
+
+
+class _RssSampler:
+    """Background max-RSS sampler (the paper's LDMS trace, at ~1 ms)."""
+
+    def __init__(self):
+        self._stop = threading.Event()
+        self.base_mb = 0.0
+        self.peak_mb = 0.0
+
+    def __enter__(self):
+        self.base_mb = self.peak_mb = _rss_mb()
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+        return self
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.peak_mb = max(self.peak_mb, _rss_mb())
+            time.sleep(0.001)
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._t.join()
+        self.peak_mb = max(self.peak_mb, _rss_mb())
+
+    @property
+    def extra_mb(self) -> float:
+        return self.peak_mb - self.base_mb
+
+
+def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
+                n_leaves: int = 12, replicas: int = 2, repeats: int = 5) -> list[dict]:
+    """Old-vs-new checkpoint I/O plane: save/restore GB/s + peak extra memory.
+
+    legacy  = v1 writer (per-leaf ``tobytes`` + whole-shard BytesIO) + k full
+              serial ``put`` writes; whole-shard read-back on restore.
+    stream  = CRC-once zero-copy ``write_shard_stream`` through ``put_stream``
+              (write once, OS-copy k-1 replicas); ranged single-leaf restore.
+
+    The store root lives on tmpfs (/dev/shm) when available so the numbers
+    measure the ENGINE's overhead — copies, CRC passes, replica fan-out —
+    rather than this box's disk, whose bandwidth varies run to run (the
+    paper's node-local container-cache tier is the same idea).  The shared
+    tier's replica placement is randomized, so each save clears its prefix
+    first — repeats don't accumulate stale full-payload copies in tmpfs.
+    """
+    import os
+    import tempfile
+
+    from repro.checkpoint import serialization as SER
+    from repro.checkpoint.store import TieredStore
+
+    tmp_root = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    rng = np.random.default_rng(0)
+    leaf_elems = payload_mb * (1 << 20) // 4 // n_leaves
+    records = [(f"leaf{i:02d}", rng.standard_normal(leaf_elems).astype(np.float32))
+               for i in range(n_leaves)]
+    payload_bytes = sum(a.nbytes for _, a in records)
+
+    def measure(fn):
+        best_s, peaks_buf, peaks_rss = float("inf"), [], []
+        out = None
+        for _ in range(repeats):
+            tracemalloc.start()
+            tracemalloc.reset_peak()
+            with _RssSampler() as rss:
+                t0 = time.perf_counter()
+                out = fn()
+                dt = time.perf_counter() - t0
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            best_s = min(best_s, dt)
+            peaks_buf.append(peak)
+            peaks_rss.append(rss.extra_mb)
+        return {"wall_s": best_s,
+                "gb_per_s": payload_bytes / best_s / 1e9,
+                "peak_buffered_mb": float(np.median(peaks_buf)) / 1e6,
+                "peak_extra_rss_mb": float(np.median(peaks_rss)),
+                "out": out}
+
+    results: dict = {"payload_mb": payload_bytes / 1e6, "n_leaves": n_leaves,
+                     "replicas": replicas, "tmpfs": tmp_root is not None}
+    with tempfile.TemporaryDirectory(dir=tmp_root) as d:
+        store = TieredStore(Path(d))
+
+        def save_legacy():
+            # the seed path verbatim: double-copy serialization, then k FULL
+            # serial writes of the payload (the current store.put would
+            # OS-copy replicas, which is already part of the new engine)
+            store.delete_prefix("shared", "legacy")
+            data = SER.write_shard_bytes(records, meta={"step": 0})
+            for i in range(replicas):
+                p = Path(d) / "shared" / f"node{i}" / "legacy" / "shard.bin"
+                p.parent.mkdir(parents=True, exist_ok=True)
+                tmp = p.with_suffix(p.suffix + ".tmp")
+                tmp.write_bytes(data)
+                tmp.rename(p)
+
+        def save_stream():
+            # CRC folds chunk-by-chunk inside the stream, overlapped with the
+            # replica writer threads — the non-incremental manager save path
+            store.delete_prefix("shared", "stream")
+            store.put_stream(
+                "shared", "stream/shard.bin",
+                lambda fp: SER.write_shard_stream(fp, records, meta={"step": 0}),
+                replicas=replicas)
+
+        # legacy replica fan-out re-wrote the payload k times from memory; the
+        # new engine serializes once and OS-copies, so both timings include
+        # the full k-replica durability cost.
+        results["save_legacy"] = measure(save_legacy)
+        results["save_stream"] = measure(save_stream)
+
+        results["restore_full_legacy"] = measure(
+            lambda: store.get_verified("shared", "legacy/shard.bin"))
+        results["restore_full_stream"] = measure(
+            lambda: store.get_verified("shared", "stream/shard.bin"))
+
+        one = records[n_leaves // 2][0]
+        ranged = measure(
+            lambda: store.read_shard_leaves("shared", "stream/shard.bin", [one]))
+        ranged["gb_per_s"] = (payload_bytes / n_leaves) / ranged["wall_s"] / 1e9
+        results["restore_one_leaf_ranged"] = ranged
+
+    for r in results.values():
+        if isinstance(r, dict):
+            r.pop("out", None)
+    results["save_speedup"] = (results["save_legacy"]["wall_s"]
+                               / results["save_stream"]["wall_s"])
+    results["save_peak_mem_ratio"] = (
+        results["save_legacy"]["peak_buffered_mb"]
+        / max(results["save_stream"]["peak_buffered_mb"], 1e-9))
+
+    out_path = Path(__file__).resolve().parents[1] / "BENCH_ckpt_io.json"
+    out_path.write_text(json.dumps(results, indent=1))
+    if results_dir:
+        results_dir.mkdir(parents=True, exist_ok=True)
+        (results_dir / "ckpt_io.json").write_text(json.dumps(results, indent=1))
+
+    rows = []
+    for name in ("save_legacy", "save_stream", "restore_full_stream",
+                 "restore_one_leaf_ranged"):
+        r = results[name]
+        rows.append({
+            "name": f"ckpt_io_{name}",
+            "us_per_call": r["wall_s"] * 1e6,
+            "derived": (f"{r['gb_per_s']:.2f}GB/s "
+                        f"peak_buf={r['peak_buffered_mb']:.1f}MB "
+                        f"peak_rss=+{r['peak_extra_rss_mb']:.1f}MB"),
+        })
+    rows.append({
+        "name": "ckpt_io_summary",
+        "us_per_call": 0.0,
+        "derived": (f"save_speedup={results['save_speedup']:.2f}x "
+                    f"peak_mem_ratio={results['save_peak_mem_ratio']:.1f}x"),
+    })
+    return rows
 
 
 def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8):
@@ -123,4 +288,13 @@ def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8):
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "cr_overhead.json").write_text(json.dumps(out, indent=1))
+    rows.extend(run_ckpt_io(results_dir))
     return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    # standalone: just the I/O-plane comparison (fast, no model training)
+    for row in run_ckpt_io():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

@@ -1,14 +1,20 @@
-"""Background checkpoint writer (beyond-paper optimization).
+"""Background checkpoint writer pool (beyond-paper optimization).
 
 The paper's DMTCP checkpoint is synchronous: user threads are quiesced for the
-whole image write (the CPU dips in its Fig. 4).  Here the quiesce only lasts for
-the device->host snapshot (double buffer); the serialization + store write run
-on a daemon thread overlapped with training.  ``wait()`` drains the queue —
-called before a requeue/exit so the last image is durable, and by the two-phase
-coordinator barrier before WRITTEN is sent.
+whole image write (the CPU dips in its Fig. 4).  Here the quiesce only lasts
+for the device->host snapshot (double buffer); serialization + store writes
+run on a small pool of daemon threads overlapped with training.  A pool (not a
+single thread) lets independent saves — shards of consecutive steps, or the
+several worker shards a single process hosts in tests/simulation — stream
+concurrently: the CRC folding of one shard overlaps the kernel writes of
+another (within one shard the same overlap comes from the store's fan-out
+sink threads).
+``wait()`` drains the queue — called before a requeue/exit so the last image
+is durable, and by the two-phase coordinator barrier before WRITTEN is sent.
 """
 from __future__ import annotations
 
+import os
 import queue
 import threading
 import traceback
@@ -16,21 +22,34 @@ from typing import Callable, Optional
 
 
 class AsyncWriter:
-    def __init__(self, max_inflight: int = 2):
-        self._q: queue.Queue = queue.Queue(maxsize=max_inflight)
+    def __init__(self, max_inflight: int = 3, workers: Optional[int] = None):
+        # ``max_inflight`` bounds TOTAL unfinished tasks (queued + executing).
+        # Every pending checkpoint write pins a full host snapshot via its
+        # closure, so this is the memory backpressure knob — the default
+        # matches the seed's bound (2 queued + 1 executing); ``submit`` blocks
+        # when the training loop outpaces the store.
+        if workers is None:
+            workers = max(2, min(4, (os.cpu_count() or 2) // 2))
+        self._max_inflight = max(1, max_inflight)
+        workers = min(workers, self._max_inflight)
+        self._q: queue.Queue = queue.Queue()   # _inflight gate does the bounding
         self._err: Optional[BaseException] = None
         self._lock = threading.Lock()
-        self._thread = threading.Thread(target=self._run, daemon=True)
-        self._thread.start()
         self._inflight = 0
         self._done = threading.Condition()
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._run, daemon=True, name=f"ckpt-writer-{i}")
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
 
     def _run(self):
         while True:
-            item = self._q.get()
-            if item is None:
+            fn = self._q.get()
+            if fn is None:
                 return
-            fn = item
             try:
                 fn()
             except BaseException as e:  # noqa: BLE001 — surfaced on wait()
@@ -43,8 +62,11 @@ class AsyncWriter:
                     self._done.notify_all()
 
     def submit(self, fn: Callable[[], None]) -> None:
+        if self._closed:
+            raise RuntimeError("AsyncWriter is closed")
         self.raise_if_failed()
         with self._done:
+            self._done.wait_for(lambda: self._inflight < self._max_inflight)
             self._inflight += 1
         self._q.put(fn)
 
@@ -60,6 +82,11 @@ class AsyncWriter:
                 raise RuntimeError("async checkpoint write failed") from err
 
     def close(self) -> None:
+        if self._closed:
+            return
         self.wait()
-        self._q.put(None)
-        self._thread.join(timeout=5)
+        self._closed = True
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=5)

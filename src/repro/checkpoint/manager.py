@@ -18,6 +18,14 @@ core/virtualization.py).
 Incremental mode (beyond-paper): a leaf whose crc32 is unchanged since the
 previous *committed* checkpoint is not rewritten — its manifest entry points at
 the older shard file.  GC keeps referenced base files alive.
+
+I/O plane (see EXPERIMENTS.md): each leaf is CRC'd exactly once per save (a
+zero-copy pass that doubles as the incremental diff), then streamed through
+``TieredStore.put_stream`` into a v2 shard — no whole-shard buffer, and the
+k-replica fan-out is an OS-level copy of the primary.  Restore is
+leaf-granular: only the byte ranges the manifest actually references are read
+from each shard, so an incremental/MxN restore no longer re-reads whole base
+shards.
 """
 from __future__ import annotations
 
@@ -41,8 +49,10 @@ class CheckpointManager:
     def __init__(self, store: TieredStore, *, tier: str = "shared",
                  worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
                  mode: str = "sync", incremental: bool = False,
-                 keep_last: int = 3, prefix: str = "ckpt"):
+                 keep_last: int = 3, prefix: str = "ckpt",
+                 shard_format: int = 2):
         assert mode in ("sync", "async")
+        assert shard_format in (1, 2)      # 1 = legacy writer (compat tests)
         self.store = store
         self.tier = tier
         self.worker_id = worker_id
@@ -52,6 +62,7 @@ class CheckpointManager:
         self.incremental = incremental
         self.keep_last = keep_last
         self.prefix = prefix
+        self.shard_format = shard_format
         self._writer = AsyncWriter() if mode == "async" else None
         self._prev_manifest: Optional[dict] = None
 
@@ -66,7 +77,10 @@ class CheckpointManager:
         """Snapshot + write this worker's shard.  Returns the worker part dict.
 
         In async mode the device->host snapshot happens here (the only quiesced
-        section); serialization and store writes run on the writer thread.
+        section); serialization and store writes run on the writer pool.  Each
+        leaf's CRC32 is computed exactly once per save, from a zero-copy byte
+        view, and serves as both the incremental diff key and the stored shard
+        checksum — see the ``diff`` comment below for where it is computed.
         """
         t0 = time.time()
         records = SER.tree_to_records(tree)            # snapshot (device_get)
@@ -76,24 +90,43 @@ class CheckpointManager:
         shard_rel = f"{sdir}/shard_w{self.worker_id:05d}.bin"
 
         prev_entries = {}
-        if self.incremental and self._prev_manifest:
+        # The incremental diff needs every leaf's CRC before deciding what to
+        # stream, so it pre-computes them (one zero-copy pass) and hands them
+        # to the writer via ``crcs=``.  Without a diff, the CRC is instead
+        # folded chunk-by-chunk inside the streaming writer, overlapped with
+        # the replica disk writes.  Either way: exactly one CRC per leaf
+        # (except shard_format=1, whose legacy writer re-CRCs internally —
+        # compat path only).  In async v2 mode the writer-pool task fills the
+        # folded CRCs into the returned part's entries (atomic per-field);
+        # they are final once ``wait_writes()`` returns, which ``commit()``
+        # always awaits before reading parts back.
+        diff = self.incremental and self._prev_manifest is not None
+        if diff:
             prev_entries = {
                 e["path"]: e for e in self._prev_manifest["leaves"]
             }
 
-        entries, to_write = [], []
+        entries, to_write, crcs = [], [], {}
+        pending = {}                        # name -> entry awaiting writer crc
         for idx, name, arr in mine:
-            crc = SER.leaf_checksum(arr)
-            prev = prev_entries.get(name)
-            if prev is not None and prev["crc32"] == crc and prev.get("file"):
-                entries.append({**prev, "reused": True})
+            if diff or self.shard_format == 1:
+                crc = SER.leaf_checksum(arr)
+                prev = prev_entries.get(name)
+                if prev is not None and prev["crc32"] == crc and prev.get("file"):
+                    entries.append({**prev, "reused": True})
+                    continue
+                crcs[name] = crc
             else:
-                to_write.append((name, arr))
-                entries.append({
-                    "path": name, "index": idx, "crc32": crc,
-                    "dtype": str(arr.dtype), "shape": list(arr.shape),
-                    "file": shard_rel, "reused": False,
-                })
+                crc = None
+            to_write.append((name, arr))
+            entry = {
+                "path": name, "index": idx, "crc32": crc,
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "file": shard_rel, "reused": False,
+            }
+            if crc is None:
+                pending[name] = entry
+            entries.append(entry)
 
         part = {
             "worker_id": self.worker_id,
@@ -105,9 +138,25 @@ class CheckpointManager:
         }
 
         def do_write():
+            # the wpart references writer-computed CRCs, so in async mode the
+            # whole body runs as one pool task; commit()'s wait_writes() is
+            # the barrier before the manifest is cut
             if to_write:
-                data = SER.write_shard_bytes(to_write, meta={"step": step})
-                self.store.put(self.tier, shard_rel, data, replicas=self.replicas)
+                if self.shard_format == 1:     # legacy byte-identical v1 path
+                    data = SER.write_shard_bytes(to_write, meta={"step": step})
+                    self.store.put(self.tier, shard_rel, data,
+                                   replicas=self.replicas)
+                else:
+                    footer = {}
+                    self.store.put_stream(
+                        self.tier, shard_rel,
+                        lambda fp: footer.update(SER.write_shard_stream(
+                            fp, to_write, meta={"step": step},
+                            crcs=crcs or None)),
+                        replicas=self.replicas)
+                    for t in footer["tensors"]:
+                        if t["path"] in pending:
+                            pending[t["path"]]["crc32"] = t["crc32"]
             self.store.put(
                 self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
                 json.dumps(part).encode(), replicas=self.replicas)
@@ -166,8 +215,16 @@ class CheckpointManager:
         return json.loads(raw.decode())
 
     def restore(self, template, step: Optional[int] = None):
-        """Returns (host_tree, manifest).  Verifies per-leaf crcs; replica
-        fallback happens inside the store."""
+        """Returns (host_tree, manifest).
+
+        Leaf-granular: for each shard file the manifest references, only the
+        byte ranges of the referenced leaves are fetched (``read_shard_leaves``
+        coalesces adjacent ones) — an incremental manifest that points one leaf
+        at an old base shard reads just that leaf, not the whole base file.
+        Per-leaf CRCs are pinned to the manifest values and payload bytes are
+        verified against them; replica fallback happens inside the store.
+        Reads both shard formats (v1 seed files and v2).
+        """
         all_steps = self.steps()
         if not all_steps:
             raise FileNotFoundError("no committed checkpoint found")
@@ -178,12 +235,11 @@ class CheckpointManager:
             by_file.setdefault(e["file"], []).append(e)
         named: dict[str, np.ndarray] = {}
         for rel, ents in by_file.items():
-            tensors, _ = self.store.get_verified(self.tier, rel)
+            tensors, _ = self.store.read_shard_leaves(
+                self.tier, rel, [e["path"] for e in ents],
+                expect_crcs={e["path"]: e["crc32"] for e in ents})
             for e in ents:
-                arr = tensors[e["path"]]
-                if SER.leaf_checksum(arr) != e["crc32"]:
-                    raise SER.ChecksumError(f"manifest crc mismatch: {e['path']}")
-                named[e["path"]] = arr
+                named[e["path"]] = tensors[e["path"]]
         tree = SER.restore_tree(template, named)
         self._prev_manifest = manifest
         return tree, manifest
@@ -205,10 +261,24 @@ class CheckpointManager:
                 continue
             sdir = _step_dir(self.prefix, s)
             if sdir in referenced_dirs:
-                # keep the shard data, retire the manifest + parts
+                # keep the shard data, retire the manifest + parts.  The
+                # retired step may have been written under a DIFFERENT worker
+                # count (elastic restart), so the part count comes from the
+                # step's own manifest — not this manager's num_workers.
+                try:
+                    nw = int(self.read_manifest(s).get("num_workers",
+                                                       self.num_workers))
+                except (FileNotFoundError, ValueError, KeyError):
+                    nw = 0
                 self.store.delete_file(self.tier, f"{sdir}/MANIFEST.json")
-                for w in range(self.num_workers):
-                    self.store.delete_file(self.tier, f"{sdir}/wpart_{w:05d}.json")
+                if nw:
+                    for w in range(nw):
+                        self.store.delete_file(
+                            self.tier, f"{sdir}/wpart_{w:05d}.json")
+                else:   # manifest unreadable: sweep whatever parts exist
+                    for rel in self.store.list_prefix(self.tier, sdir):
+                        if Path(rel).name.startswith("wpart_"):
+                            self.store.delete_file(self.tier, rel)
             else:
                 self.store.delete_prefix(self.tier, sdir)
 

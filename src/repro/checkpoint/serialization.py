@@ -1,9 +1,24 @@
 """Checkpoint shard serialization: pytree <-> binary shard files.
 
-Format (one file per worker shard):
+Two on-disk formats (see EXPERIMENTS.md for the byte-level spec):
+
+v1 (legacy, read-compatible, header-first):
   [8B magic 'RPRCKPT1'][4B header_len][header JSON][raw tensor bytes...]
-Header: {"tensors": [{"path","dtype","shape","offset","nbytes","crc32"}...],
-         "meta": {...}, "file_crc32": ...}
+  Header: {"tensors": [{"path","dtype","shape","offset","nbytes","crc32"}...],
+           "meta": {...}}; tensor offsets are relative to the end of the header.
+
+v2 (current, footer-last, written in a single streaming pass):
+  [8B magic 'RPRCKPT2'][raw tensor bytes...][footer JSON]
+  [8B footer_len (<Q)][8B magic 'RPRCKPT2']
+  Footer: same schema as the v1 header but tensor offsets are ABSOLUTE file
+  offsets, so a reader can fetch any single leaf with one ranged read after
+  parsing the footer (found from the fixed-size 16-byte trailer).
+
+The v2 writer is zero-copy: each leaf's bytes are exposed as a ``memoryview``
+(no ``tobytes()`` materialization), its CRC32 is computed once from that view
+(or taken from a precomputed map so the save path CRCs each leaf exactly once),
+and the view is handed straight to the sink file object.  Peak extra host
+memory is therefore one OS write buffer, not one full shard.
 
 CRC32 per tensor (the DMTCP paper stores redundant images; we store checksummed
 shards + k replicas — integrity is checked on read and the store falls back to
@@ -16,27 +31,116 @@ import json
 import struct
 import zlib
 from pathlib import Path
-from typing import Any, Optional
+from typing import Any, BinaryIO, Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.utils.tree import flatten_with_names, unflatten_like
 
-MAGIC = b"RPRCKPT1"
+MAGIC = b"RPRCKPT1"      # v1: header-first
+MAGIC2 = b"RPRCKPT2"     # v2: footer-last, absolute offsets, streamable
+TRAILER_LEN = 16         # <Q footer_len> + MAGIC2
+# Streaming granularity: CRC/write are chunked so a corrupted mmap'd page or a
+# slow sink never pins more than this much per step; views are zero-copy so
+# chunking costs no extra memory either way.
+CHUNK_BYTES = 4 << 20
 
 
-def tree_to_records(tree) -> list[tuple[str, np.ndarray]]:
-    out = []
-    for name, leaf in flatten_with_names(tree):
-        arr = np.asarray(jax.device_get(leaf))
-        out.append((name, arr))
-    return out
+class ChecksumError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# zero-copy leaf byte views
+# ---------------------------------------------------------------------------
+
+def as_byte_view(arr: np.ndarray) -> memoryview:
+    """Flat uint8 ``memoryview`` over ``arr``'s payload without copying.
+
+    Copies only if the array is non-contiguous (``ascontiguousarray``) — the
+    device_get snapshot path always produces contiguous arrays, so the hot
+    path is copy-free.  0-d arrays are promoted to shape (1,) views (their
+    logical shape is recorded separately by the caller).
+    """
+    arr = np.ascontiguousarray(arr)
+    return memoryview(arr.view(np.uint8).reshape(-1))
 
 
 def leaf_checksum(arr: np.ndarray) -> int:
-    return zlib.crc32(np.ascontiguousarray(arr).view(np.uint8).tobytes())
+    """CRC32 of a leaf's raw bytes, computed from a zero-copy view.
 
+    This is the single per-leaf CRC entry point for the save path: the
+    streaming writer accepts the values it returns via ``crcs=`` and never
+    recomputes them.
+    """
+    return zlib.crc32(as_byte_view(arr))
+
+
+# ---------------------------------------------------------------------------
+# v2: single-pass streaming writer
+# ---------------------------------------------------------------------------
+
+def write_shard_stream(fp: BinaryIO,
+                       records: list[tuple[str, np.ndarray]],
+                       meta: Optional[dict] = None,
+                       *,
+                       crcs: Optional[dict[str, int]] = None,
+                       chunk_bytes: int = CHUNK_BYTES) -> dict:
+    """Stream a v2 shard into ``fp`` in one pass; returns the footer dict.
+
+    Each leaf is written directly from a ``memoryview`` — no per-leaf
+    ``tobytes()`` copy and no whole-shard buffer.  If ``crcs`` maps a leaf
+    path to a precomputed CRC32 it is trusted verbatim (the manager computes
+    it once during the incremental diff); otherwise the CRC is folded in
+    chunk-by-chunk as the bytes stream out, still a single pass.
+    """
+    fp.write(MAGIC2)
+    offset = len(MAGIC2)
+    tensors = []
+    for name, arr in records:
+        arr = np.asarray(arr)
+        shape = list(arr.shape)          # before as_byte_view 0-d promotion
+        view = as_byte_view(arr)
+        nbytes = view.nbytes
+        crc = None if crcs is None else crcs.get(name)
+        if crc is None:
+            crc = 0
+            for start in range(0, nbytes, chunk_bytes):
+                chunk = view[start:start + chunk_bytes]
+                crc = zlib.crc32(chunk, crc)
+                fp.write(chunk)
+        else:
+            for start in range(0, nbytes, chunk_bytes):
+                fp.write(view[start:start + chunk_bytes])
+        tensors.append({
+            "path": name,
+            "dtype": str(arr.dtype),
+            "shape": shape,
+            "offset": offset,            # ABSOLUTE file offset (v2)
+            "nbytes": nbytes,
+            "crc32": crc,
+        })
+        offset += nbytes
+    footer = {"tensors": tensors, "meta": meta or {}, "format": 2}
+    raw = json.dumps(footer).encode()
+    fp.write(raw)
+    fp.write(struct.pack("<Q", len(raw)))
+    fp.write(MAGIC2)
+    return footer
+
+
+def write_shard_bytes_v2(records, meta=None, *, crcs=None) -> bytes:
+    """v2 shard as one bytes object (tests/tools; the hot path streams)."""
+    buf = io.BytesIO()
+    write_shard_stream(buf, records, meta, crcs=crcs)
+    return buf.getvalue()
+
+
+# ---------------------------------------------------------------------------
+# v1: legacy writer (kept verbatim so read-compat fixtures and the benchmark
+# baseline exercise the true seed byte layout)
+# ---------------------------------------------------------------------------
 
 def write_shard_bytes(records: list[tuple[str, np.ndarray]],
                       meta: Optional[dict] = None) -> bytes:
@@ -68,33 +172,115 @@ def write_shard_bytes(records: list[tuple[str, np.ndarray]],
     return buf.getvalue()
 
 
-def read_shard_bytes(data: bytes, *, verify: bool = True):
-    """Returns ({path: np.ndarray}, meta)."""
-    if data[:8] != MAGIC:
-        raise ValueError("bad checkpoint shard magic")
-    (hlen,) = struct.unpack("<I", data[8:12])
-    header = json.loads(data[12 : 12 + hlen].decode())
-    base = 12 + hlen
+# ---------------------------------------------------------------------------
+# readers: ranged (header + per-leaf) and whole-buffer, both formats
+# ---------------------------------------------------------------------------
+
+ReadAt = Callable[[int, int], bytes]     # (offset, nbytes) -> bytes
+
+
+def read_shard_header(read_at: ReadAt, size: int) -> dict:
+    """Parse the tensor index of a shard using only ranged reads.
+
+    ``read_at(offset, nbytes)`` is any positioned-read primitive (pread/mmap
+    slice/HTTP range).  Returns the header dict with every tensor ``offset``
+    normalized to an ABSOLUTE file offset regardless of format, so callers can
+    ranged-read leaves uniformly.
+    """
+    magic = bytes(read_at(0, 8))
+    if magic == MAGIC2:
+        if size < 8 + TRAILER_LEN:
+            raise ValueError("truncated v2 checkpoint shard")
+        tail = bytes(read_at(size - TRAILER_LEN, TRAILER_LEN))
+        if tail[8:] != MAGIC2:
+            raise ValueError("bad v2 checkpoint shard trailer")
+        (flen,) = struct.unpack("<Q", tail[:8])
+        if flen > size - 8 - TRAILER_LEN:
+            raise ValueError("bad v2 checkpoint footer length")
+        return json.loads(bytes(read_at(size - TRAILER_LEN - flen, flen)).decode())
+    if magic == MAGIC:
+        (hlen,) = struct.unpack("<I", bytes(read_at(8, 4)))
+        header = json.loads(bytes(read_at(12, hlen)).decode())
+        base = 12 + hlen                 # v1 offsets are data-relative
+        for t in header["tensors"]:
+            t["offset"] += base
+        header["format"] = 1
+        return header
+    raise ValueError("bad checkpoint shard magic")
+
+
+def leaf_from_bytes(t: dict, raw, *, verify: bool = True) -> np.ndarray:
+    """Materialize one tensor from its header entry + raw payload bytes."""
+    if verify and zlib.crc32(raw) != t["crc32"]:
+        raise ChecksumError(f"crc mismatch for tensor {t['path']}")
+    return np.frombuffer(raw, dtype=np.dtype(t["dtype"])).reshape(t["shape"])
+
+
+def read_shard_leaves(read_at: ReadAt, size: int,
+                      paths: Optional[list[str]] = None, *,
+                      verify: bool = True,
+                      header: Optional[dict] = None):
+    """Ranged read of selected leaves.  Returns ({path: np.ndarray}, meta).
+
+    ``paths=None`` reads every leaf.  Requested leaves that are adjacent in
+    the file are fetched with one coalesced read.  Works on both formats
+    (``read_shard_header`` normalizes offsets).
+    """
+    header = header or read_shard_header(read_at, size)
+    want = header["tensors"]
+    if paths is not None:
+        index = {t["path"]: t for t in want}
+        missing = [p for p in paths if p not in index]
+        if missing:
+            raise KeyError(f"leaves not in shard: {missing}")
+        want = sorted((index[p] for p in set(paths)), key=lambda t: t["offset"])
     out = {}
-    for t in header["tensors"]:
-        raw = data[base + t["offset"] : base + t["offset"] + t["nbytes"]]
-        if verify and zlib.crc32(raw) != t["crc32"]:
-            raise ChecksumError(f"crc mismatch for tensor {t['path']}")
-        arr = np.frombuffer(raw, dtype=np.dtype(t["dtype"])).reshape(t["shape"])
-        out[t["path"]] = arr
+    i = 0
+    while i < len(want):
+        j = i
+        while (j + 1 < len(want)
+               and want[j + 1]["offset"] == want[j]["offset"] + want[j]["nbytes"]):
+            j += 1                        # coalesce contiguous run
+        start = want[i]["offset"]
+        run = memoryview(read_at(start, want[j]["offset"] + want[j]["nbytes"] - start))
+        for t in want[i:j + 1]:
+            # zero-copy: leaves alias the coalesced run buffer (read-only)
+            raw = run[t["offset"] - start : t["offset"] - start + t["nbytes"]]
+            out[t["path"]] = leaf_from_bytes(t, raw, verify=verify)
+        i = j + 1
     return out, header["meta"]
 
 
-class ChecksumError(RuntimeError):
-    pass
+def read_shard_bytes(data: bytes, *, verify: bool = True):
+    """Whole-buffer parse (v1 or v2).  Returns ({path: np.ndarray}, meta)."""
+    def read_at(off: int, n: int) -> bytes:
+        if off + n > len(data):
+            raise ValueError("truncated checkpoint shard")
+        return data[off : off + n]
+    return read_shard_leaves(read_at, len(data), None, verify=verify)
+
+
+# ---------------------------------------------------------------------------
+# pytree + file conveniences
+# ---------------------------------------------------------------------------
+
+def tree_to_records(tree) -> list[tuple[str, np.ndarray]]:
+    out = []
+    for name, leaf in flatten_with_names(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        out.append((name, arr))
+    return out
 
 
 def write_shard(path: Path, records, meta=None) -> dict:
-    data = write_shard_bytes(records, meta)
+    """Stream a v2 shard to ``path`` atomically (tmp + rename)."""
+    path = Path(path)
     tmp = path.with_suffix(path.suffix + ".tmp")
-    tmp.write_bytes(data)
+    with open(tmp, "wb") as fp:
+        footer = write_shard_stream(fp, records, meta)
+        nbytes = fp.tell()
     tmp.rename(path)
-    return {"nbytes": len(data), "crc32": zlib.crc32(data)}
+    return {"nbytes": nbytes, "tensors": footer["tensors"]}
 
 
 def read_shard(path: Path, *, verify: bool = True):

@@ -8,18 +8,92 @@ is off (factor 0) everywhere except the benchmarks.
 
 Replication: a shard written at replication k lands in k distinct "node"
 directories of the tier; reads fall back across replicas on checksum failure
-(the paper: "redundantly storing checkpoint images").
+or I/O error (the paper: "redundantly storing checkpoint images").  The
+payload is serialized ONCE — the primary replica is written from the source
+bytes/stream and the remaining k-1 replicas are fanned out with
+``shutil.copyfile`` (kernel ``sendfile``/``copy_file_range`` on Linux), so
+replica count multiplies disk traffic but not CPU serialization work.
+
+Ranged access: ``get_range`` / ``read_shard_leaves`` serve sub-file reads via
+positional ``pread``-style access (one open + seeks), which is what lets the
+manager's incremental restore pull single leaves out of multi-GB shards.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
 import random
 import shutil
+import threading
 import time
 from pathlib import Path
-from typing import Optional
+from typing import BinaryIO, Callable, Optional
 
 from repro.checkpoint import serialization as SER
+
+
+class _FanoutSink:
+    """Write-once tee: chunks handed to ``write`` are streamed to every
+    replica file by a dedicated kernel-writer thread each.
+
+    Chunks are enqueued by reference (zero-copy for ``memoryview``s whose
+    backing buffers outlive the ``put_stream`` call, which holds the source
+    arrays).  Bounded queues give backpressure so a slow replica cannot make
+    the producer buffer the whole shard.
+    """
+
+    _CLOSE = object()
+
+    def __init__(self, paths: list[Path], queue_depth: int = 4):
+        self.nbytes = 0
+        self._queues = [queue.Queue(maxsize=queue_depth) for _ in paths]
+        self._errs: list[BaseException] = []
+        self._threads = [
+            threading.Thread(target=self._drain, args=(p, q), daemon=True,
+                             name=f"ckpt-fanout-{i}")
+            for i, (p, q) in enumerate(zip(paths, self._queues))
+        ]
+        for t in self._threads:
+            t.start()
+
+    def _drain(self, path: Path, q: queue.Queue) -> None:
+        try:
+            with open(path, "wb") as fp:
+                while True:
+                    chunk = q.get()
+                    if chunk is self._CLOSE:
+                        return
+                    fp.write(chunk)
+        except BaseException as e:  # noqa: BLE001 — re-raised on the producer
+            self._errs.append(e)
+            while q.get() is not self._CLOSE:   # unblock the producer
+                pass
+
+    def writable(self) -> bool:
+        return True
+
+    def write(self, chunk) -> int:
+        if self._errs:
+            raise self._errs[0]
+        for q in self._queues:
+            q.put(chunk)
+        n = len(chunk) if not isinstance(chunk, memoryview) else chunk.nbytes
+        self.nbytes += n
+        return n
+
+    def _join(self) -> None:
+        for q in self._queues:
+            q.put(self._CLOSE)
+        for t in self._threads:
+            t.join()
+
+    def finish(self) -> None:
+        self._join()
+        if self._errs:
+            raise self._errs[0]
+
+    def abort(self) -> None:
+        self._join()
 
 
 @dataclasses.dataclass
@@ -56,47 +130,180 @@ class TieredStore:
         t = spec.latency_s + nbytes / (spec.bandwidth_gbps * 1e9)
         time.sleep(t * self.sim_io_factor)
 
-    # ------------------------------------------------------------------
-    def put(self, tier: str, rel: str, data: bytes, *, replicas: int = 1) -> list[str]:
+    def _choose_nodes(self, tier: str, replicas: int) -> list[Path]:
         nodes = self._node_dirs(tier)
         replicas = min(replicas, len(nodes))
-        chosen = nodes[:replicas] if replicas == len(nodes) else random.sample(nodes, replicas)
-        written = []
-        for nd in chosen:
+        return nodes[:replicas] if replicas == len(nodes) else random.sample(nodes, replicas)
+
+    def _replicate(self, tier: str, primary: Path, rel: str,
+                   others: list[Path], written: list[str]) -> None:
+        """Fan the primary replica out with an OS-level copy (no re-serialize)."""
+        nbytes = primary.stat().st_size
+        for nd in others:
             p = nd / rel
             p.parent.mkdir(parents=True, exist_ok=True)
             tmp = p.with_suffix(p.suffix + ".tmp")
-            tmp.write_bytes(data)
+            shutil.copyfile(primary, tmp)   # sendfile/copy_file_range path
             tmp.rename(p)
-            self._simulate(tier, len(data))
+            self._simulate(tier, nbytes)
             written.append(str(p.relative_to(self.root)))
+
+    # ------------------------------------------------------------------
+    def put(self, tier: str, rel: str, data: bytes, *, replicas: int = 1) -> list[str]:
+        """Write ``data`` once, then copy-fan-out to the other replicas."""
+        chosen = self._choose_nodes(tier, replicas)
+        primary = chosen[0] / rel
+        primary.parent.mkdir(parents=True, exist_ok=True)
+        tmp = primary.with_suffix(primary.suffix + ".tmp")
+        tmp.write_bytes(data)
+        tmp.rename(primary)
+        self._simulate(tier, len(data))
+        written = [str(primary.relative_to(self.root))]
+        self._replicate(tier, primary, rel, chosen[1:], written)
         return written
 
-    def get(self, tier: str, rel: str) -> bytes:
-        """Read with replica fallback; raises FileNotFoundError if no replica."""
-        last_err: Exception | None = None
-        for nd in self._node_dirs(tier):
-            p = nd / rel
-            if not p.exists():
-                continue
-            data = p.read_bytes()
-            self._simulate(tier, len(data))
-            return data
-        raise FileNotFoundError(f"{tier}:{rel}") from last_err
+    def put_stream(self, tier: str, rel: str,
+                   write_fn: Callable[[BinaryIO], object], *,
+                   replicas: int = 1) -> list[str]:
+        """Stream a payload once into all k replica files.
 
-    def get_verified(self, tier: str, rel: str):
-        """Read + parse a shard, falling back across replicas on crc failure."""
-        errs = []
+        ``write_fn(sink)`` is invoked exactly once — typically
+        ``SER.write_shard_stream`` — so the payload is serialized a single
+        time and never exists as a whole in memory.  Each chunk the writer
+        emits is teed to one kernel-writer thread per replica; since both
+        ``file.write`` and ``zlib.crc32`` release the GIL, the producer's CRC
+        folding of chunk i+1 overlaps the disk writes of chunk i on every
+        replica (the pipelined analogue of write-once + ``copyfile`` fan-out,
+        minus the read-back).  Atomic per replica (tmp + rename-all at the
+        end, so no torn replica is ever visible).
+        """
+        chosen = self._choose_nodes(tier, replicas)
+        tmps, finals = [], []
+        for nd in chosen:
+            p = nd / rel
+            p.parent.mkdir(parents=True, exist_ok=True)
+            tmps.append(p.with_suffix(p.suffix + ".tmp"))
+            finals.append(p)
+        sink = _FanoutSink(tmps)
+        try:
+            write_fn(sink)
+            sink.finish()
+        except BaseException:
+            sink.abort()
+            for t in tmps:
+                t.unlink(missing_ok=True)
+            raise
+        for tmp, final in zip(tmps, finals):
+            tmp.rename(final)
+            self._simulate(tier, sink.nbytes)
+        return [str(p.relative_to(self.root)) for p in finals]
+
+    # ------------------------------------------------------------------
+    def _pread(self, path: Path, offset: int, nbytes: int) -> bytes:
+        """Positional read — the single choke point for all ranged I/O (tests
+        wrap/override it to count bytes actually fetched)."""
+        with open(path, "rb") as fp:
+            fp.seek(offset)
+            return fp.read(nbytes)
+
+    def get(self, tier: str, rel: str) -> bytes:
+        """Read with replica fallback; tries the next replica on ``OSError``
+        (torn node, evicted cache) and raises ``FileNotFoundError`` only when
+        no replica could be read."""
+        errs: list[tuple[str, str]] = []
         for nd in self._node_dirs(tier):
             p = nd / rel
             if not p.exists():
                 continue
             try:
                 data = p.read_bytes()
-                self._simulate(tier, len(data))
-                return SER.read_shard_bytes(data, verify=True)
-            except SER.ChecksumError as e:  # corrupted replica: try the next
+            except OSError as e:           # damaged replica: try the next
                 errs.append((str(p), str(e)))
+                continue
+            self._simulate(tier, len(data))
+            return data
+        suffix = f" (replica errors: {errs})" if errs else ""
+        raise FileNotFoundError(f"{tier}:{rel}{suffix}")
+
+    def size(self, tier: str, rel: str) -> int:
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            try:
+                return p.stat().st_size
+            except OSError:
+                continue
+        raise FileNotFoundError(f"{tier}:{rel}")
+
+    def get_range(self, tier: str, rel: str, offset: int, nbytes: int) -> bytes:
+        """Ranged read with replica fallback on ``OSError``/short read (a
+        truncated replica must not surface as silently-shorter data)."""
+        errs: list[tuple[str, str]] = []
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            if not p.exists():
+                continue
+            try:
+                data = self._pread(p, offset, nbytes)
+            except OSError as e:
+                errs.append((str(p), str(e)))
+                continue
+            if len(data) != nbytes:
+                errs.append((str(p), f"short read {len(data)}/{nbytes}"))
+                continue
+            self._simulate(tier, len(data))
+            return data
+        suffix = f" (replica errors: {errs})" if errs else ""
+        raise FileNotFoundError(f"{tier}:{rel}{suffix}")
+
+    def get_verified(self, tier: str, rel: str):
+        """Read + parse a whole shard, falling back across replicas on crc
+        failure.  Prefer ``read_shard_leaves`` when only some leaves are
+        needed — it reads strictly fewer bytes."""
+        return self.read_shard_leaves(tier, rel, None)
+
+    def read_shard_leaves(self, tier: str, rel: str,
+                          paths: Optional[list[str]] = None, *,
+                          expect_crcs: Optional[dict[str, int]] = None):
+        """Leaf-granular shard read: ({path: np.ndarray}, meta).
+
+        Fetches only the header/footer plus the byte ranges of the requested
+        ``paths`` (all leaves when ``None``).  A corrupted or unreadable
+        replica triggers fallback to the next one.  ``expect_crcs`` lets the
+        caller pin per-leaf CRCs (e.g. from a manifest): a mismatch against
+        the shard header is detected before any payload bytes are read.
+        """
+        errs = []
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            if not p.exists():
+                continue
+            read = 0
+
+            def read_at(off: int, n: int) -> bytes:
+                nonlocal read
+                data = self._pread(p, off, n)
+                if len(data) != n:
+                    raise SER.ChecksumError(f"short read in {p}")
+                read += n
+                return data
+
+            try:
+                header = SER.read_shard_header(read_at, p.stat().st_size)
+                if expect_crcs:
+                    by_path = {t["path"]: t for t in header["tensors"]}
+                    for path, crc in expect_crcs.items():
+                        t = by_path.get(path)
+                        if t is not None and t["crc32"] != crc:
+                            raise SER.ChecksumError(
+                                f"manifest crc mismatch: {path} in {rel}")
+                out = SER.read_shard_leaves(
+                    read_at, p.stat().st_size, paths, header=header)
+                self._simulate(tier, read)
+                return out
+            except (SER.ChecksumError, OSError, ValueError, KeyError) as e:
+                # KeyError: a parseable-but-stale replica missing a requested
+                # leaf must fall back like any other damaged replica
+                errs.append((str(p), repr(e)))
                 continue
         raise SER.ChecksumError(f"no intact replica for {tier}:{rel}: {errs}")
 

@@ -25,6 +25,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# jax >= 0.6 promotes shard_map to jax.shard_map and renames check_rep ->
+# check_vma; older jax ships it under experimental
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 
 def _block_attend(q, k, v, q_off, k_off, scale, causal):
     """One masked flash block in fp32.  q: (B,Sq,Hkv,G,D) k/v: (B,Sk,Hkv,D)."""
@@ -45,10 +54,15 @@ def _block_attend(q, k, v, q_off, k_off, scale, causal):
 
 
 def ring_attention_local(q, k, v, *, axis_name: str, scale=None,
-                         causal: bool = True):
+                         causal: bool = True, axis_size: Optional[int] = None):
     """Body to run under shard_map.  q/k/v: LOCAL shards (B, S/P, H|Hkv, D),
-    sequence sharded over ``axis_name``.  Returns local out (B, S/P, H, Dv)."""
-    P = jax.lax.axis_size(axis_name)
+    sequence sharded over ``axis_name``.  Returns local out (B, S/P, H, Dv).
+    ``axis_size`` is the static ring length; older jax has no
+    ``jax.lax.axis_size``, so the wrapper passes it from the mesh."""
+    if axis_size is not None:
+        P = axis_size
+    else:
+        P = jax.lax.axis_size(axis_name)
     idx = jax.lax.axis_index(axis_name)
     B, Sq, H, Dq = q.shape
     Hkv, Dv = k.shape[2], v.shape[-1]
@@ -95,10 +109,10 @@ def ring_attention(q, k, v, *, mesh, axis: str = "model", scale=None,
     bspec = baxes[0] if len(baxes) == 1 else (baxes if baxes else None)
     spec_q = P(bspec, axis, None, None)
     fn = functools.partial(ring_attention_local, axis_name=axis, scale=scale,
-                           causal=causal)
-    return jax.shard_map(
+                           causal=causal, axis_size=int(mesh.shape[axis]))
+    return _shard_map(
         fn, mesh=mesh,
         in_specs=(spec_q, spec_q, spec_q),
         out_specs=spec_q,
-        check_vma=False,
+        **{_CHECK_KW: False},
     )(q, k, v)
