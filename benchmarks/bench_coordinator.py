@@ -11,9 +11,12 @@ import numpy as np
 
 
 def run(results_dir: Path | None = None, worker_counts=(1, 4, 16, 64),
-        rounds: int = 5):
+        rounds: int = 5, smoke: bool = False):
     from repro.core.coordinator import CheckpointCoordinator
     from repro.core.worker import CkptClient
+
+    if smoke:
+        worker_counts, rounds = (1, 4), 2
 
     rows = []
     detail = {}

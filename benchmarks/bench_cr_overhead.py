@@ -63,8 +63,77 @@ class _RssSampler:
         return self.peak_mb - self.base_mb
 
 
+def run_restore_engine(payload_mb: int = 64, n_shards: int = 8,
+                       workers_list=(1, 2, 4, 8), repeats: int = 3,
+                       smoke: bool = False) -> dict:
+    """Parallel multi-shard restore engine: restore GB/s vs reader count
+    under the simulated shared-parallel-FS latency (per-op latency is what a
+    thread pool hides), plus the cold-vs-promoted restart contrast — the
+    paper's Fig.-2 container-image-cache effect as shared->local promotion."""
+    import os
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.store import TieredStore
+
+    if smoke:
+        payload_mb, workers_list, repeats = 8, (1, 4), 1
+    tmp_root = "/dev/shm" if os.path.isdir("/dev/shm") else None
+    rng = np.random.default_rng(0)
+    n_leaves = n_shards * 4
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:03d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+    payload_bytes = sum(a.nbytes for a in tree.values())
+    out: dict = {"payload_mb": payload_bytes / 1e6, "n_shards": n_shards}
+    with tempfile.TemporaryDirectory(dir=tmp_root) as d:
+        store = TieredStore(Path(d), sim_io_factor=1.0, seed=0)
+        for w in range(n_shards):
+            CheckpointManager(store, worker_id=w, num_workers=n_shards,
+                              replicas=1).save(1, tree)
+        CheckpointManager(store, num_workers=n_shards,
+                          replicas=1).commit(1, num_workers=n_shards)
+
+        curve: dict = {}
+        for wk in workers_list:
+            m = CheckpointManager(store, restore_workers=wk)
+            best = float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                m.restore(tree)
+                best = min(best, time.perf_counter() - t0)
+            curve[str(wk)] = {"wall_s": best,
+                              "gb_per_s": payload_bytes / best / 1e9,
+                              "tasks": (m.last_restore_stats or {}).get("tasks")}
+        out["restore_gbps_vs_workers_sim_shared"] = curve
+        hi = str(workers_list[-1])
+        out["parallel_restore_speedup"] = (curve["1"]["wall_s"]
+                                           / curve[hi]["wall_s"])
+
+        # restart curve: cold (shared FS) vs promoted (node-local tier)
+        m = CheckpointManager(store, promote="on_restore")
+        t0 = time.perf_counter()
+        m.restore(tree)
+        cold_s = time.perf_counter() - t0
+        m.wait_promotions()
+        m2 = CheckpointManager(store, promote="on_restore")
+        t0 = time.perf_counter()
+        m2.restore(tree)
+        promoted_s = time.perf_counter() - t0
+        out["restart_curve"] = {
+            "cold_shared_s": cold_s,
+            "promoted_local_s": promoted_s,
+            "promotion_speedup": cold_s / max(promoted_s, 1e-9),
+            "served_promoted": bool((m2.last_restore_stats or {}).get("promoted")),
+        }
+        m.close()
+        m2.close()
+    return out
+
+
 def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
-                n_leaves: int = 12, replicas: int = 2, repeats: int = 5) -> list[dict]:
+                n_leaves: int = 12, replicas: int = 2, repeats: int = 5,
+                smoke: bool = False) -> list[dict]:
     """Old-vs-new checkpoint I/O plane: save/restore GB/s + peak extra memory.
 
     legacy  = v1 writer (per-leaf ``tobytes`` + whole-shard BytesIO) + k full
@@ -85,6 +154,8 @@ def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
     from repro.checkpoint import serialization as SER
     from repro.checkpoint.store import TieredStore
 
+    if smoke:
+        payload_mb, repeats = 8, 2
     tmp_root = "/dev/shm" if os.path.isdir("/dev/shm") else None
     rng = np.random.default_rng(0)
     leaf_elems = payload_mb * (1 << 20) // 4 // n_leaves
@@ -165,6 +236,7 @@ def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
     results["save_peak_mem_ratio"] = (
         results["save_legacy"]["peak_buffered_mb"]
         / max(results["save_stream"]["peak_buffered_mb"], 1e-9))
+    results["restore_engine"] = eng = run_restore_engine(smoke=smoke)
 
     out_path = Path(__file__).resolve().parents[1] / "BENCH_ckpt_io.json"
     out_path.write_text(json.dumps(results, indent=1))
@@ -189,10 +261,29 @@ def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
         "derived": (f"save_speedup={results['save_speedup']:.2f}x "
                     f"peak_mem_ratio={results['save_peak_mem_ratio']:.1f}x"),
     })
+    for wk, r in eng["restore_gbps_vs_workers_sim_shared"].items():
+        rows.append({
+            "name": f"ckpt_restore_parallel_w{wk}",
+            "us_per_call": r["wall_s"] * 1e6,
+            "derived": (f"{r['gb_per_s']:.2f}GB/s tasks={r['tasks']} "
+                        f"vs_serial={eng['restore_gbps_vs_workers_sim_shared']['1']['wall_s']/r['wall_s']:.2f}x"),
+        })
+    rc = eng["restart_curve"]
+    rows.append({
+        "name": "ckpt_restore_promotion",
+        "us_per_call": rc["promoted_local_s"] * 1e6,
+        "derived": (f"cold={rc['cold_shared_s']*1e3:.1f}ms "
+                    f"promoted={rc['promoted_local_s']*1e3:.1f}ms "
+                    f"speedup={rc['promotion_speedup']:.1f}x "
+                    f"served_promoted={rc['served_promoted']}"),
+    })
     return rows
 
 
-def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8):
+def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8,
+        smoke: bool = False):
+    if smoke:
+        steps, ckpt_every = 6, 2
     from repro.checkpoint.manager import CheckpointManager
     from repro.checkpoint.store import TieredStore
     from repro.configs.base import get_config, reduced
@@ -288,7 +379,7 @@ def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8):
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "cr_overhead.json").write_text(json.dumps(out, indent=1))
-    rows.extend(run_ckpt_io(results_dir))
+    rows.extend(run_ckpt_io(results_dir, smoke=smoke))
     return rows
 
 

@@ -25,7 +25,7 @@ def _time(fn, *args, iters=3) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(results_dir: Path | None = None):
+def run(results_dir: Path | None = None, smoke: bool = False):
     from repro.checkpoint import serialization as SER
     from repro.kernels import ops, ref
     from repro.kernels.rwkv6_scan import wkv6_chunked_xla
@@ -35,13 +35,17 @@ def run(results_dir: Path | None = None):
     rng = np.random.default_rng(0)
     rows = []
 
+    # smoke mode (CI): same contrasts on toy sizes, just proving the
+    # benchmark paths execute end to end
+    S_attn = 256 if smoke else 2048
+    blk = 128 if smoke else 512
     # attention: naive (S^2 materialized) vs blockwise (flash-structured)
-    B, S, H, Dh = 1, 2048, 4, 64
+    B, S, H, Dh = 1, S_attn, 4, 64
     q = jnp.asarray(rng.standard_normal((B, S, H, Dh), np.float32))
     k = jnp.asarray(rng.standard_normal((B, S, H, Dh), np.float32))
     v = jnp.asarray(rng.standard_normal((B, S, H, Dh), np.float32))
     naive = jax.jit(lambda q, k, v: ref.attention(q, k, v, causal=True))
-    block = jax.jit(lambda q, k, v: causal_blockwise(q, k, v, block_q=512, block_k=512))
+    block = jax.jit(lambda q, k, v: causal_blockwise(q, k, v, block_q=blk, block_k=blk))
     tn, tb = _time(naive, q, k, v), _time(block, q, k, v)
     flops = 2 * 2 * B * H * S * S * Dh / 2  # causal
     rows.append({"name": "attn_naive_2k", "us_per_call": tn * 1e6,
@@ -50,7 +54,7 @@ def run(results_dir: Path | None = None):
                  "derived": f"{flops/tb/1e9:.1f}GFLOP/s speedup={tn/tb:.2f}x"})
 
     # SSD: sequential scan vs chunked
-    B, S, Hh, P, N = 1, 2048, 8, 64, 64
+    B, S, Hh, P, N = 1, (256 if smoke else 2048), 8, 64, 64
     x = jnp.asarray(rng.standard_normal((B, S, Hh, P), np.float32)) * 0.3
     dt = jnp.asarray(np.abs(rng.standard_normal((B, S, Hh))).astype(np.float32))
     Al = jnp.asarray(rng.standard_normal((Hh,)).astype(np.float32) * 0.3)
@@ -82,7 +86,8 @@ def run(results_dir: Path | None = None):
                  "derived": f"tokens/s={B*S/tc:.0f} speedup={ts/tc:.2f}x"})
 
     # checkpoint substrate throughput
-    arr = rng.standard_normal(16_000_000 // 4).astype(np.float32)  # 16 MB
+    nb = 2_000_000 if smoke else 16_000_000
+    arr = rng.standard_normal(nb // 4).astype(np.float32)
     t0 = time.perf_counter()
     data = SER.write_shard_bytes([("w", arr)])
     t_ser = time.perf_counter() - t0
@@ -94,7 +99,7 @@ def run(results_dir: Path | None = None):
     rows.append({"name": "ckpt_verify_read_16MB", "us_per_call": t_de * 1e6,
                  "derived": f"{len(data)/t_de/1e9:.2f}GB/s"})
 
-    words = jnp.asarray(rng.integers(0, 2**32, 4_000_000, dtype=np.uint32))
+    words = jnp.asarray(rng.integers(0, 2**32, nb // 4, dtype=np.uint32))
     ck = jax.jit(lambda w: ops.checksum(w))
     t_ck = _time(ck, words)
     rows.append({"name": "device_checksum_16MB", "us_per_call": t_ck * 1e6,

@@ -21,11 +21,14 @@ import numpy as np
 
 
 def run(results_dir: Path | None = None,
-        ranks_list=(1, 4, 16, 64), shard_mb: float = 4.0):
+        ranks_list=(1, 4, 16, 64), shard_mb: float = 4.0,
+        smoke: bool = False):
     from repro.checkpoint import serialization as SER
-    from repro.checkpoint.store import DEFAULT_TIERS, TieredStore
+    from repro.checkpoint.store import TieredStore
     import tempfile
 
+    if smoke:
+        ranks_list, shard_mb = (1, 4), 1.0
     rows = []
     detail = {}
     for tier in ("ram", "local", "shared"):
@@ -81,10 +84,57 @@ def run(results_dir: Path | None = None,
                     f"one_leaf={rr['one_leaf_s']*1e3:.1f}ms "
                     f"bytes={rr['one_leaf_bytes']}/{rr['shard_bytes']}"),
     })
+    detail["promoted_restore"] = pr = _promoted_restore_detail(shard_mb)
+    rows.append({
+        "name": "startup_promoted_restore",
+        "us_per_call": pr["promoted_s"] * 1e6,
+        "derived": (f"cold_shared={pr['cold_s']*1e3:.1f}ms "
+                    f"promoted_local={pr['promoted_s']*1e3:.1f}ms "
+                    f"speedup={pr['cold_s']/max(pr['promoted_s'],1e-9):.1f}x"),
+    })
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "startup.json").write_text(json.dumps(detail, indent=1))
     return rows
+
+
+def _promoted_restore_detail(shard_mb: float, n_shards: int = 4) -> dict:
+    """The paper's container-image-cache effect as tier promotion: a cold
+    restart reads every shard from the simulated shared parallel FS; after
+    ``promote=on_restore`` tees the shards into the node-local tier, the next
+    restart is served entirely node-locally."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.store import TieredStore
+
+    rng = np.random.default_rng(0)
+    elems = int(shard_mb * 1e6 // 4 // n_shards)
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_shards)}
+    with tempfile.TemporaryDirectory() as d:
+        store = TieredStore(Path(d), sim_io_factor=1.0, seed=0)
+        for w in range(n_shards):
+            CheckpointManager(store, worker_id=w, num_workers=n_shards,
+                              replicas=1).save(1, tree)
+        CheckpointManager(store, num_workers=n_shards,
+                          replicas=1).commit(1, num_workers=n_shards)
+
+        m = CheckpointManager(store, promote="on_restore")
+        t0 = time.perf_counter()
+        m.restore(tree)
+        cold_s = time.perf_counter() - t0
+        m.wait_promotions()
+        m2 = CheckpointManager(store, promote="on_restore")
+        t0 = time.perf_counter()
+        _, man = m2.restore(tree)
+        promoted_s = time.perf_counter() - t0
+        stats = m2.last_restore_stats or {}
+        m.close()
+        m2.close()
+    return {"cold_s": cold_s, "promoted_s": promoted_s,
+            "served_promoted": bool(stats.get("promoted")),
+            "step": man["step"], "n_shards": n_shards}
 
 
 def _ranged_restore_detail(shard_mb: float, n_leaves: int = 16) -> dict:

@@ -8,22 +8,32 @@
 """
 from __future__ import annotations
 
+import argparse
 import sys
 from pathlib import Path
 
-SRC = Path(__file__).resolve().parents[1] / "src"
-if str(SRC) not in sys.path:
-    sys.path.insert(0, str(SRC))
+ROOT = Path(__file__).resolve().parents[1]
+SRC = ROOT / "src"
+for p in (str(SRC), str(ROOT)):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-config mode for CI: exercise every benchmark "
+                         "path end to end in a couple of minutes; numbers "
+                         "are NOT representative, only crashes are failures")
+    args = ap.parse_args(argv)
+
     from benchmarks import bench_coordinator, bench_cr_overhead, bench_kernels, bench_startup
 
     rows = []
     for mod in (bench_kernels, bench_startup, bench_coordinator, bench_cr_overhead):
-        rows.extend(mod.run(RESULTS))
+        rows.extend(mod.run(RESULTS, smoke=args.smoke))
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -36,7 +36,9 @@ def make_session(ckpt_dir):
     pipe = SyntheticTokens(cfg, batch_size=4, seq_len=64, seed=0)
     templates = {"state": TS.abstract_train_state(cfg, oc)}
     axes = {"state": TS.state_logical_axes(cfg)}
-    init = lambda: TS.init_train_state(cfg, oc, jax.random.PRNGKey(0))
+    def init():
+        return TS.init_train_state(cfg, oc, jax.random.PRNGKey(0))
+
     return cfg, step_fn, crm, pipe, templates, axes, init
 
 

@@ -1,14 +1,21 @@
-"""Background checkpoint writer pool (beyond-paper optimization).
+"""Background checkpoint worker pools (beyond-paper optimization).
 
-The paper's DMTCP checkpoint is synchronous: user threads are quiesced for the
-whole image write (the CPU dips in its Fig. 4).  Here the quiesce only lasts
-for the device->host snapshot (double buffer); serialization + store writes
-run on a small pool of daemon threads overlapped with training.  A pool (not a
-single thread) lets independent saves — shards of consecutive steps, or the
-several worker shards a single process hosts in tests/simulation — stream
-concurrently: the CRC folding of one shard overlaps the kernel writes of
-another (within one shard the same overlap comes from the store's fan-out
-sink threads).
+``WorkPool`` is the shared primitive: a small pool of daemon threads with a
+bounded in-flight count — ``submit`` blocks once the bound is hit, which is
+the backpressure knob for everything the checkpoint plane runs off the
+training thread.  Two users:
+
+* ``AsyncWriter`` (save path): the paper's DMTCP checkpoint is synchronous —
+  user threads quiesce for the whole image write (the CPU dips in its
+  Fig. 4).  Here the quiesce only lasts for the device->host snapshot
+  (double buffer); serialization + store writes run on the pool overlapped
+  with training.  Every pending write pins a full host snapshot via its
+  closure, so the in-flight bound is a memory bound.
+* tier promotion (restore path): ``CheckpointManager`` tees restored shard
+  bytes into the node-local tier write-behind on a ``WorkPool`` so the
+  restore returns as soon as the state is materialized — the copy into the
+  container-image-cache-like tier never blocks the restart.
+
 ``wait()`` drains the queue — called before a requeue/exit so the last image
 is durable, and by the two-phase coordinator barrier before WRITTEN is sent.
 """
@@ -21,17 +28,20 @@ import traceback
 from typing import Callable, Optional
 
 
-class AsyncWriter:
-    def __init__(self, max_inflight: int = 3, workers: Optional[int] = None):
-        # ``max_inflight`` bounds TOTAL unfinished tasks (queued + executing).
-        # Every pending checkpoint write pins a full host snapshot via its
-        # closure, so this is the memory backpressure knob — the default
-        # matches the seed's bound (2 queued + 1 executing); ``submit`` blocks
-        # when the training loop outpaces the store.
-        if workers is None:
-            workers = max(2, min(4, (os.cpu_count() or 2) // 2))
+class WorkPool:
+    """Bounded-in-flight daemon thread pool.
+
+    ``max_inflight`` bounds TOTAL unfinished tasks (queued + executing);
+    ``submit`` blocks when the producer outpaces the consumers.  The first
+    task exception is re-raised on the producer thread at the next
+    ``submit``/``wait`` (tasks after a failure still run — each task must be
+    independently meaningful, which checkpoint writes and promotions are).
+    """
+
+    def __init__(self, max_inflight: int = 3, workers: int = 1,
+                 name: str = "ckpt-pool"):
         self._max_inflight = max(1, max_inflight)
-        workers = min(workers, self._max_inflight)
+        workers = min(max(1, workers), self._max_inflight)
         self._q: queue.Queue = queue.Queue()   # _inflight gate does the bounding
         self._err: Optional[BaseException] = None
         self._lock = threading.Lock()
@@ -39,7 +49,7 @@ class AsyncWriter:
         self._done = threading.Condition()
         self._closed = False
         self._threads = [
-            threading.Thread(target=self._run, daemon=True, name=f"ckpt-writer-{i}")
+            threading.Thread(target=self._run, daemon=True, name=f"{name}-{i}")
             for i in range(workers)
         ]
         for t in self._threads:
@@ -63,12 +73,27 @@ class AsyncWriter:
 
     def submit(self, fn: Callable[[], None]) -> None:
         if self._closed:
-            raise RuntimeError("AsyncWriter is closed")
+            raise RuntimeError(f"{type(self).__name__} is closed")
         self.raise_if_failed()
         with self._done:
             self._done.wait_for(lambda: self._inflight < self._max_inflight)
             self._inflight += 1
         self._q.put(fn)
+
+    def try_submit(self, fn: Callable[[], None]) -> bool:
+        """Non-blocking submit: False when the in-flight bound is reached.
+        For best-effort work (tier promotion) that must never apply
+        backpressure to the caller — dropping is the correct behavior for an
+        opportunistic cache."""
+        if self._closed:
+            raise RuntimeError(f"{type(self).__name__} is closed")
+        self.raise_if_failed()
+        with self._done:
+            if self._inflight >= self._max_inflight:
+                return False
+            self._inflight += 1
+        self._q.put(fn)
+        return True
 
     def wait(self, timeout: Optional[float] = None) -> None:
         with self._done:
@@ -79,14 +104,30 @@ class AsyncWriter:
         with self._lock:
             if self._err is not None:
                 err, self._err = self._err, None
-                raise RuntimeError("async checkpoint write failed") from err
+                raise RuntimeError("background checkpoint task failed") from err
 
     def close(self) -> None:
+        """Drain, stop the threads, then surface any task failure.  The
+        thread teardown runs even when a task failed — a raising ``close``
+        must not leak pool threads or leave the pool half-open."""
         if self._closed:
             return
-        self.wait()
-        self._closed = True
-        for _ in self._threads:
-            self._q.put(None)
-        for t in self._threads:
-            t.join(timeout=5)
+        try:
+            self.wait()
+        finally:
+            self._closed = True
+            for _ in self._threads:
+                self._q.put(None)
+            for t in self._threads:
+                t.join(timeout=5)
+
+
+class AsyncWriter(WorkPool):
+    """Save-path pool: the default in-flight bound matches the seed's memory
+    budget (2 queued + 1 executing host snapshots)."""
+
+    def __init__(self, max_inflight: int = 3, workers: Optional[int] = None):
+        if workers is None:
+            workers = max(2, min(4, (os.cpu_count() or 2) // 2))
+        super().__init__(max_inflight=max_inflight, workers=workers,
+                         name="ckpt-writer")

@@ -32,13 +32,16 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.async_writer import AsyncWriter
+from repro.checkpoint.async_writer import AsyncWriter, WorkPool
+from repro.checkpoint.restore_engine import ParallelRestorer
 from repro.checkpoint.store import TieredStore
+
+PROMOTE_POLICIES = ("off", "on_restore", "eager")
 
 
 def _step_dir(prefix: str, step: int) -> str:
@@ -50,9 +53,16 @@ class CheckpointManager:
                  worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
                  mode: str = "sync", incremental: bool = False,
                  keep_last: int = 3, prefix: str = "ckpt",
-                 shard_format: int = 2):
+                 shard_format: int = 2, restore_workers: int = 0,
+                 promote: str = "off", promote_tier: str = "local"):
         assert mode in ("sync", "async")
         assert shard_format in (1, 2)      # 1 = legacy writer (compat tests)
+        assert promote in PROMOTE_POLICIES
+        # the promote tier is a CACHE whose invalidation deletes files —
+        # pointing it at the primary tier would let a stale-cache cleanup
+        # destroy the committed checkpoints themselves
+        assert promote == "off" or promote_tier != tier, \
+            "promote_tier must differ from the primary checkpoint tier"
         self.store = store
         self.tier = tier
         self.worker_id = worker_id
@@ -63,7 +73,21 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.prefix = prefix
         self.shard_format = shard_format
+        # restore_workers: 0 = auto-sized pool, 1 = serial (legacy loop, kept
+        # as the benchmark baseline), N = pool of N readers
+        self.restore_workers = restore_workers
+        self.promote = promote
+        self.promote_tier = promote_tier
         self._writer = AsyncWriter() if mode == "async" else None
+        # write-behind promotion: one copier, small bound — a restore returns
+        # as soon as state is materialized; the tee into the node-local tier
+        # trails it (and at most two promotions can be pending)
+        self._promoter = (WorkPool(max_inflight=2, workers=1,
+                                   name="ckpt-promote")
+                          if promote != "off" else None)
+        self.promote_failures: list[str] = []
+        self.promote_skipped = 0           # promotions dropped, pool was busy
+        self.last_restore_stats: Optional[dict] = None
         self._prev_manifest: Optional[dict] = None
 
     # ------------------------------------------------------------------
@@ -198,6 +222,10 @@ class CheckpointManager:
                        json.dumps(manifest).encode(), replicas=self.replicas)
         self._prev_manifest = manifest
         self.gc()
+        if self.promote == "eager":
+            # keep the node-local cache tracking the newest commit so a
+            # restart on this node never touches the shared tier
+            self._schedule_promotion(manifest)
         return manifest
 
     # ------------------------------------------------------------------
@@ -214,35 +242,188 @@ class CheckpointManager:
         raw = self.store.get(self.tier, f"{_step_dir(self.prefix, step)}/MANIFEST.json")
         return json.loads(raw.decode())
 
+    @staticmethod
+    def _by_file(manifest: dict) -> dict[str, list[dict]]:
+        by_file: dict[str, list[dict]] = {}
+        for e in manifest["leaves"]:
+            by_file.setdefault(e["file"], []).append(e)
+        return by_file
+
+    def _restore_files(self, tier: str, manifest: dict):
+        """Fetch every manifest-referenced leaf from ``tier``.  Returns
+        ({leaf_path: array}, stats).  ``restore_workers=1`` keeps the serial
+        per-shard loop (the pre-engine path, and the benchmark baseline);
+        anything else fans out through the ParallelRestorer."""
+        by_file = self._by_file(manifest)
+        if self.restore_workers == 1:
+            named: dict[str, np.ndarray] = {}
+            for rel, ents in by_file.items():
+                tensors, _ = self.store.read_shard_leaves(
+                    tier, rel, [e["path"] for e in ents],
+                    expect_crcs={e["path"]: e["crc32"] for e in ents})
+                for e in ents:
+                    named[e["path"]] = tensors[e["path"]]
+            return named, {"mode": "serial", "tier": tier,
+                           "files": len(by_file), "workers": 1}
+        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        named, st = engine.restore(tier, by_file)
+        return named, {"mode": "parallel", "tier": tier, **st.as_dict()}
+
     def restore(self, template, step: Optional[int] = None):
         """Returns (host_tree, manifest).
 
         Leaf-granular: for each shard file the manifest references, only the
-        byte ranges of the referenced leaves are fetched (``read_shard_leaves``
-        coalesces adjacent ones) — an incremental manifest that points one leaf
-        at an old base shard reads just that leaf, not the whole base file.
-        Per-leaf CRCs are pinned to the manifest values and payload bytes are
-        verified against them; replica fallback happens inside the store.
-        Reads both shard formats (v1 seed files and v2).
+        byte ranges of the referenced leaves are fetched, coalesced into
+        contiguous runs and (by default) issued in parallel, largest-first,
+        across a read pool bounded by each tier's concurrency spec — see
+        restore_engine.py.  Per-leaf CRCs are pinned to the manifest values
+        and payload bytes are verified against them; replica fallback is
+        per-range.  Reads both shard formats (v1 seed files and v2).
+
+        With ``promote != "off"`` a restore served from the primary tier is
+        teed write-behind into ``promote_tier`` so the NEXT restart on this
+        node reads node-local bytes only (the paper's container-image-cache
+        effect); a restore whose step is already promoted is served entirely
+        from the promoted copy.
         """
         all_steps = self.steps()
         if not all_steps:
             raise FileNotFoundError("no committed checkpoint found")
         step = all_steps[-1] if step is None else step
-        manifest = self.read_manifest(step)
-        by_file: dict[str, list[dict]] = {}
-        for e in manifest["leaves"]:
-            by_file.setdefault(e["file"], []).append(e)
-        named: dict[str, np.ndarray] = {}
-        for rel, ents in by_file.items():
-            tensors, _ = self.store.read_shard_leaves(
-                self.tier, rel, [e["path"] for e in ents],
-                expect_crcs={e["path"]: e["crc32"] for e in ents})
-            for e in ents:
-                named[e["path"]] = tensors[e["path"]]
+        named = manifest = stats = None
+        if self._promoter is not None:
+            got = self._restore_promoted(step)
+            if got is not None:
+                named, manifest, stats = got
+        if named is None:
+            manifest = self.read_manifest(step)
+            named, stats = self._restore_files(self.tier, manifest)
+            self._schedule_promotion(manifest)
         tree = SER.restore_tree(template, named)
         self._prev_manifest = manifest
+        self.last_restore_stats = stats
         return tree, manifest
+
+    # -- shared -> local tier promotion --------------------------------
+    def _marker_rel(self) -> str:
+        return f"{self.prefix}/PROMOTED.json"
+
+    def _read_marker(self) -> Optional[dict]:
+        try:
+            return json.loads(
+                self.store.get(self.promote_tier, self._marker_rel()).decode())
+        except (FileNotFoundError, ValueError):
+            return None
+
+    def invalidate_promoted(self) -> None:
+        """Drop the promoted-tier cache (marker first, so a concurrent reader
+        never trusts files being deleted under it)."""
+        self.store.delete_file(self.promote_tier, self._marker_rel())
+        self.store.delete_prefix(self.promote_tier, self.prefix)
+
+    def _schedule_promotion(self, manifest: dict) -> None:
+        """Best-effort, never blocking: a busy promotion pool means this
+        promotion is dropped (counted), not that the training thread waits
+        on a cache copy."""
+        if self._promoter is None:
+            return
+        if not self._promoter.try_submit(
+                lambda man=manifest: self._promote_now(man)):
+            self.promote_skipped += 1
+
+    def _restore_promoted(self, step: int):
+        """Serve a restore entirely from the promoted tier when its cached
+        step matches.  A stale marker (a newer step committed since the
+        promotion — manifest-driven invalidation) just misses: the cached
+        FILES are deliberately left in place so the follow-up promotion can
+        reuse still-referenced incremental base shards and only copy the
+        delta; ``_promote_now`` retires whatever the new manifest no longer
+        references."""
+        marker = self._read_marker()
+        if marker is None or marker.get("step") != step:
+            return None
+        try:
+            raw = self.store.get(
+                self.promote_tier, f"{_step_dir(self.prefix, step)}/MANIFEST.json")
+            manifest = json.loads(raw.decode())
+            if manifest.get("step") != step:
+                raise ValueError("promoted manifest step mismatch")
+            named, stats = self._restore_files(self.promote_tier, manifest)
+            stats["promoted"] = True
+            return named, manifest, stats
+        except (FileNotFoundError, ValueError, KeyError, OSError,
+                SER.ChecksumError):
+            # damaged/evicted cache: drop it and fall back to the source tier
+            self.invalidate_promoted()
+            return None
+
+    def _promote_now(self, manifest: dict) -> None:
+        """Write-behind tee of one committed checkpoint into the promote
+        tier.  Incremental-friendly: shard files the previous marker already
+        promoted are kept in place (an unchanged multi-GB base shard is never
+        re-copied per commit); only missing files are OS-copied and
+        CRC-verified against the manifest, and files the new manifest no
+        longer references are retired.  The marker comes off FIRST and is
+        republished LAST (two-phase — a torn promotion is invisible and gets
+        cleaned by the next one).  Failures are recorded, never raised:
+        promotion is an opportunistic cache."""
+        step = manifest["step"]
+        marker = self._read_marker()
+        cached = marker.get("step") if marker is not None else None
+        if cached == step:
+            return
+        if cached is not None and cached > step and cached in self.steps():
+            return      # never clobber a warmer cache with an older step
+        try:
+            by_file = self._by_file(manifest)
+            have = set(marker.get("files") or []) if marker is not None else set()
+            self.store.delete_file(self.promote_tier, self._marker_rel())
+            if cached is not None:
+                self.store.delete_file(
+                    self.promote_tier,
+                    f"{_step_dir(self.prefix, cached)}/MANIFEST.json")
+            for rel in have - set(by_file):
+                self.store.delete_file(self.promote_tier, rel)
+            for rel, ents in by_file.items():
+                if rel in have and self.store.exists(self.promote_tier, rel):
+                    continue        # already promoted + CRC-verified
+                self.store.copy_file(self.tier, rel, self.promote_tier)
+                self.store.read_shard_leaves(
+                    self.promote_tier, rel, [e["path"] for e in ents],
+                    expect_crcs={e["path"]: e["crc32"] for e in ents})
+            sdir = _step_dir(self.prefix, step)
+            self.store.put(self.promote_tier, f"{sdir}/MANIFEST.json",
+                           json.dumps(manifest).encode(), replicas=1)
+            self.store.put(
+                self.promote_tier, self._marker_rel(),
+                json.dumps({"step": step, "files": sorted(by_file),
+                            "promoted_at": time.time()}).encode(),
+                replicas=1)
+        except Exception as e:  # noqa: BLE001 — cache miss, not a failure
+            self.promote_failures.append(f"step {step}: {e!r}")
+            self.invalidate_promoted()
+
+    def prefetch_latest(self, step: Optional[int] = None) -> Optional[int]:
+        """Eager promotion: schedule a write-behind copy of the latest (or
+        given) committed step into the promote tier without restoring it —
+        call at job start so the restart after the NEXT preemption is served
+        node-locally.  Returns the step scheduled, or None."""
+        if self._promoter is None:
+            return None
+        all_steps = self.steps()
+        if not all_steps:
+            return None
+        step = all_steps[-1] if step is None else step
+        if (marker := self._read_marker()) is not None \
+                and marker.get("step") == step:
+            return step                    # already cached: skip the I/O
+        manifest = self.read_manifest(step)
+        self._schedule_promotion(manifest)
+        return step
+
+    def wait_promotions(self, timeout: Optional[float] = None) -> None:
+        if self._promoter is not None:
+            self._promoter.wait(timeout)
 
     # ------------------------------------------------------------------
     def gc(self) -> None:
@@ -283,5 +464,9 @@ class CheckpointManager:
                 self.store.delete_prefix(self.tier, sdir)
 
     def close(self) -> None:
-        if self._writer is not None:
-            self._writer.close()
+        try:
+            if self._writer is not None:
+                self._writer.close()
+        finally:
+            if self._promoter is not None:
+                self._promoter.close()

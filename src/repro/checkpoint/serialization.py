@@ -31,7 +31,7 @@ import json
 import struct
 import zlib
 from pathlib import Path
-from typing import Any, BinaryIO, Callable, Optional
+from typing import BinaryIO, Callable, Optional
 
 import jax
 import numpy as np
@@ -216,6 +216,59 @@ def leaf_from_bytes(t: dict, raw, *, verify: bool = True) -> np.ndarray:
     return np.frombuffer(raw, dtype=np.dtype(t["dtype"])).reshape(t["shape"])
 
 
+def select_leaves(header: dict, paths: Optional[list[str]]) -> list[dict]:
+    """Header entries for the requested ``paths`` (all when ``None``), sorted
+    by file offset.  Raises ``KeyError`` on a leaf the shard doesn't hold —
+    a stale replica must fall back like any damaged one."""
+    want = header["tensors"]
+    if paths is None:
+        return sorted(want, key=lambda t: t["offset"])
+    index = {t["path"]: t for t in want}
+    missing = [p for p in paths if p not in index]
+    if missing:
+        raise KeyError(f"leaves not in shard: {missing}")
+    return sorted((index[p] for p in set(paths)), key=lambda t: t["offset"])
+
+
+def coalesce_runs(want: list[dict], *,
+                  max_run_bytes: Optional[int] = None) -> list[list[dict]]:
+    """Group offset-sorted leaf entries into contiguous runs, each servable
+    by ONE ranged read.  ``max_run_bytes`` additionally splits a run at leaf
+    boundaries once it grows past the cap — how the parallel restore engine
+    turns one large shard into several same-sized range tasks (a single
+    oversized leaf still stays whole: CRC verification needs its full bytes).
+    """
+    runs: list[list[dict]] = []
+    cur: list[dict] = []
+    cur_bytes = 0
+    for t in want:
+        contiguous = cur and t["offset"] == cur[-1]["offset"] + cur[-1]["nbytes"]
+        fits = max_run_bytes is None or not cur or cur_bytes + t["nbytes"] <= max_run_bytes
+        if not (contiguous and fits):
+            if cur:
+                runs.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(t)
+        cur_bytes += t["nbytes"]
+    if cur:
+        runs.append(cur)
+    return runs
+
+
+def read_run(read_at: ReadAt, run: list[dict], out: dict, *,
+             verify: bool = True) -> int:
+    """Fetch one coalesced run with a single ranged read and materialize its
+    leaves into ``out`` (zero-copy: leaves alias the run buffer, read-only).
+    Returns the number of bytes read."""
+    start = run[0]["offset"]
+    nbytes = run[-1]["offset"] + run[-1]["nbytes"] - start
+    buf = memoryview(read_at(start, nbytes))
+    for t in run:
+        raw = buf[t["offset"] - start : t["offset"] - start + t["nbytes"]]
+        out[t["path"]] = leaf_from_bytes(t, raw, verify=verify)
+    return nbytes
+
+
 def read_shard_leaves(read_at: ReadAt, size: int,
                       paths: Optional[list[str]] = None, *,
                       verify: bool = True,
@@ -227,27 +280,10 @@ def read_shard_leaves(read_at: ReadAt, size: int,
     (``read_shard_header`` normalizes offsets).
     """
     header = header or read_shard_header(read_at, size)
-    want = header["tensors"]
-    if paths is not None:
-        index = {t["path"]: t for t in want}
-        missing = [p for p in paths if p not in index]
-        if missing:
-            raise KeyError(f"leaves not in shard: {missing}")
-        want = sorted((index[p] for p in set(paths)), key=lambda t: t["offset"])
-    out = {}
-    i = 0
-    while i < len(want):
-        j = i
-        while (j + 1 < len(want)
-               and want[j + 1]["offset"] == want[j]["offset"] + want[j]["nbytes"]):
-            j += 1                        # coalesce contiguous run
-        start = want[i]["offset"]
-        run = memoryview(read_at(start, want[j]["offset"] + want[j]["nbytes"] - start))
-        for t in want[i:j + 1]:
-            # zero-copy: leaves alias the coalesced run buffer (read-only)
-            raw = run[t["offset"] - start : t["offset"] - start + t["nbytes"]]
-            out[t["path"]] = leaf_from_bytes(t, raw, verify=verify)
-        i = j + 1
+    want = select_leaves(header, paths)
+    out: dict = {}
+    for run in coalesce_runs(want):
+        read_run(read_at, run, out, verify=verify)
     return out, header["meta"]
 
 

@@ -20,6 +20,7 @@ manager's incremental restore pull single leaves out of multi-GB shards.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import queue
 import random
@@ -102,21 +103,30 @@ class TierSpec:
     bandwidth_gbps: float      # simulated sequential bandwidth
     latency_s: float           # simulated per-op latency
     nodes: int = 1             # distinct failure domains within the tier
+    concurrency: int = 0       # max in-flight restore reads (0 = unbounded)
 
 
 DEFAULT_TIERS = {
-    "ram": TierSpec("ram", 40.0, 0.00005, nodes=1),
-    "local": TierSpec("local", 3.0, 0.0005, nodes=1),
-    "shared": TierSpec("shared", 1.0, 0.02, nodes=8),
+    "ram": TierSpec("ram", 40.0, 0.00005, nodes=1, concurrency=16),
+    "local": TierSpec("local", 3.0, 0.0005, nodes=1, concurrency=4),
+    "shared": TierSpec("shared", 1.0, 0.02, nodes=8, concurrency=8),
 }
 
 
 class TieredStore:
     def __init__(self, root: Path, tiers: Optional[dict] = None,
-                 sim_io_factor: float = 0.0):
+                 sim_io_factor: float = 0.0,
+                 rng: Optional[random.Random] = None,
+                 seed: Optional[int] = None):
         self.root = Path(root)
         self.tiers = tiers or dict(DEFAULT_TIERS)
         self.sim_io_factor = sim_io_factor
+        # Replica placement is randomized; an injectable RNG (or just a seed)
+        # makes placement deterministic for tests/CI.  Never the module-level
+        # ``random`` — a seeded test elsewhere must not change our placement.
+        self._rng = rng if rng is not None else random.Random(seed)
+        self._sems: dict[str, threading.BoundedSemaphore] = {}
+        self._sems_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _node_dirs(self, tier: str) -> list[Path]:
@@ -133,7 +143,20 @@ class TieredStore:
     def _choose_nodes(self, tier: str, replicas: int) -> list[Path]:
         nodes = self._node_dirs(tier)
         replicas = min(replicas, len(nodes))
-        return nodes[:replicas] if replicas == len(nodes) else random.sample(nodes, replicas)
+        return nodes[:replicas] if replicas == len(nodes) else self._rng.sample(nodes, replicas)
+
+    def tier_slots(self, tier: str):
+        """Context manager bounding in-flight reads against ``tier`` to the
+        spec's ``concurrency`` (the restore engine acquires one slot per
+        ranged read; unbounded tiers return a no-op)."""
+        spec = self.tiers[tier]
+        if not spec.concurrency:
+            return contextlib.nullcontext()
+        with self._sems_lock:
+            sem = self._sems.get(tier)
+            if sem is None:
+                sem = self._sems[tier] = threading.BoundedSemaphore(spec.concurrency)
+        return sem
 
     def _replicate(self, tier: str, primary: Path, rel: str,
                    others: list[Path], written: list[str]) -> None:
@@ -206,6 +229,41 @@ class TieredStore:
             fp.seek(offset)
             return fp.read(nbytes)
 
+    def replica_paths(self, tier: str, rel: str) -> list[Path]:
+        """Existing replica files for ``rel``, primary-placement order.  The
+        restore engine plans against the first parseable one and falls back
+        across the rest per ranged read."""
+        return [nd / rel for nd in self._node_dirs(tier) if (nd / rel).exists()]
+
+    def pread(self, tier: str, path: Path, offset: int, nbytes: int) -> bytes:
+        """Public positional read against a known replica file, with the
+        tier's simulated I/O cost applied.  Raises ``OSError`` on a short
+        read so a truncated replica triggers fallback, never silent loss."""
+        data = self._pread(path, offset, nbytes)
+        if len(data) != nbytes:
+            raise OSError(f"short read {len(data)}/{nbytes} in {path}")
+        self._simulate(tier, nbytes)
+        return data
+
+    def copy_file(self, src_tier: str, rel: str, dst_tier: str,
+                  *, src_path: Optional[Path] = None) -> Path:
+        """OS-copy one intact-looking replica of ``src_tier:rel`` into the
+        primary node of ``dst_tier`` (tmp + rename, so no torn copy is ever
+        visible).  This is the tier-promotion primitive — the caller verifies
+        CRCs on the copy before publishing any marker that references it."""
+        if src_path is None:
+            candidates = self.replica_paths(src_tier, rel)
+            if not candidates:
+                raise FileNotFoundError(f"{src_tier}:{rel}")
+            src_path = candidates[0]
+        dst = self._node_dirs(dst_tier)[0] / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        tmp = dst.with_suffix(dst.suffix + ".tmp")
+        shutil.copyfile(src_path, tmp)      # sendfile/copy_file_range path
+        tmp.rename(dst)
+        self._simulate(dst_tier, dst.stat().st_size)
+        return dst
+
     def get(self, tier: str, rel: str) -> bytes:
         """Read with replica fallback; tries the next replica on ``OSError``
         (torn node, evicted cache) and raises ``FileNotFoundError`` only when
@@ -277,14 +335,14 @@ class TieredStore:
             p = nd / rel
             if not p.exists():
                 continue
-            read = 0
 
             def read_at(off: int, n: int) -> bytes:
-                nonlocal read
+                # per-op simulated latency (same accounting as the parallel
+                # engine's ``pread``, so serial-vs-parallel timings compare)
                 data = self._pread(p, off, n)
                 if len(data) != n:
                     raise SER.ChecksumError(f"short read in {p}")
-                read += n
+                self._simulate(tier, n)
                 return data
 
             try:
@@ -296,10 +354,8 @@ class TieredStore:
                         if t is not None and t["crc32"] != crc:
                             raise SER.ChecksumError(
                                 f"manifest crc mismatch: {path} in {rel}")
-                out = SER.read_shard_leaves(
+                return SER.read_shard_leaves(
                     read_at, p.stat().st_size, paths, header=header)
-                self._simulate(tier, read)
-                return out
             except (SER.ChecksumError, OSError, ValueError, KeyError) as e:
                 # KeyError: a parseable-but-stale replica missing a requested
                 # leaf must fall back like any other damaged replica

@@ -8,7 +8,6 @@ registry maps ``--arch <id>`` to it.  ``reduced()`` derives the CPU-smoke-test v
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 # ----------------------------------------------------------------------------------
 # Block kinds understood by repro.models.blocks

@@ -18,7 +18,6 @@ file, and returns "exit".  Periodic checkpoints happen every
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 from repro.checkpoint.manager import CheckpointManager
@@ -26,7 +25,7 @@ from repro.core.manifest import capture_manifest, verify_manifest
 from repro.core.requeue import RequeueFile, WalltimeTracker
 from repro.core.signals import SignalTrap
 from repro.core.virtualization import fetch_tree, place_tree
-from repro.core.worker import CkptClient, InlineCoordinator
+from repro.core.worker import InlineCoordinator
 
 
 class CRManager:
@@ -60,6 +59,13 @@ class CRManager:
             state = init_fn()
             self.log("[cr] no checkpoint found — cold start")
             return state, None, 0
+        stats = getattr(self.ckpt, "last_restore_stats", None)
+        if stats:
+            src = "promoted " + stats["tier"] if stats.get("promoted") \
+                else stats["tier"]
+            self.log(f"[cr] restore engine: tier={src} mode={stats['mode']} "
+                     f"workers={stats.get('workers')} "
+                     f"tasks={stats.get('tasks', stats.get('files'))}")
         meta = manifest.get("meta", {})
         if meta.get("run_manifest"):
             verify_manifest(meta["run_manifest"], cfg=self.cfg, log=self.log)
@@ -129,5 +135,7 @@ class CRManager:
             self.log(f"[cr] requeue recorded: {rec}")
 
     def close(self) -> None:
-        self.ckpt.close()
-        self.client.close()
+        try:
+            self.ckpt.close()
+        finally:
+            self.client.close()   # BYE must go out even if a write failed

@@ -9,7 +9,6 @@ batch k after a restore is bit-identical to batch k of an uninterrupted run
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import numpy as np
 

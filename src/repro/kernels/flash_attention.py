@@ -40,7 +40,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     # skip blocks strictly above the causal diagonal
     visible = (not causal) or (k_start <= q_start + block_q - 1)
 
-    @pl.when(k_start <= q_start + block_q - 1 if causal else True)
+    @pl.when(visible)
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, Dq)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, Dq)

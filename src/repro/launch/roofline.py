@@ -27,7 +27,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.configs.base import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.configs.base import SHAPES, get_config
 
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip

@@ -24,7 +24,6 @@ import time
 from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.store import TieredStore
@@ -56,6 +55,15 @@ def build_argparser():
     ap.add_argument("--ckpt-mode", default="sync", choices=["sync", "async"])
     ap.add_argument("--ckpt-incremental", action="store_true")
     ap.add_argument("--ckpt-replicas", type=int, default=1)
+    ap.add_argument("--ckpt-promote", default="off",
+                    choices=["off", "on_restore", "eager"],
+                    help="tee restored/committed checkpoints into the "
+                         "node-local tier so the next restart on this node "
+                         "skips the shared filesystem")
+    ap.add_argument("--ckpt-promote-tier", default="local",
+                    choices=["ram", "local"])
+    ap.add_argument("--restore-workers", type=int, default=0,
+                    help="parallel restore read pool size (0=auto, 1=serial)")
     ap.add_argument("--interval-steps", type=int, default=0)
     ap.add_argument("--walltime", type=float, default=0.0)
     ap.add_argument("--margin", type=float, default=5.0)
@@ -90,7 +98,9 @@ def main(argv=None) -> int:
     ckpt = CheckpointManager(
         store, worker_id=args.worker_id, num_workers=args.num_workers,
         replicas=args.ckpt_replicas, mode=args.ckpt_mode,
-        incremental=args.ckpt_incremental)
+        incremental=args.ckpt_incremental,
+        restore_workers=args.restore_workers,
+        promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier)
 
     if args.coordinator:
         host, port = args.coordinator.rsplit(":", 1)

@@ -108,7 +108,6 @@ def mla_spec(cfg: ModelConfig) -> dict:
 
 def _mla_q(p, cfg: ModelConfig, x, positions, dt):
     B, S, _ = x.shape
-    H = cfg.num_heads
     nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
     if cfg.q_lora_rank:
         cq = L.rms_norm(p["q_norm"], L.linear(p["wq_a"], x, dt), cfg.norm_eps)

@@ -9,8 +9,7 @@ leading layer dim, and are scanned through during decode.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -397,7 +396,6 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_seq: int, *, impl=None,
         if dst.shape == src.shape:
             return src.astype(dst.dtype)
         # sequence-indexed buffers: pad the prefill entries into [0:S]
-        idx = dst.ndim - src.ndim  # 0
         start = (0,) * dst.ndim
         return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
 

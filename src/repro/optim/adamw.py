@@ -8,7 +8,6 @@ is in use.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,10 @@ class OptConfig:
 
 def init_opt_state(params, oc: OptConfig) -> dict:
     dt = jnp.dtype(oc.moment_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {"m": tree_map(zeros, params), "v": tree_map(zeros, params)}
 
 

@@ -7,7 +7,6 @@ objects through every layer signature.
 from __future__ import annotations
 
 from contextvars import ContextVar
-from typing import Optional
 
 _MESH = ContextVar("repro_mesh", default=None)
 _RULES = ContextVar("repro_rules", default=None)

@@ -14,7 +14,6 @@ the data axis, TP = heads/mlp/vocab dims on the model axis, EP = expert dim on
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Sequence
 
 import jax

@@ -19,7 +19,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.layers import use_shard_resolver
 from repro.parallel.context import use_mesh_context
-from repro.parallel.mesh_rules import Rules, batch_logical_axes
+from repro.parallel.mesh_rules import Rules
 
 tree_map = jax.tree_util.tree_map
 

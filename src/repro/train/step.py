@@ -6,7 +6,6 @@ substrate can serialize it without bespoke types.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -47,8 +46,9 @@ def init_train_state(cfg: ModelConfig, oc: adamw.OptConfig, key) -> dict:
 def state_shardings(cfg: ModelConfig, oc: adamw.OptConfig, rules: Rules):
     ax = state_logical_axes(cfg)
     ab = abstract_train_state(cfg, oc)
-    is_axes_leaf = lambda x: isinstance(x, tuple) and all(
-        isinstance(e, (str, type(None))) for e in x)
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
     return tree_map(
         lambda a, s: rules.sharding(a, s.shape), ax, ab, is_leaf=is_axes_leaf)
 

@@ -1,8 +1,5 @@
 """Checkpoint substrate: serialization, manager commit protocol, incremental,
 corruption fallback, GC."""
-import json
-import zlib
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.checkpoint import serialization as SER
 from repro.data.pipeline import PipelineState, SyntheticTokens
 from repro.configs.base import get_config, reduced
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.parallel.mesh_rules import Rules
 from repro.train.step import effective_microbatches
 
@@ -64,7 +64,6 @@ _AXIS_NAMES = st.sampled_from(
        st.booleans())
 @settings(max_examples=60, deadline=None)
 def test_rules_spec_invariants(dims, multi_pod):
-    import os
     axes = tuple(a for a, _ in dims)
     shape = tuple(s for _, s in dims)
 

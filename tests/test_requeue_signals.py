@@ -1,12 +1,9 @@
 """Signal trapping, walltime accounting, requeue records, slurmsim basics."""
 import os
 import signal
-import subprocess
 import sys
 import time
-from pathlib import Path
 
-import pytest
 
 from repro.core.requeue import RequeueFile, WalltimeTracker
 from repro.core.signals import SignalTrap

@@ -1,0 +1,455 @@
+"""Parallel multi-shard restore engine + shared->local tier promotion:
+parallel == serial byte-for-byte, per-range replica fallback, promotion
+serving the second restart with zero shared-tier bytes, manifest-driven
+invalidation, deterministic (seedable) replica placement."""
+import random
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.restore_engine import ParallelRestorer
+from repro.checkpoint.store import DEFAULT_TIERS, TieredStore
+
+
+def _tree(rng, big_kb: int = 64):
+    return {
+        "w": rng.standard_normal((64, 32)).astype(np.float32),
+        "b": rng.standard_normal((256,)).astype(np.float32),
+        "big": rng.standard_normal((big_kb * 256,)).astype(np.float32),
+        "step": np.int32(7),
+        "scalar": np.float64(2.5),
+    }
+
+
+def _save_multi_worker(store, tree, step, num_workers, **kw):
+    for w in range(num_workers):
+        mw = CheckpointManager(store, worker_id=w, num_workers=num_workers,
+                               **kw)
+        mw.save(step, tree)
+    m0 = CheckpointManager(store, worker_id=0, num_workers=num_workers, **kw)
+    m0.commit(step, num_workers=num_workers)
+    return m0
+
+
+def _assert_trees_equal(got, want):
+    flat_g = dict(SER.flatten_with_names(got))
+    flat_w = dict(SER.flatten_with_names(want))
+    assert set(flat_g) == set(flat_w)
+    for name in flat_w:
+        a, b = np.asarray(flat_g[name]), np.asarray(flat_w[name])
+        assert a.dtype == b.dtype, name
+        assert a.tobytes() == b.tobytes(), name
+
+
+class TierCountingStore(TieredStore):
+    """Counts every byte actually fetched, keyed by tier — both ranged reads
+    (``_pread``) and whole-file reads (``get``)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.read_by_tier: dict = {}
+
+    def _count(self, tier: str, n: int) -> None:
+        self.read_by_tier[tier] = self.read_by_tier.get(tier, 0) + n
+
+    def _tier_of(self, path: Path) -> str:
+        return Path(path).relative_to(self.root).parts[0]
+
+    def _pread(self, path, offset, nbytes):
+        data = super()._pread(path, offset, nbytes)
+        self._count(self._tier_of(path), len(data))
+        return data
+
+    def get(self, tier, rel):
+        data = super().get(tier, rel)
+        self._count(tier, len(data))
+        return data
+
+    def reset(self):
+        self.read_by_tier = {}
+
+
+# ---------------------------------------------------------------------------
+# parallel == serial, byte for byte
+# ---------------------------------------------------------------------------
+
+def test_parallel_restore_equals_serial(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    _save_multi_worker(store, tree, 5, num_workers=3, replicas=2)
+
+    serial = CheckpointManager(store, restore_workers=1)
+    out_s, man_s = serial.restore(tree)
+    parallel = CheckpointManager(store, restore_workers=4)
+    out_p, man_p = parallel.restore(tree)
+
+    assert man_s["step"] == man_p["step"] == 5
+    _assert_trees_equal(out_p, out_s)
+    assert parallel.last_restore_stats["mode"] == "parallel"
+    assert parallel.last_restore_stats["workers"] == 4
+    assert serial.last_restore_stats["mode"] == "serial"
+
+
+def test_parallel_restore_splits_large_shards(tmp_path, rng):
+    """A shard bigger than split_bytes becomes several range tasks (split at
+    leaf boundaries), and the reassembled tree is still exact."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng, big_kb=256)
+    m = CheckpointManager(store, replicas=1)
+    m.save(1, tree)
+    man = m.commit(1)
+
+    engine = ParallelRestorer(store, workers=4, split_bytes=64 * 1024)
+    by_file: dict = {}
+    for e in man["leaves"]:
+        by_file.setdefault(e["file"], []).append(e)
+    named, stats = engine.restore("shared", by_file)
+    assert stats.tasks > len(by_file), (stats.tasks, len(by_file))
+    for name, arr in SER.flatten_with_names(tree):
+        assert np.asarray(arr).tobytes() == named[name].tobytes(), name
+
+
+def test_parallel_restore_incremental_manifest(tmp_path, rng):
+    """An incremental manifest spanning a base and a delta shard restores
+    correctly through the parallel engine."""
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, incremental=True, keep_last=10, replicas=1,
+                          restore_workers=4)
+    tree = _tree(rng)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = dict(tree)
+    tree2["big"] = tree["big"] + 1
+    m.save(2, tree2)
+    man2 = m.commit(2)
+    assert any(e.get("reused") for e in man2["leaves"])
+
+    m2 = CheckpointManager(store, restore_workers=4)
+    out, man = m2.restore(tree, step=2)
+    _assert_trees_equal(out, tree2)
+
+
+# ---------------------------------------------------------------------------
+# per-range replica fallback under injected OSError
+# ---------------------------------------------------------------------------
+
+def test_parallel_range_read_falls_back_on_oserror(tmp_path, rng):
+    """Headers plan clean against replica A, then A's payload reads fail with
+    OSError mid-restore: every affected range must fall back to replica B."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    _save_multi_worker(store, tree, 3, num_workers=2, replicas=2)
+
+    man = CheckpointManager(store).read_manifest(3)
+    a_shard = man["leaves"][0]["file"]
+    bad_node = store.replica_paths("shared", a_shard)[0].parts[-4:][0]
+    bad_root = store.root / "shared"
+    real_pread = TieredStore._pread
+
+    def flaky_pread(self, path, offset, nbytes):
+        # payload reads (big) on the primary replica's node fail; header
+        # reads (small) succeed so the plan is built against this replica
+        if (bad_root in Path(path).parents
+                and f"/{bad_node}/" in str(path) and nbytes > 4096):
+            raise OSError("simulated torn replica page")
+        return real_pread(self, path, offset, nbytes)
+
+    store._pread = flaky_pread.__get__(store)
+    m = CheckpointManager(store, restore_workers=4)
+    out, _ = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert m.last_restore_stats["replica_fallbacks"] > 0
+
+
+def test_parallel_restore_raises_when_no_replica_intact(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=2)
+    m.save(1, tree)
+    m.commit(1)
+    real_pread = TieredStore._pread
+
+    def dead_pread(self, path, offset, nbytes):
+        if nbytes > 4096:
+            raise OSError("all replicas torn")
+        return real_pread(self, path, offset, nbytes)
+
+    store._pread = dead_pread.__get__(store)
+    with pytest.raises(SER.ChecksumError, match="no intact replica"):
+        CheckpointManager(store, restore_workers=4).restore(tree)
+
+
+# ---------------------------------------------------------------------------
+# shared -> local tier promotion
+# ---------------------------------------------------------------------------
+
+def test_on_restore_promotion_second_restore_zero_shared_bytes(tmp_path, rng):
+    store = TierCountingStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m.save(4, tree)
+    m.commit(4)
+
+    store.reset()
+    out1, _ = m.restore(tree)
+    assert store.read_by_tier.get("shared", 0) > 0     # cold: shared bytes
+    m.wait_promotions()
+    assert not m.promote_failures
+
+    store.reset()
+    m2 = CheckpointManager(store, promote="on_restore")
+    out2, man = m2.restore(tree)
+    assert man["step"] == 4
+    assert store.read_by_tier.get("shared", 0) == 0, store.read_by_tier
+    assert store.read_by_tier.get("local", 0) > 0
+    assert m2.last_restore_stats.get("promoted") is True
+    _assert_trees_equal(out2, out1)
+    m.close()
+    m2.close()
+
+
+def test_promotion_is_crc_verified_and_failure_is_soft(tmp_path, rng):
+    """A promotion that cannot copy intact bytes records a failure, publishes
+    no marker, and never raises into the training thread."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m.save(1, tree)
+    man = m.commit(1)
+    # corrupt the only shared replica's payload AFTER commit: the copy lands
+    # but its CRC check against the manifest must reject it
+    shard_rel = next(e["file"] for e in man["leaves"])
+    p = store.replica_paths("shared", shard_rel)[0]
+    raw = bytearray(p.read_bytes())
+    raw[10] ^= 0xFF
+    p.write_bytes(raw)
+
+    m._promote_now(man)
+    assert m.promote_failures, "corrupt promotion must be recorded"
+    assert m._read_marker() is None
+    assert not store.exists("local", shard_rel)
+    m.close()
+
+
+def test_promoted_cache_invalidated_when_newer_step_commits(tmp_path, rng):
+    store = TierCountingStore(tmp_path, seed=0)
+    tree1 = _tree(rng)
+    m = CheckpointManager(store, replicas=1, promote="on_restore",
+                          keep_last=5)
+    m.save(1, tree1)
+    m.commit(1)
+    m.restore(tree1)
+    m.wait_promotions()
+    assert m._read_marker()["step"] == 1
+
+    tree2 = dict(tree1)
+    tree2["w"] = tree1["w"] + 1
+    m.save(2, tree2)
+    m.commit(2)                       # newer step commits -> cache is stale
+
+    store.reset()
+    out, man = m.restore(tree1)       # latest == step 2
+    assert man["step"] == 2
+    _assert_trees_equal(out, tree2)
+    # stale cache was NOT served (shared bytes were read), and was dropped
+    assert store.read_by_tier.get("shared", 0) > 0
+    m.wait_promotions()
+    assert m._read_marker()["step"] == 2   # re-promoted at the new step
+    store.reset()
+    out2, _ = m.restore(tree1)
+    assert store.read_by_tier.get("shared", 0) == 0, store.read_by_tier
+    _assert_trees_equal(out2, tree2)
+    m.close()
+
+
+def test_eager_promotion_on_commit(tmp_path, rng):
+    store = TierCountingStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=1, promote="eager")
+    m.save(2, tree)
+    m.commit(2)
+    m.wait_promotions()
+    assert not m.promote_failures
+    assert m._read_marker()["step"] == 2
+
+    store.reset()
+    m2 = CheckpointManager(store, promote="eager")
+    out, man = m2.restore(tree)
+    assert man["step"] == 2
+    assert store.read_by_tier.get("shared", 0) == 0, store.read_by_tier
+    _assert_trees_equal(out, tree)
+    m.close()
+    m2.close()
+
+
+def test_damaged_promoted_cache_falls_back_to_shared(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m.save(1, tree)
+    m.commit(1)
+    m.restore(tree)
+    m.wait_promotions()
+    # evict the promoted shard bytes but leave the marker: the restore must
+    # detect the damage, drop the cache, and still serve from shared
+    man = m.read_manifest(1)
+    shard_rel = next(e["file"] for e in man["leaves"])
+    store.delete_file("local", shard_rel)
+    out, _ = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert m.last_restore_stats.get("promoted") is None
+    m.close()
+
+
+def test_incremental_promotion_does_not_recopy_base_shard(tmp_path, rng):
+    """eager + incremental: the second promotion copies only the delta shard;
+    the already-promoted base shard is kept in place, not re-transferred."""
+    store = TieredStore(tmp_path, seed=0)
+    copies = []
+    real_copy = TieredStore.copy_file
+
+    def counting_copy(self, src_tier, rel, dst_tier, **kw):
+        copies.append(rel)
+        return real_copy(self, src_tier, rel, dst_tier, **kw)
+
+    store.copy_file = counting_copy.__get__(store)
+    m = CheckpointManager(store, replicas=1, incremental=True,
+                          promote="eager", keep_last=10)
+    tree = _tree(rng)
+    m.save(1, tree)
+    m.commit(1)
+    m.wait_promotions()
+    first_copies = list(copies)
+
+    tree2 = dict(tree)
+    tree2["w"] = tree["w"] + 1                # only one leaf changes
+    m.save(2, tree2)
+    man2 = m.commit(2)
+    m.wait_promotions()
+    assert not m.promote_failures
+    assert any(e.get("reused") for e in man2["leaves"])
+    second_copies = copies[len(first_copies):]
+    base_rel = next(e["file"] for e in man2["leaves"] if e.get("reused"))
+    delta_rel = next(e["file"] for e in man2["leaves"] if not e.get("reused"))
+    assert delta_rel in second_copies
+    assert base_rel not in second_copies, second_copies
+    # and the promoted cache still restores the new step intact, node-locally
+    store2 = TierCountingStore(tmp_path, seed=0)
+    m2 = CheckpointManager(store2, promote="on_restore")
+    out, man = m2.restore(tree)
+    assert man["step"] == 2
+    assert store2.read_by_tier.get("shared", 0) == 0, store2.read_by_tier
+    _assert_trees_equal(out, tree2)
+    m.close()
+    m2.close()
+
+
+def test_restoring_older_step_keeps_newer_promoted_cache(tmp_path, rng):
+    """An explicit rollback restore of an older step must not evict the
+    promoted cache of the newer (still committed) step."""
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, promote="on_restore",
+                          keep_last=10)
+    tree1 = _tree(rng)
+    m.save(1, tree1)
+    m.commit(1)
+    tree2 = dict(tree1)
+    tree2["w"] = tree1["w"] + 1
+    m.save(2, tree2)
+    m.commit(2)
+    m.restore(tree1)                          # latest (2) -> promoted
+    m.wait_promotions()
+    assert m._read_marker()["step"] == 2
+
+    out, man = m.restore(tree1, step=1)       # rollback/inspection
+    assert man["step"] == 1
+    _assert_trees_equal(out, tree1)
+    m.wait_promotions()
+    # the warmer step-2 cache survives the older-step restore
+    assert m._read_marker()["step"] == 2
+    m.close()
+
+
+def test_workpool_close_after_failure_stops_threads():
+    from repro.checkpoint.async_writer import WorkPool
+
+    pool = WorkPool(max_inflight=2, workers=2, name="t-pool")
+    pool.submit(lambda: (_ for _ in ()).throw(OSError("disk gone")))
+    with pytest.raises(RuntimeError, match="background checkpoint task"):
+        pool.close()
+    # the failure must not leak pool threads or leave the pool half-open
+    assert all(not t.is_alive() for t in pool._threads)
+    pool.close()                              # second close is a no-op
+
+
+def test_workpool_try_submit_drops_instead_of_blocking():
+    """Promotion scheduling must never backpressure the training thread: a
+    full pool rejects (False) instead of blocking."""
+    import threading as th
+
+    from repro.checkpoint.async_writer import WorkPool
+
+    pool = WorkPool(max_inflight=2, workers=1, name="t-pool")
+    gate = th.Event()
+    pool.submit(gate.wait)
+    pool.submit(gate.wait)
+    assert pool.try_submit(lambda: None) is False   # full: dropped, no block
+    gate.set()
+    pool.wait()
+    assert pool.try_submit(lambda: None) is True    # drained: accepted
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# deterministic replica placement (seedable RNG)
+# ---------------------------------------------------------------------------
+
+def test_choose_nodes_seedable_and_injectable(tmp_path):
+    s1 = TieredStore(tmp_path / "a", seed=7)
+    s2 = TieredStore(tmp_path / "b", seed=7)
+    picks1 = [[p.name for p in s1._choose_nodes("shared", 2)]
+              for _ in range(20)]
+    picks2 = [[p.name for p in s2._choose_nodes("shared", 2)]
+              for _ in range(20)]
+    assert picks1 == picks2
+    # module-level random must not influence placement
+    random.seed(123)
+    s3 = TieredStore(tmp_path / "c", seed=7)
+    random.seed(999)
+    picks3 = [[p.name for p in s3._choose_nodes("shared", 2)]
+              for _ in range(20)]
+    assert picks3 == picks1
+    # injectable RNG wins over seed
+    s4 = TieredStore(tmp_path / "d", rng=random.Random(7))
+    picks4 = [[p.name for p in s4._choose_nodes("shared", 2)]
+              for _ in range(20)]
+    assert picks4 == picks1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: parallel beats serial under simulated shared-FS latency
+# ---------------------------------------------------------------------------
+
+def test_parallel_restore_faster_than_serial_under_latency(tmp_path, rng):
+    """With the shared tier's simulated per-op latency on, fanning 8 shards
+    across 8 readers must beat the one-at-a-time loop by a wide margin (the
+    paper's Fig. 2 restart-latency effect, inverted)."""
+    tiers = dict(DEFAULT_TIERS)
+    store = TieredStore(tmp_path, tiers=tiers, sim_io_factor=0.5, seed=0)
+    tree = {f"l{i:02d}": rng.standard_normal((64,)).astype(np.float32)
+            for i in range(16)}
+    _save_multi_worker(store, tree, 1, num_workers=8, replicas=1)
+
+    t0 = time.perf_counter()
+    out_s, _ = CheckpointManager(store, restore_workers=1).restore(tree)
+    serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out_p, _ = CheckpointManager(store, restore_workers=8).restore(tree)
+    parallel_s = time.perf_counter() - t0
+
+    _assert_trees_equal(out_p, out_s)
+    assert parallel_s < 0.6 * serial_s, (parallel_s, serial_s)

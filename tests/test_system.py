@@ -2,10 +2,8 @@
 surface (cold start, interval checkpoints, restore, async mode, incremental),
 exercised through the public CLI in-process."""
 import json
-from pathlib import Path
 
 import numpy as np
-import pytest
 
 from repro.launch import train as T
 from repro.sched.slurmsim import REQUEUE_EXIT
