@@ -238,8 +238,11 @@ def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
         / max(results["save_stream"]["peak_buffered_mb"], 1e-9))
     results["restore_engine"] = eng = run_restore_engine(smoke=smoke)
 
-    out_path = Path(__file__).resolve().parents[1] / "BENCH_ckpt_io.json"
-    out_path.write_text(json.dumps(results, indent=1))
+    # merge into the tracking artifact: bench_startup contributes its
+    # placement_requeue key to the same file, whichever module runs last
+    from benchmarks.bench_startup import merge_bench_ckpt_io
+
+    merge_bench_ckpt_io(results)
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "ckpt_io.json").write_text(json.dumps(results, indent=1))
@@ -261,12 +264,13 @@ def run_ckpt_io(results_dir: Path | None = None, payload_mb: int = 96,
         "derived": (f"save_speedup={results['save_speedup']:.2f}x "
                     f"peak_mem_ratio={results['save_peak_mem_ratio']:.1f}x"),
     })
+    serial_wall = eng["restore_gbps_vs_workers_sim_shared"]["1"]["wall_s"]
     for wk, r in eng["restore_gbps_vs_workers_sim_shared"].items():
         rows.append({
             "name": f"ckpt_restore_parallel_w{wk}",
             "us_per_call": r["wall_s"] * 1e6,
             "derived": (f"{r['gb_per_s']:.2f}GB/s tasks={r['tasks']} "
-                        f"vs_serial={eng['restore_gbps_vs_workers_sim_shared']['1']['wall_s']/r['wall_s']:.2f}x"),
+                        f"vs_serial={serial_wall / r['wall_s']:.2f}x"),
         })
     rc = eng["restart_curve"]
     rows.append({
@@ -385,7 +389,10 @@ def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8,
 
 if __name__ == "__main__":
     import sys
-    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    _root = Path(__file__).resolve().parents[1]
+    for _p in (str(_root / "src"), str(_root)):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
     # standalone: just the I/O-plane comparison (fast, no model training)
     for row in run_ckpt_io():
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

@@ -58,7 +58,7 @@ def main():
         print(f"\njob state: {rec.state}   attempts: {rec.requeues + 1}   "
               f"exit codes: {rec.exit_codes}")
         out = (Path(d) / "slurm" / "pretrain.out").read_text()
-        attempts = re.findall(r"=== launch attempt (\d+) ===", out)
+        attempts = re.findall(r"=== launch attempt (\d+) on \S+ ===", out)
         resumes = re.findall(r"restored checkpoint step=(\d+)", out)
         print(f"scheduler launches: {attempts}")
         print(f"restore points:      {resumes}")

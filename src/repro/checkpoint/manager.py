@@ -48,6 +48,95 @@ def _step_dir(prefix: str, step: int) -> str:
     return f"{prefix}/step_{step:010d}"
 
 
+def committed_steps(store: TieredStore, tier: str, prefix: str) -> list[int]:
+    """Steps with a MANIFEST.json on ``tier`` (a checkpoint exists iff its
+    manifest does).  Module-level so schedulers can enumerate without
+    constructing a manager."""
+    out = set()
+    for r in store.list_prefix(tier, prefix):
+        parts = Path(r).parts
+        if len(parts) >= 2 and parts[-1] == "MANIFEST.json":
+            out.add(int(parts[-2].split("_")[1]))
+    return sorted(out)
+
+
+def validate_promoted_cache(store: TieredStore, *, tier: str = "shared",
+                            promote_tier: str = "local",
+                            prefix: str = "ckpt",
+                            latest: Optional[int] = None) -> dict:
+    """Scheduler-facing cache inventory: is ``promote_tier``'s promoted cache
+    warm for the LATEST step committed on ``tier``?
+
+    Invalidation-aware and cheap (no payload reads): the marker must parse
+    (a torn ``PROMOTED.json`` is cold, not an error), its step must equal the
+    latest committed step (a superseded marker is stale), the promoted
+    manifest must parse and match, and every referenced shard file must exist
+    in the promote tier at the source file's size (catching truncation).
+    Deliberately advisory — deep CRC verification stays in the restore path,
+    so a probe that wrongly says "warm" costs one cache miss, never stale
+    bytes.
+
+    Returns ``{"valid", "step", "latest", "files", "reason"}``.  A caller
+    probing MANY nodes against one shared tier can pass ``latest`` (the
+    newest committed step) to skip the per-node re-listing of the shared
+    prefix — the listing is node-independent.
+    """
+    info: dict = {"valid": False, "step": None, "latest": None,
+                  "files": 0, "reason": ""}
+    if latest is None:
+        steps = committed_steps(store, tier, prefix)
+        latest = steps[-1] if steps else None
+    info["latest"] = latest
+    marker_rel = f"{prefix}/PROMOTED.json"
+    try:
+        marker = json.loads(store.get(promote_tier, marker_rel).decode())
+        if not isinstance(marker, dict):
+            raise ValueError("marker is not an object")
+    except FileNotFoundError:
+        # get() reports an unreadable-everywhere file as not-found; a marker
+        # that exists but cannot be read is torn, not absent
+        info["reason"] = ("torn promoted marker"
+                         if store.exists(promote_tier, marker_rel)
+                         else "no promoted marker")
+        return info
+    except (ValueError, OSError):
+        info["reason"] = "torn promoted marker"
+        return info
+    info["step"] = step = marker.get("step")
+    if info["latest"] is None:
+        info["reason"] = "no committed checkpoint on source tier"
+        return info
+    if step != info["latest"]:
+        info["reason"] = f"stale (cached step {step}, latest {info['latest']})"
+        return info
+    try:
+        man = json.loads(store.get(
+            promote_tier, f"{_step_dir(prefix, step)}/MANIFEST.json").decode())
+        if man.get("step") != step:
+            raise ValueError("promoted manifest step mismatch")
+        rels = sorted({e["file"] for e in man["leaves"]})
+    except (FileNotFoundError, ValueError, OSError, KeyError, TypeError):
+        info["reason"] = "damaged promoted manifest"
+        return info
+    for rel in rels:
+        try:
+            cached = store.size(promote_tier, rel)
+        except FileNotFoundError:
+            info["reason"] = f"missing promoted file {rel}"
+            return info
+        try:
+            src = store.size(tier, rel)
+        except FileNotFoundError:
+            src = cached            # source retired by GC: existence is enough
+        if cached != src:
+            info["reason"] = f"size mismatch for {rel} ({cached} != {src})"
+            return info
+    info["files"] = len(rels)
+    info["valid"] = True
+    info["reason"] = "warm"
+    return info
+
+
 class CheckpointManager:
     def __init__(self, store: TieredStore, *, tier: str = "shared",
                  worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
@@ -61,8 +150,9 @@ class CheckpointManager:
         # the promote tier is a CACHE whose invalidation deletes files —
         # pointing it at the primary tier would let a stale-cache cleanup
         # destroy the committed checkpoints themselves
-        assert promote == "off" or promote_tier != tier, \
-            "promote_tier must differ from the primary checkpoint tier"
+        assert (
+            promote == "off" or promote_tier != tier
+        ), "promote_tier must differ from the primary checkpoint tier"
         self.store = store
         self.tier = tier
         self.worker_id = worker_id
@@ -230,13 +320,15 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def steps(self) -> list[int]:
-        rels = self.store.list_prefix(self.tier, self.prefix)
-        out = set()
-        for r in rels:
-            parts = Path(r).parts
-            if len(parts) >= 2 and parts[-1] == "MANIFEST.json":
-                out.add(int(parts[-2].split("_")[1]))
-        return sorted(out)
+        return committed_steps(self.store, self.tier, self.prefix)
+
+    def cache_inventory(self) -> dict:
+        """Validate this manager's promoted cache against its primary tier —
+        see ``validate_promoted_cache``.  Usable whatever the promote policy
+        (``off`` just probes whatever a previous run left behind)."""
+        return validate_promoted_cache(
+            self.store, tier=self.tier, promote_tier=self.promote_tier,
+            prefix=self.prefix)
 
     def read_manifest(self, step: int) -> dict:
         raw = self.store.get(self.tier, f"{_step_dir(self.prefix, step)}/MANIFEST.json")
@@ -414,8 +506,7 @@ class CheckpointManager:
         if not all_steps:
             return None
         step = all_steps[-1] if step is None else step
-        if (marker := self._read_marker()) is not None \
-                and marker.get("step") == step:
+        if (marker := self._read_marker()) is not None and marker.get("step") == step:
             return step                    # already cached: skip the I/O
         manifest = self.read_manifest(step)
         self._schedule_promotion(manifest)

@@ -112,14 +112,31 @@ DEFAULT_TIERS = {
     "shared": TierSpec("shared", 1.0, 0.02, nodes=8, concurrency=8),
 }
 
+# tiers that live on a cluster node rather than the shared parallel FS —
+# the set every per-node mount point must cover
+NODE_LOCAL_TIERS = ("ram", "local")
+
+
+def node_local_tier_roots(local_root) -> dict:
+    """The ``tier_roots`` mapping that mounts every node-local tier under one
+    per-node directory (the single definition train.py, the placement test
+    job, and the benchmarks all share)."""
+    return {t: Path(local_root) for t in NODE_LOCAL_TIERS}
+
 
 class TieredStore:
     def __init__(self, root: Path, tiers: Optional[dict] = None,
                  sim_io_factor: float = 0.0,
                  rng: Optional[random.Random] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 tier_roots: Optional[dict] = None):
         self.root = Path(root)
         self.tiers = tiers or dict(DEFAULT_TIERS)
+        # tier_roots: per-tier root override — the multi-node cluster model:
+        # every simulated cluster node shares the same ``shared`` tier root but
+        # mounts ITS OWN ``local``/``ram`` roots (sched/slurmsim.py NodeSpec),
+        # so a shared->local promotion warms exactly one node's cache.
+        self.tier_roots = {t: Path(p) for t, p in (tier_roots or {}).items()}
         self.sim_io_factor = sim_io_factor
         # Replica placement is randomized; an injectable RNG (or just a seed)
         # makes placement deterministic for tests/CI.  Never the module-level
@@ -131,7 +148,18 @@ class TieredStore:
     # ------------------------------------------------------------------
     def _node_dirs(self, tier: str) -> list[Path]:
         spec = self.tiers[tier]
-        return [self.root / tier / f"node{i}" for i in range(spec.nodes)]
+        root = self.tier_roots.get(tier, self.root)
+        return [root / tier / f"node{i}" for i in range(spec.nodes)]
+
+    def _rel_of(self, p: Path) -> str:
+        """Store-relative name of a replica file, whichever root it nests
+        under (the main root or a tier_roots override)."""
+        for root in (self.root, *self.tier_roots.values()):
+            try:
+                return str(p.relative_to(root))
+            except ValueError:
+                continue
+        return str(p)
 
     def _simulate(self, tier: str, nbytes: int) -> None:
         if not self.sim_io_factor:
@@ -169,7 +197,7 @@ class TieredStore:
             shutil.copyfile(primary, tmp)   # sendfile/copy_file_range path
             tmp.rename(p)
             self._simulate(tier, nbytes)
-            written.append(str(p.relative_to(self.root)))
+            written.append(self._rel_of(p))
 
     # ------------------------------------------------------------------
     def put(self, tier: str, rel: str, data: bytes, *, replicas: int = 1) -> list[str]:
@@ -181,7 +209,7 @@ class TieredStore:
         tmp.write_bytes(data)
         tmp.rename(primary)
         self._simulate(tier, len(data))
-        written = [str(primary.relative_to(self.root))]
+        written = [self._rel_of(primary)]
         self._replicate(tier, primary, rel, chosen[1:], written)
         return written
 
@@ -219,7 +247,7 @@ class TieredStore:
         for tmp, final in zip(tmps, finals):
             tmp.rename(final)
             self._simulate(tier, sink.nbytes)
-        return [str(p.relative_to(self.root)) for p in finals]
+        return [self._rel_of(p) for p in finals]
 
     # ------------------------------------------------------------------
     def _pread(self, path: Path, offset: int, nbytes: int) -> bytes:

@@ -22,7 +22,7 @@ from typing import Callable, Optional
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.manifest import capture_manifest, verify_manifest
-from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.core.requeue import RequeueFile, WalltimeTracker, detect_node
 from repro.core.signals import SignalTrap
 from repro.core.virtualization import fetch_tree, place_tree
 from repro.core.worker import InlineCoordinator
@@ -35,9 +35,12 @@ class CRManager:
                  walltime: Optional[WalltimeTracker] = None,
                  requeue_file: Optional[RequeueFile] = None,
                  interval_steps: Optional[int] = None,
-                 cfg=None, rules=None,
+                 cfg=None, rules=None, node: Optional[str] = None,
                  log: Callable[[str], None] = print):
         self.ckpt = ckpt
+        # which cluster node this attempt runs on — recorded into the requeue
+        # file so the scheduler can round-trip the placement hint
+        self.node = node if node is not None else detect_node()
         self.client = client or InlineCoordinator(commit_fn=ckpt.commit)
         self.signal_trap = signal_trap
         self.walltime = walltime
@@ -61,8 +64,7 @@ class CRManager:
             return state, None, 0
         stats = getattr(self.ckpt, "last_restore_stats", None)
         if stats:
-            src = "promoted " + stats["tier"] if stats.get("promoted") \
-                else stats["tier"]
+            src = "promoted " + stats["tier"] if stats.get("promoted") else stats["tier"]
             self.log(f"[cr] restore engine: tier={src} mode={stats['mode']} "
                      f"workers={stats.get('workers')} "
                      f"tasks={stats.get('tasks', stats.get('files'))}")
@@ -131,7 +133,8 @@ class CRManager:
     # ------------------------------------------------------------------
     def request_requeue(self, step: int, reason: str = "") -> None:
         if self.requeue_file is not None and self.walltime is not None:
-            rec = self.requeue_file.save(self.walltime, step, reason=reason)
+            rec = self.requeue_file.save(self.walltime, step, reason=reason,
+                                         node=self.node)
             self.log(f"[cr] requeue recorded: {rec}")
 
     def close(self) -> None:

@@ -52,8 +52,18 @@ class WalltimeTracker:
         return f"{e // 3600:02d}:{(e % 3600) // 60:02d}:{e % 60:02d}"
 
 
+def detect_node() -> Optional[str]:
+    """Node identity under a scheduler: slurmsim sets ``SLURMSIM_NODE``, real
+    Slurm sets ``SLURMD_NODENAME``."""
+    return os.environ.get("SLURMSIM_NODE") or os.environ.get("SLURMD_NODENAME")
+
+
 class RequeueFile:
-    """Persistent per-job accounting (requeue count, consumed time, last step)."""
+    """Persistent per-job accounting (requeue count, consumed time, last
+    step, node placements).  The recorded ``node`` is the placement hint the
+    restore-aware scheduler (sched/placement.py) round-trips: the node that
+    wrote the last checkpoint is the one whose caches are worth preferring.
+    """
 
     def __init__(self, path: Path):
         self.path = Path(path)
@@ -61,16 +71,23 @@ class RequeueFile:
     def load(self) -> dict:
         if self.path.exists():
             return json.loads(self.path.read_text())
-        return {"requeues": 0, "consumed_s": 0.0, "last_step": -1}
+        return {"requeues": 0, "consumed_s": 0.0, "last_step": -1,
+                "node": None, "placements": []}
 
     def save(self, tracker: WalltimeTracker, last_step: int, *,
-             reason: str = "") -> dict:
+             reason: str = "", node: Optional[str] = None) -> dict:
         rec = self.load()
         rec["requeues"] += 1
         rec["consumed_s"] = tracker.total_consumed_s
         rec["last_step"] = int(last_step)
         rec["last_reason"] = reason
         rec["pid"] = os.getpid()
+        node = node if node is not None else detect_node()
+        if node is not None:
+            # never clobber the last known placement hint with None — a
+            # scheduler-less attempt still wants the previous node preferred
+            rec["node"] = node
+            rec.setdefault("placements", []).append(node)
         tmp = self.path.with_suffix(".tmp")
         tmp.write_text(json.dumps(rec))
         tmp.rename(self.path)

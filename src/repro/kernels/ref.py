@@ -81,7 +81,8 @@ def ssd(x, dt, A_log, Bm, Cm, D, *, init_state=None, return_state=False):
     def step(state, inp):
         xt, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,N) (B,N)
         decay = jnp.exp(dtt.astype(jnp.float32) * A)            # (B,H)
-        dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32), bt.astype(jnp.float32), xt.astype(jnp.float32))
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+                         bt.astype(jnp.float32), xt.astype(jnp.float32))
         state = state * decay[..., None, None] + dbx
         yt = jnp.einsum("bhpn,bn->bhp", state, ct.astype(jnp.float32))
         return state, yt

@@ -234,7 +234,9 @@ def analyze_hlo_text(hlo: str) -> dict:
                          in_fusion or op == "fusion", depth + 1)
                 continue
             if op == "conditional":
-                for mm in re.finditer(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-]+)", ins.attrs):
+                branch_pat = (r"(?:true_computation|false_computation"
+                              r"|branch_computations)=\{?%?([\w.\-]+)")
+                for mm in re.finditer(branch_pat, ins.attrs):
                     walk(mm.group(1), mult, in_fusion, depth + 1)
                 continue
             if op == "dot":
@@ -300,8 +302,8 @@ def analyze_hlo_text(hlo: str) -> dict:
         dus_names: set[str] = set()
         for fi in fcomp:
             if fi.opcode in ("dynamic-update-slice", "scatter"):
-                upd = fi.operands[1 if fi.opcode == "dynamic-update-slice" else 2] \
-                    if len(fi.operands) > 1 else None
+                upd = (fi.operands[1 if fi.opcode == "dynamic-update-slice" else 2]
+                       if len(fi.operands) > 1 else None)
                 total += 2 * (fbt.get(upd, 0.0) if upd else _type_bytes(fi.type_str))
                 dus_names.add(fi.name)
                 p = resolve_param(fi.operands[0]) if fi.operands else None

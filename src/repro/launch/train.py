@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -26,7 +27,7 @@ from pathlib import Path
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
-from repro.checkpoint.store import TieredStore
+from repro.checkpoint.store import TieredStore, node_local_tier_roots
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.cr_manager import CRManager
 from repro.core.requeue import RequeueFile, WalltimeTracker
@@ -62,6 +63,11 @@ def build_argparser():
                          "skips the shared filesystem")
     ap.add_argument("--ckpt-promote-tier", default="local",
                     choices=["ram", "local"])
+    ap.add_argument("--local-root", default=None,
+                    help="node-local tier root: mounts the local/ram tiers "
+                         "under this path instead of --ckpt-dir, so promoted "
+                         "caches are per-node (defaults to $REPRO_LOCAL_ROOT "
+                         "as set by sched/slurmsim.py placements)")
     ap.add_argument("--restore-workers", type=int, default=0,
                     help="parallel restore read pool size (0=auto, 1=serial)")
     ap.add_argument("--interval-steps", type=int, default=0)
@@ -94,7 +100,13 @@ def main(argv=None) -> int:
     jitted, st_sh, batch_sh_fn = TS.make_train_step(
         cfg, mesh, oc, microbatches=args.microbatches, rules=rules, donate=False)
 
-    store = TieredStore(Path(args.ckpt_dir))
+    # multi-node placement: the shared tier lives under --ckpt-dir for every
+    # node; the node-LOCAL tiers mount under the root the scheduler handed us,
+    # so a shared->local promotion warms exactly this node's cache and the
+    # restore-aware scheduler can route the next requeue back here.
+    local_root = args.local_root or os.environ.get("REPRO_LOCAL_ROOT")
+    tier_roots = node_local_tier_roots(local_root) if local_root else None
+    store = TieredStore(Path(args.ckpt_dir), tier_roots=tier_roots)
     ckpt = CheckpointManager(
         store, worker_id=args.worker_id, num_workers=args.num_workers,
         replicas=args.ckpt_replicas, mode=args.ckpt_mode,

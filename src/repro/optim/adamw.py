@@ -41,7 +41,8 @@ def init_opt_state(params, oc: OptConfig) -> dict:
 def schedule(oc: OptConfig, step) -> jax.Array:
     step = step.astype(jnp.float32)
     warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
-    prog = jnp.clip((step - oc.warmup_steps) / jnp.maximum(oc.decay_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    decay_span = jnp.maximum(oc.decay_steps - oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps) / decay_span, 0.0, 1.0)
     cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
     return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
 

@@ -1,0 +1,196 @@
+"""Reusable fault injectors for checkpoint/restore/placement chaos tests.
+
+File-level faults (operate on a concrete replica file):
+  * ``flip_byte``      — CRC-visible single-byte corruption (bit rot);
+  * ``corrupt_range``  — XOR a byte range (torn page / partial overwrite);
+  * ``truncate_file``  — truncated shard (a copy or node died mid-write);
+  * ``tear_json``      — torn-write marker: a JSON file cut mid-object, as a
+    crash between ``write`` and ``rename`` (or a non-atomic writer) leaves it.
+
+Store-level faults:
+  * ``replica_file``   — resolve the i-th replica path of ``tier:rel``;
+  * ``PreadFaults``    — wrap a ``TieredStore``'s positional-read choke point
+    so ranged reads matching a predicate raise ``OSError`` after the first
+    ``after`` matching reads succeed (the "replica goes dark mid-restore"
+    fault) — replaces the ad-hoc ``_pread`` monkeypatching tests used to do.
+
+All injectors are deterministic; none of them require the store to be idle.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from pathlib import Path
+from typing import Callable, Optional
+
+
+def flip_byte(path: Path, offset: Optional[int] = None) -> int:
+    """XOR one byte with 0xFF.  Default offset: the middle of the file —
+    payload territory for a v2 (footer-last) shard, so headers still parse
+    and the corruption is only catchable by a payload CRC check.  Returns
+    the offset flipped."""
+    path = Path(path)
+    size = path.stat().st_size
+    if offset is None:
+        offset = size // 2
+    assert 0 <= offset < size, (offset, size)
+    with open(path, "r+b") as fp:
+        fp.seek(offset)
+        b = fp.read(1)
+        fp.seek(offset)
+        fp.write(bytes([b[0] ^ 0xFF]))
+    return offset
+
+
+def corrupt_range(path: Path, offset: int, nbytes: int, xor: int = 0xFF) -> None:
+    """XOR ``nbytes`` starting at ``offset`` (a torn page / partial rewrite)."""
+    with open(path, "r+b") as fp:
+        fp.seek(offset)
+        raw = fp.read(nbytes)
+        fp.seek(offset)
+        fp.write(bytes(c ^ xor for c in raw))
+
+
+def truncate_file(path: Path, keep: Optional[int] = None,
+                  frac: float = 0.5) -> int:
+    """Truncate to ``keep`` bytes (default: ``frac`` of the current size).
+    Returns the new size."""
+    path = Path(path)
+    size = path.stat().st_size
+    keep = int(size * frac) if keep is None else keep
+    with open(path, "r+b") as fp:
+        fp.truncate(keep)
+    return keep
+
+
+def tear_json(path: Path, keep_frac: float = 0.5) -> None:
+    """Make a JSON file look torn mid-write: keep only a prefix, guaranteed
+    to be unparseable (a valid-JSON prefix would defeat the point)."""
+    path = Path(path)
+    raw = path.read_bytes()
+    keep = max(1, int(len(raw) * keep_frac))
+    torn = raw[:keep]
+    if not torn.rstrip().endswith((b"{", b",", b":")):
+        torn += b'{"torn'        # force a parse error whatever the cut point
+    path.write_bytes(torn)
+
+
+def replica_file(store, tier: str, rel: str, idx: int = 0) -> Path:
+    """The ``idx``-th existing replica file of ``tier:rel`` (placement
+    order); raises if there is no such replica."""
+    paths = store.replica_paths(tier, rel)
+    return paths[idx]
+
+
+class PreadFaults:
+    """Inject ``OSError`` into a ``TieredStore``'s positional reads.
+
+    ``match(path, offset, nbytes)`` selects the reads at risk; the first
+    ``after`` matching reads succeed, every later match raises (at most
+    ``times`` raises when given).  Usable as a context manager; ``fired``
+    counts injected errors.
+
+        with PreadFaults(store, lambda p, off, n: n > 4096):
+            ...                      # every payload-sized read now fails
+    """
+
+    def __init__(self, store, match: Callable[[Path, int, int], bool], *,
+                 error: Optional[Exception] = None, after: int = 0,
+                 times: Optional[int] = None):
+        self.store = store
+        self.match = match
+        self.error = error if error is not None else OSError("injected fault")
+        self.after = after
+        self.times = times
+        self.fired = 0
+        self._matched = 0
+        # parallel restore pools call _pread concurrently: the after/times
+        # bookkeeping must be atomic or the N-th-read semantics go flaky
+        self._lock = threading.Lock()
+        self._orig = None
+        self._installed = None
+
+    def install(self) -> "PreadFaults":
+        assert self._installed is None, "already installed"
+        # compose with whatever _pread is visible now — an instance-level
+        # wrapper (counting stores) or the class method
+        had_instance = "_pread" in self.store.__dict__
+        self._orig = (self.store.__dict__["_pread"] if had_instance
+                      else None)
+        orig = self.store._pread        # bound: instance attr or class method
+        self._had_instance = had_instance
+
+        def faulty(path, offset, nbytes):
+            if self.match(Path(path), offset, nbytes):
+                with self._lock:
+                    self._matched += 1
+                    fire = self._matched > self.after and (
+                        self.times is None or self.fired < self.times)
+                    if fire:
+                        self.fired += 1
+                if fire:
+                    raise self.error
+            return orig(path, offset, nbytes)
+
+        self._installed = faulty
+        self.store._pread = faulty
+        return self
+
+    def uninstall(self) -> None:
+        if getattr(self, "_installed", None) is None:
+            return
+        if self._had_instance:
+            self.store._pread = self._orig
+        else:
+            self.store.__dict__.pop("_pread", None)
+        self._installed = None
+        self._orig = None
+
+    def __enter__(self) -> "PreadFaults":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+
+class ByteCountingStoreMixin:
+    """Mix in over ``TieredStore`` (mixin first in the MRO): counts every
+    byte actually fetched, keyed by tier, at both the ranged-read choke
+    point (``_pread``) and whole-file ``get`` — the evidence for
+    zero-shared-bytes placement assertions.  tier_roots-aware: the owning
+    tier is resolved through ``_node_dirs``, not path prefixes."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.read_by_tier: dict = {}
+
+    def _tier_of(self, path: Path) -> str:
+        path = Path(path)
+        for tier in self.tiers:
+            for nd in self._node_dirs(tier):
+                if nd in path.parents:
+                    return tier
+        return "?"
+
+    def _count(self, path, n: int) -> None:
+        t = self._tier_of(path)
+        self.read_by_tier[t] = self.read_by_tier.get(t, 0) + n
+
+    def _pread(self, path, offset, nbytes):
+        data = super()._pread(path, offset, nbytes)
+        self._count(path, len(data))
+        return data
+
+    def get(self, tier, rel):
+        data = super().get(tier, rel)
+        self.read_by_tier[tier] = self.read_by_tier.get(tier, 0) + len(data)
+        return data
+
+    def reset(self) -> None:
+        self.read_by_tier = {}
+
+
+def kill_self(exit_code: int = 85) -> None:
+    """Die NOW — no atexit, no thread joins, no flushing — the closest thing
+    to a node loss a test subprocess can do to itself."""
+    os._exit(exit_code)

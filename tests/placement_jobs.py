@@ -1,0 +1,145 @@
+"""Minimal checkpoint-restart job driven by tests/test_placement.py.
+
+A numpy-only stand-in for launch/train.py (no jax import, so a full SlurmSim
+requeue cycle costs milliseconds, not a jit compile): each "life" restores
+the latest checkpoint (or cold-starts), advances a deterministic state a few
+steps, commits, records the requeue file with its node identity, and exits 85
+until the step budget is done.  Every life writes a JSON report — which node
+it ran on, where its restore bytes came from (per tier), the restore-engine
+stats, and a state checksum — that the test asserts placement behaviour
+against.
+
+Run as:  python tests/placement_jobs.py --ckpt-dir D --report-dir R \
+             --total-steps 3 [--steps-per-life 1] [--promote eager] \
+             [--mode kill-mid-promotion] [--kill-on-attempt 0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+import faults
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore, node_local_tier_roots
+from repro.core.requeue import RequeueFile, WalltimeTracker, detect_node
+
+REQUEUE_EXIT = 85
+
+
+class CountingStore(faults.ByteCountingStoreMixin, TieredStore):
+    """Counts every byte actually fetched, keyed by tier — the job-side
+    evidence for the zero-shared-bytes placement assertions."""
+
+
+def make_tree() -> dict:
+    rng = np.random.default_rng(0)
+    return {
+        "w": rng.standard_normal((128, 64)).astype(np.float32),
+        "b": rng.standard_normal((4096,)).astype(np.float32),
+        "k": rng.standard_normal((16384,)).astype(np.float32),
+    }
+
+
+def advance(tree: dict) -> dict:
+    """One deterministic 'training step'."""
+    return {k: (v + 1.0).astype(v.dtype) for k, v in tree.items()}
+
+
+def state_sum(tree: dict) -> float:
+    return float(sum(np.asarray(v, np.float64).sum() for v in tree.values()))
+
+
+def expected_sum(total_steps: int) -> float:
+    """What ``state_sum`` must be after ``total_steps`` committed steps —
+    the test-side oracle for 'no stale bytes were ever restored'."""
+    tree = make_tree()
+    base = state_sum(tree)
+    n_elems = sum(np.asarray(v).size for v in tree.values())
+    return base + total_steps * float(n_elems)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--report-dir", required=True)
+    ap.add_argument("--total-steps", type=int, default=3)
+    ap.add_argument("--steps-per-life", type=int, default=1)
+    ap.add_argument("--promote", default="eager",
+                    choices=["off", "on_restore", "eager"])
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--mode", default="normal",
+                    choices=["normal", "kill-mid-promotion"])
+    ap.add_argument("--kill-on-attempt", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    node = detect_node() or "?"
+    attempt = int(os.environ.get("SLURM_RESTART_COUNT", "0"))
+    local_root = os.environ.get("REPRO_LOCAL_ROOT")
+    tier_roots = node_local_tier_roots(local_root) if local_root else None
+    store = CountingStore(Path(args.ckpt_dir), tier_roots=tier_roots, seed=0)
+    m = CheckpointManager(store, replicas=args.replicas, promote=args.promote)
+
+    if args.mode == "kill-mid-promotion" and attempt == args.kill_on_attempt:
+        # the promotion copier dies mid-copy: a torn .tmp file and NO marker
+        # must be all it leaves behind (two-phase promotion)
+        def torn_copy(src_tier, rel, dst_tier, **kw):
+            src = store.replica_paths(src_tier, rel)[0]
+            dst = store._node_dirs(dst_tier)[0] / rel
+            dst.parent.mkdir(parents=True, exist_ok=True)
+            raw = src.read_bytes()
+            (dst.with_suffix(dst.suffix + ".tmp")).write_bytes(
+                raw[: len(raw) // 2])
+            os._exit(REQUEUE_EXIT)     # SIGKILL-equivalent node loss
+
+        store.copy_file = torn_copy
+
+    template = make_tree()
+    restore_stats = None
+    try:
+        tree, man = m.restore(template)
+        start = man["step"] + 1
+        restore_stats = m.last_restore_stats
+    except FileNotFoundError:
+        tree = make_tree()
+        start = 0
+    restore_reads = dict(store.read_by_tier)
+
+    last = start - 1
+    for step in range(start, min(start + args.steps_per_life,
+                                 args.total_steps)):
+        tree = advance(tree)
+        last = step
+    if last >= start:
+        m.save(last, tree)
+        m.commit(last)
+        m.wait_promotions()            # under kill mode this never returns
+        rf = RequeueFile(Path(args.ckpt_dir) / "requeue.json")
+        rf.save(WalltimeTracker(limit_s=1e9), last, reason="life-end",
+                node=node)
+
+    report = {
+        "attempt": attempt,
+        "node": node,
+        "start_step": start,
+        "last_step": last,
+        "restore_stats": restore_stats,
+        "restore_reads_by_tier": restore_reads,
+        "state_sum": state_sum(tree),
+        "cache_inventory": m.cache_inventory(),
+    }
+    rdir = Path(args.report_dir)
+    rdir.mkdir(parents=True, exist_ok=True)
+    (rdir / f"attempt_{attempt:02d}.json").write_text(json.dumps(report))
+    m.close()
+    return 0 if last >= args.total_steps - 1 else REQUEUE_EXIT
+
+
+if __name__ == "__main__":
+    sys.exit(main())

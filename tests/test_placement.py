@@ -1,0 +1,338 @@
+"""Restore-aware scheduler placement on warm promoted caches, verified by a
+fault-injection harness (tests/faults.py): a preempted job requeued onto its
+warm node restores with ZERO shared-tier data bytes; a blind baseline does
+not; and under injected faults (torn marker, truncated promoted shard,
+mid-promotion kill, stale marker) the scheduler never restores stale bytes
+and always converges to a correct restart."""
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import faults
+from placement_jobs import REQUEUE_EXIT, expected_sum, make_tree, state_sum
+from repro.checkpoint.manager import CheckpointManager, validate_promoted_cache
+from repro.checkpoint.store import TieredStore
+from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.sched.placement import (SCORE_HINT, SCORE_WARM, CacheAffinity,
+                                   rank_nodes)
+from repro.sched.slurmsim import JobSpec, SlurmSim
+
+JOB = Path(__file__).resolve().parent / "placement_jobs.py"
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def job_cmd(ckpt, rdir, total=3, **opts):
+    cmd = [sys.executable, str(JOB), "--ckpt-dir", str(ckpt),
+           "--report-dir", str(rdir), "--total-steps", str(total)]
+    for k, v in opts.items():
+        cmd += [f"--{k.replace('_', '-')}", str(v)]
+    return cmd
+
+
+def job_spec(ckpt, rdir, *, total=3, warm_wait_s=5.0, name="train", **opts):
+    return JobSpec(
+        name=name, cmd=job_cmd(ckpt, rdir, total=total, **opts),
+        walltime_s=120, env={"PYTHONPATH": SRC},
+        cache_affinity=CacheAffinity(ckpt_dir=str(ckpt),
+                                     warm_wait_s=warm_wait_s))
+
+
+def reports(rdir: Path) -> list[dict]:
+    return [json.loads(p.read_text())
+            for p in sorted(Path(rdir).glob("attempt_*.json"))]
+
+
+def node_ckpt_root(sim: SlurmSim, name: str) -> Path:
+    """A node's local-tier checkpoint prefix dir (local tier has one node
+    dir, ``node0``, inside every cluster node's root)."""
+    return sim.node(name).local_root / "local" / "node0" / "ckpt"
+
+
+# ---------------------------------------------------------------------------
+# headline: warm placement -> zero shared-tier restore bytes; blind does not
+# ---------------------------------------------------------------------------
+
+def test_warm_node_requeue_restores_zero_shared_bytes(tmp_path):
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2)
+    jid = sim.submit(job_spec(ckpt, rdir, total=3))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    assert rec.requeues == 2 and rec.exit_codes == [REQUEUE_EXIT] * 2 + [0]
+
+    reps = reports(rdir)
+    assert [r["attempt"] for r in reps] == [0, 1, 2]
+    # every requeue went back to the warm node, and every warm restore was
+    # served entirely from the node-local promoted cache
+    assert rec.placements == ["node0"] * 3
+    for r in reps[1:]:
+        assert r["restore_stats"]["promoted"] is True
+        assert r["restore_stats"]["tier"] == "local"
+        assert r["restore_reads_by_tier"].get("shared", 0) == 0, r
+        assert r["restore_reads_by_tier"].get("local", 0) > 0
+    for entry in rec.placement_log[1:]:
+        assert entry["scores"]["node0"] == SCORE_WARM
+        assert entry["node"] == "node0"
+    assert reps[-1]["state_sum"] == pytest.approx(expected_sum(3))
+
+
+def test_blind_placement_baseline_reads_shared_bytes(tmp_path):
+    """Round-robin (blind) placement requeues onto a cold node: correct, but
+    every restore pays shared-filesystem bytes — the contrast that makes the
+    placement policy measurable."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2, placement="blind")
+    jid = sim.submit(job_spec(ckpt, rdir, total=2))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    assert rec.placements == ["node0", "node1"]
+
+    r1 = reports(rdir)[1]
+    assert r1["node"] == "node1"
+    assert not (r1["restore_stats"] or {}).get("promoted")
+    assert r1["restore_reads_by_tier"].get("shared", 0) > 0
+    assert r1["state_sum"] == pytest.approx(expected_sum(2))
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every scenario must converge to a correct restart
+# ---------------------------------------------------------------------------
+
+def test_torn_marker_is_cold_not_fatal(tmp_path):
+    """PROMOTED.json torn mid-write: the probe must read it as cold (not
+    raise), placement falls back to the requeue hint, and the restore comes
+    from the shared tier — never from the torn cache."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    torn = []
+
+    def hook(rec):
+        if rec.requeues == 1:
+            marker = node_ckpt_root(sim, "node0") / "PROMOTED.json"
+            faults.tear_json(marker)
+            torn.append(str(marker))
+
+    sim = SlurmSim(tmp_path / "sim", nodes=2, pre_launch=hook)
+    jid = sim.submit(job_spec(ckpt, rdir, total=2, warm_wait_s=0.0))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert torn, "fault was never injected"
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+
+    entry = rec.placement_log[1]
+    assert entry["reasons"]["node0"] == "torn promoted marker"
+    assert entry["scores"]["node0"] == SCORE_HINT      # hint, not warm
+    r1 = reports(rdir)[1]
+    assert not (r1["restore_stats"] or {}).get("promoted")
+    assert r1["restore_reads_by_tier"].get("shared", 0) > 0
+    assert reports(rdir)[-1]["state_sum"] == pytest.approx(expected_sum(2))
+
+
+def test_truncated_promoted_shard_falls_back_to_shared(tmp_path):
+    """Marker intact but a promoted shard is truncated, and the only node IS
+    the damaged one (forced placement): the restore path must detect the
+    damage, drop the cache, and restore correct bytes from shared."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    truncated = []
+
+    def hook(rec):
+        if rec.requeues == 1:
+            shards = sorted(node_ckpt_root(sim, "node0").glob(
+                "step_*/shard_*.bin"))
+            assert shards, "no promoted shard to truncate"
+            faults.truncate_file(shards[0])
+            truncated.append(str(shards[0]))
+            # the probe itself must notice the truncation too
+            probe = validate_promoted_cache(TieredStore(
+                Path(ckpt), tier_roots={"local": sim.node("node0").local_root}))
+            assert not probe["valid"]
+            assert probe["reason"].startswith("size mismatch")
+
+    sim = SlurmSim(tmp_path / "sim", nodes=1, pre_launch=hook)
+    jid = sim.submit(job_spec(ckpt, rdir, total=2, warm_wait_s=0.0))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert truncated, "fault was never injected"
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    r1 = reports(rdir)[1]
+    assert not (r1["restore_stats"] or {}).get("promoted")
+    assert r1["restore_reads_by_tier"].get("shared", 0) > 0
+    assert reports(rdir)[-1]["state_sum"] == pytest.approx(expected_sum(2))
+
+
+def test_mid_promotion_kill_leaves_no_marker_and_recovers(tmp_path):
+    """The job dies (os._exit) while the promotion copier is mid-copy: the
+    two-phase marker protocol must leave NO marker (only a torn .tmp), the
+    next attempt probes cold, restores the committed step from shared, and
+    the run converges bit-correct."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    observed = {}
+
+    def hook(rec):
+        if rec.requeues == 1:     # right after the mid-promotion death
+            root = node_ckpt_root(sim, "node0")
+            observed["marker_exists"] = (root / "PROMOTED.json").exists()
+            observed["torn_tmps"] = [str(p) for p in root.rglob("*.tmp")]
+
+    sim = SlurmSim(tmp_path / "sim", nodes=2, pre_launch=hook)
+    jid = sim.submit(job_spec(ckpt, rdir, total=3, warm_wait_s=0.0,
+                              mode="kill-mid-promotion", kill_on_attempt=0))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    assert rec.exit_codes[0] == REQUEUE_EXIT
+
+    assert observed["marker_exists"] is False, "torn promotion published a marker"
+    assert observed["torn_tmps"], "kill did not land mid-copy"
+    assert rec.placement_log[1]["reasons"]["node0"] == "no promoted marker"
+    reps = reports(rdir)
+    # attempt 0 died before reporting; attempt 1 restored step 0 from shared
+    assert reps[0]["attempt"] == 1 and reps[0]["start_step"] == 1
+    assert reps[0]["restore_reads_by_tier"].get("shared", 0) > 0
+    assert reps[-1]["state_sum"] == pytest.approx(expected_sum(3))
+
+
+def test_stale_marker_is_never_served(tmp_path):
+    """A newer step committed elsewhere supersedes node0's promoted cache:
+    the probe must read it as stale and the restore must serve the NEW bytes
+    — the restored checksum proves no stale bytes leaked."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    ext_tree = {k: np.full_like(v, 7.0) for k, v in make_tree().items()}
+    injected = []
+
+    def hook(rec):
+        if rec.requeues == 1:
+            ext = CheckpointManager(TieredStore(Path(ckpt)), replicas=1)
+            ext.save(5, ext_tree)
+            ext.commit(5)
+            injected.append(5)
+
+    sim = SlurmSim(tmp_path / "sim", nodes=2, pre_launch=hook)
+    jid = sim.submit(job_spec(ckpt, rdir, total=2, warm_wait_s=0.0))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert injected and rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+
+    entry = rec.placement_log[1]
+    assert entry["reasons"]["node0"].startswith("stale")
+    assert entry["scores"]["node0"] == SCORE_HINT
+    r1 = reports(rdir)[1]
+    assert not (r1["restore_stats"] or {}).get("promoted")
+    assert r1["state_sum"] == pytest.approx(state_sum(ext_tree))
+
+
+# ---------------------------------------------------------------------------
+# bounded wait-for-warm-node policy
+# ---------------------------------------------------------------------------
+
+def _warm_node0(sim: SlurmSim, ckpt: Path) -> None:
+    """Promote a committed step into node0's local tier, in-process."""
+    store = TieredStore(Path(ckpt),
+                        tier_roots={"local": sim.node("node0").local_root})
+    m = CheckpointManager(store, replicas=1, promote="eager")
+    m.save(0, make_tree())
+    m.commit(0)
+    m.wait_promotions()
+    m.close()
+    assert validate_promoted_cache(store)["valid"]
+
+
+def _blocker_spec(seconds: float) -> JobSpec:
+    return JobSpec(name="blocker",
+                   cmd=[sys.executable, "-c",
+                        f"import time; time.sleep({seconds})"],
+                   walltime_s=60, requeue=False)
+
+
+def test_bounded_wait_waits_for_busy_warm_node(tmp_path):
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2)
+    _warm_node0(sim, ckpt)
+    sim.submit(_blocker_spec(1.2))                     # occupies node0
+    jid = sim.submit(job_spec(ckpt, rdir, total=1, warm_wait_s=30.0))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    entry = rec.placement_log[0]
+    assert entry["node"] == "node0" and entry["waited_s"] >= 0.5
+    r0 = reports(rdir)[0]
+    assert r0["restore_stats"]["promoted"] is True
+    assert r0["restore_reads_by_tier"].get("shared", 0) == 0
+
+
+def test_bounded_wait_expires_and_falls_back_cold(tmp_path):
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2)
+    _warm_node0(sim, ckpt)
+    sim.submit(_blocker_spec(2.5))
+    jid = sim.submit(job_spec(ckpt, rdir, total=1, warm_wait_s=0.15))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    entry = rec.placement_log[0]
+    assert entry["node"] == "node1" and 0.15 <= entry["waited_s"] < 2.0
+    r0 = reports(rdir)[0]
+    assert not (r0["restore_stats"] or {}).get("promoted")
+    assert r0["restore_reads_by_tier"].get("shared", 0) > 0
+    assert r0["state_sum"] == pytest.approx(state_sum(make_tree()))
+
+
+# ---------------------------------------------------------------------------
+# cache-inventory API + placement-hint round trip (in-process, no scheduler)
+# ---------------------------------------------------------------------------
+
+def test_cache_inventory_validation_states(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, promote="eager", keep_last=10)
+    tree = {"w": rng.standard_normal((256,)).astype(np.float32),
+            "b": rng.standard_normal((64,)).astype(np.float32)}
+    m.save(1, tree)
+    m.commit(1)
+    m.wait_promotions()
+    inv = m.cache_inventory()
+    assert inv["valid"] and inv["step"] == inv["latest"] == 1
+    assert inv["reason"] == "warm" and inv["files"] >= 1
+
+    # newer commit without promotion -> stale
+    m_off = CheckpointManager(store, replicas=1, promote="off", keep_last=10)
+    m_off.save(2, tree)
+    m_off.commit(2)
+    inv = validate_promoted_cache(store)
+    assert not inv["valid"] and inv["reason"].startswith("stale")
+    assert inv["step"] == 1 and inv["latest"] == 2
+
+    # re-promote the latest, then damage it in increasingly subtle ways
+    m.prefetch_latest()
+    m.wait_promotions()
+    assert validate_promoted_cache(store)["valid"]
+    shard = sorted((store.root / "local" / "node0" / "ckpt").glob(
+        "step_*/shard_*.bin"))[-1]
+    faults.truncate_file(shard)
+    inv = validate_promoted_cache(store)
+    assert not inv["valid"] and inv["reason"].startswith("size mismatch")
+    shard.unlink()
+    inv = validate_promoted_cache(store)
+    assert not inv["valid"] and inv["reason"].startswith("missing promoted")
+    faults.tear_json(store.root / "local" / "node0" / "ckpt" / "PROMOTED.json")
+    inv = validate_promoted_cache(store)
+    assert not inv["valid"] and inv["reason"] == "torn promoted marker"
+    m.close()
+    m_off.close()
+
+
+def test_requeue_record_hint_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("SLURMSIM_NODE", "nodeX")
+    rf = RequeueFile(tmp_path / "requeue.json")
+    rec = rf.save(WalltimeTracker(limit_s=10), last_step=3, reason="test")
+    assert rec["node"] == "nodeX" and rec["placements"] == ["nodeX"]
+
+    aff = CacheAffinity(ckpt_dir=str(tmp_path))
+    assert aff.requeue_record()["node"] == "nodeX"
+    ranked = rank_nodes([("nodeX", tmp_path / "a"), ("nodeY", tmp_path / "b")],
+                        aff)
+    assert ranked["nodeX"]["score"] == SCORE_HINT
+    assert ranked["nodeY"]["score"] == 0

@@ -1,4 +1,5 @@
 """Signal trapping, walltime accounting, requeue records, slurmsim basics."""
+import json
 import os
 import signal
 import sys
@@ -56,6 +57,73 @@ def test_slurmsim_completion_and_failure(tmp_path):
     assert sim.job(bad).state == "FAILED"
     # append-mode output survives
     assert "hi" in (tmp_path / "ok.out").read_text()
+
+
+def test_slurmsim_comment_walltime_survives_max_requeues(tmp_path):
+    """The paper's --comment accounting: consumed walltime accumulates across
+    every requeue cycle until max_requeues exhausts, is persisted in the
+    comment file, and seeds a RESUBMITTED job even under a fresh SlurmSim."""
+    prog = "import time, sys; time.sleep(0.2); sys.exit(85)"
+    sim = SlurmSim(tmp_path)
+    jid = sim.submit(JobSpec("acct", [sys.executable, "-c", prog],
+                             walltime_s=30, max_requeues=2))
+    sim.run(timeout_s=60)
+    rec = sim.job(jid)
+    # 3 attempts (initial + 2 requeues), then the budget is spent -> FAILED
+    assert rec.state == "FAILED"
+    assert rec.requeues == 2 and rec.exit_codes == [85, 85, 85]
+    assert rec.consumed_s >= 3 * 0.2
+
+    comment = json.loads((tmp_path / "acct.comment").read_text())
+    assert comment["requeues"] == 2
+    assert comment["consumed_s"] == rec.consumed_s
+    assert len(comment["placements"]) == 3
+
+    # a fresh scheduler resubmitting the same job resumes the accounting
+    sim2 = SlurmSim(tmp_path)
+    jid2 = sim2.submit(JobSpec("acct", [sys.executable, "-c", "pass"],
+                               walltime_s=30))
+    assert sim2.job(jid2).consumed_s == rec.consumed_s
+    sim2.run(timeout_s=60)
+    comment2 = json.loads((tmp_path / "acct.comment").read_text())
+    assert comment2["consumed_s"] > rec.consumed_s
+
+
+def test_slurmsim_comment_walltime_survives_manual_preempt(tmp_path):
+    """scancel-style preemption must land in the same accounting: the
+    preempted attempt's runtime is consumed walltime, not lost."""
+    flag = tmp_path / "flag"
+    prog = (
+        "import sys, os, time; p=%r;\n"
+        "sys.exit(0) if os.path.exists(p) "
+        "else (open(p,'w').write('x'), time.sleep(30))"
+    ) % str(flag)
+    sim = SlurmSim(tmp_path)
+    jid = sim.submit(JobSpec("pre", [sys.executable, "-c", prog],
+                             walltime_s=60, max_requeues=3))
+    import threading
+    import time as _t
+
+    def preempt_when_running():
+        deadline = _t.monotonic() + 20
+        while _t.monotonic() < deadline:
+            if flag.exists() and sim.job(jid).state == "RUNNING":
+                _t.sleep(0.3)          # accrue some measurable walltime
+                sim.preempt(jid)
+                return
+            _t.sleep(0.02)
+
+    th = threading.Thread(target=preempt_when_running, daemon=True)
+    th.start()
+    sim.run(timeout_s=120)
+    th.join(timeout=5)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    assert rec.requeues == 1
+    comment = json.loads((tmp_path / "pre.comment").read_text())
+    assert comment["consumed_s"] >= 0.25       # preempted attempt counted
+    assert comment["consumed_s"] == rec.consumed_s
+    assert len(comment["placements"]) == 2
 
 
 def test_slurmsim_requeue_on_85(tmp_path):

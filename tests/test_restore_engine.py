@@ -9,6 +9,7 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+import faults
 from repro.checkpoint import serialization as SER
 from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.restore_engine import ParallelRestorer
@@ -45,32 +46,8 @@ def _assert_trees_equal(got, want):
         assert a.tobytes() == b.tobytes(), name
 
 
-class TierCountingStore(TieredStore):
-    """Counts every byte actually fetched, keyed by tier — both ranged reads
-    (``_pread``) and whole-file reads (``get``)."""
-
-    def __init__(self, *a, **kw):
-        super().__init__(*a, **kw)
-        self.read_by_tier: dict = {}
-
-    def _count(self, tier: str, n: int) -> None:
-        self.read_by_tier[tier] = self.read_by_tier.get(tier, 0) + n
-
-    def _tier_of(self, path: Path) -> str:
-        return Path(path).relative_to(self.root).parts[0]
-
-    def _pread(self, path, offset, nbytes):
-        data = super()._pread(path, offset, nbytes)
-        self._count(self._tier_of(path), len(data))
-        return data
-
-    def get(self, tier, rel):
-        data = super().get(tier, rel)
-        self._count(tier, len(data))
-        return data
-
-    def reset(self):
-        self.read_by_tier = {}
+class TierCountingStore(faults.ByteCountingStoreMixin, TieredStore):
+    """Counts every byte actually fetched, keyed by tier — see faults.py."""
 
 
 # ---------------------------------------------------------------------------
@@ -146,22 +123,21 @@ def test_parallel_range_read_falls_back_on_oserror(tmp_path, rng):
 
     man = CheckpointManager(store).read_manifest(3)
     a_shard = man["leaves"][0]["file"]
-    bad_node = store.replica_paths("shared", a_shard)[0].parts[-4:][0]
     bad_root = store.root / "shared"
-    real_pread = TieredStore._pread
+    bad_node = faults.replica_file(store, "shared", a_shard).parts[-4]
 
-    def flaky_pread(self, path, offset, nbytes):
-        # payload reads (big) on the primary replica's node fail; header
-        # reads (small) succeed so the plan is built against this replica
-        if (bad_root in Path(path).parents
-                and f"/{bad_node}/" in str(path) and nbytes > 4096):
-            raise OSError("simulated torn replica page")
-        return real_pread(self, path, offset, nbytes)
-
-    store._pread = flaky_pread.__get__(store)
-    m = CheckpointManager(store, restore_workers=4)
-    out, _ = m.restore(tree)
+    # payload reads (big) on the primary replica's node fail; header reads
+    # (small) succeed so the plan is built against this replica
+    injector = faults.PreadFaults(
+        store,
+        lambda p, off, n: (bad_root in p.parents and bad_node in p.parts
+                           and n > 4096),
+        error=OSError("simulated torn replica page"))
+    with injector:
+        m = CheckpointManager(store, restore_workers=4)
+        out, _ = m.restore(tree)
     _assert_trees_equal(out, tree)
+    assert injector.fired > 0
     assert m.last_restore_stats["replica_fallbacks"] > 0
 
 
@@ -171,16 +147,32 @@ def test_parallel_restore_raises_when_no_replica_intact(tmp_path, rng):
     m = CheckpointManager(store, replicas=2)
     m.save(1, tree)
     m.commit(1)
-    real_pread = TieredStore._pread
+    with faults.PreadFaults(store, lambda p, off, n: n > 4096,
+                            error=OSError("all replicas torn")):
+        with pytest.raises(SER.ChecksumError, match="no intact replica"):
+            CheckpointManager(store, restore_workers=4).restore(tree)
 
-    def dead_pread(self, path, offset, nbytes):
-        if nbytes > 4096:
-            raise OSError("all replicas torn")
-        return real_pread(self, path, offset, nbytes)
 
-    store._pread = dead_pread.__get__(store)
-    with pytest.raises(SER.ChecksumError, match="no intact replica"):
-        CheckpointManager(store, restore_workers=4).restore(tree)
+def test_chaos_mid_range_corruption_replica_fallback(tmp_path, rng):
+    """Chaos: one replica's payload bytes are flipped mid-file AFTER commit
+    (headers/footers stay parseable, so the plan is built against the BAD
+    replica).  Every range read crossing the corruption must CRC-fail and
+    fall back per-range to the intact replica, and the reassembled state
+    must be byte-identical."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng, big_kb=256)
+    m = CheckpointManager(store, replicas=2)
+    m.save(1, tree)
+    man = m.commit(1)
+
+    shard_rel = next(e["file"] for e in man["leaves"])
+    bad = faults.replica_file(store, "shared", shard_rel, idx=0)
+    faults.flip_byte(bad)          # mid-file: payload territory for v2 shards
+
+    eng = CheckpointManager(store, restore_workers=4)
+    out, _ = eng.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert eng.last_restore_stats["replica_fallbacks"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -223,10 +215,7 @@ def test_promotion_is_crc_verified_and_failure_is_soft(tmp_path, rng):
     # corrupt the only shared replica's payload AFTER commit: the copy lands
     # but its CRC check against the manifest must reject it
     shard_rel = next(e["file"] for e in man["leaves"])
-    p = store.replica_paths("shared", shard_rel)[0]
-    raw = bytearray(p.read_bytes())
-    raw[10] ^= 0xFF
-    p.write_bytes(raw)
+    faults.flip_byte(faults.replica_file(store, "shared", shard_rel), offset=10)
 
     m._promote_now(man)
     assert m.promote_failures, "corrupt promotion must be recorded"
