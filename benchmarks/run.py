@@ -21,6 +21,31 @@ for p in (str(SRC), str(ROOT)):
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
+def collect_run_meta(smoke: bool = False) -> dict:
+    """Provenance stamp for BENCH_ckpt_io.json: which commit / interpreter /
+    machine produced the numbers, so the bench trajectory is comparable
+    PR-over-PR (a faster row means nothing if the box shrank)."""
+    import os
+    import platform
+    import subprocess
+    import time
+
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        commit = None
+    return {
+        "git_commit": commit,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "cpu_count": os.cpu_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "smoke": bool(smoke),
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -31,6 +56,10 @@ def main(argv=None) -> None:
 
     from benchmarks import bench_coordinator, bench_cr_overhead, bench_kernels, bench_startup
 
+    # stamped FIRST so even a partially-crashed run is attributable, and the
+    # modules' own merge_bench_ckpt_io calls ride on top of it
+    bench_startup.merge_bench_ckpt_io(
+        {"run_meta": collect_run_meta(smoke=args.smoke)})
     rows = []
     for mod in (bench_kernels, bench_startup, bench_coordinator, bench_cr_overhead):
         rows.extend(mod.run(RESULTS, smoke=args.smoke))

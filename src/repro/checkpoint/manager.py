@@ -30,6 +30,7 @@ shards.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from pathlib import Path
 from typing import Optional
@@ -143,7 +144,9 @@ class CheckpointManager:
                  mode: str = "sync", incremental: bool = False,
                  keep_last: int = 3, prefix: str = "ckpt",
                  shard_format: int = 2, restore_workers: int = 0,
-                 promote: str = "off", promote_tier: str = "local"):
+                 promote: str = "off", promote_tier: str = "local",
+                 peer_roots: Optional[dict] = None,
+                 node: Optional[str] = None, registry=None):
         assert mode in ("sync", "async")
         assert shard_format in (1, 2)      # 1 = legacy writer (compat tests)
         assert promote in PROMOTE_POLICIES
@@ -168,6 +171,14 @@ class CheckpointManager:
         self.restore_workers = restore_workers
         self.promote = promote
         self.promote_tier = promote_tier
+        # peer fabric: scheduler-provided warm-peer hint ({name: local_root})
+        # plus an optional CacheRegistry for decentralized discovery; ``node``
+        # is this manager's own cluster-node identity (what it publishes
+        # registry entries under, and what it excludes from peer lookups)
+        self.peer_roots = {str(k): Path(v)
+                           for k, v in (peer_roots or {}).items()}
+        self.node = node
+        self.registry = registry
         self._writer = AsyncWriter() if mode == "async" else None
         # write-behind promotion: one copier, small bound — a restore returns
         # as soon as state is materialized; the tee into the node-local tier
@@ -177,6 +188,16 @@ class CheckpointManager:
                           if promote != "off" else None)
         self.promote_failures: list[str] = []
         self.promote_skipped = 0           # promotions dropped, pool was busy
+        self.promote_cancelled = 0         # promotions aborted by GC mid-copy
+        # in-flight promotion bookkeeping: gc() flags a step it is about to
+        # delete so the write-behind copier aborts instead of publishing a
+        # marker over half-copied, source-retired files.  Counted from
+        # SCHEDULE time (not execution) so a promotion still queued behind a
+        # busy copier is cancellable too, and counted per-step because the
+        # same step can be scheduled more than once (eager commit + restore).
+        self._promo_lock = threading.Lock()
+        self._promo_inflight: dict[int, int] = {}
+        self._promo_doomed: set[int] = set()
         self.last_restore_stats: Optional[dict] = None
         self._prev_manifest: Optional[dict] = None
 
@@ -377,6 +398,12 @@ class CheckpointManager:
         node reads node-local bytes only (the paper's container-image-cache
         effect); a restore whose step is already promoted is served entirely
         from the promoted copy.
+
+        Peer fabric: when this node is cold but warm peers are known (a
+        scheduler hint in ``peer_roots`` and/or a ``CacheRegistry``), the
+        restore is planned multi-source — local cache, warm peers round-robin,
+        then shared — and the promotion tee copies from the peer too, so one
+        cold restart warms this node without touching the shared tier at all.
         """
         all_steps = self.steps()
         if not all_steps:
@@ -387,6 +414,10 @@ class CheckpointManager:
             got = self._restore_promoted(step)
             if got is not None:
                 named, manifest, stats = got
+        if named is None and (self.peer_roots or self.registry is not None):
+            got = self._restore_from_peers(step)
+            if got is not None:
+                named, manifest, stats = got
         if named is None:
             manifest = self.read_manifest(step)
             named, stats = self._restore_files(self.tier, manifest)
@@ -395,6 +426,74 @@ class CheckpointManager:
         self._prev_manifest = manifest
         self.last_restore_stats = stats
         return tree, manifest
+
+    # -- peer cache fabric ---------------------------------------------
+    def _peer_sources(self, step: int) -> list[str]:
+        """Registered peer tiers whose promoted cache is warm for exactly
+        ``step``.  Candidates come from the scheduler hint (``peer_roots``)
+        merged with the registry; each one's ``PROMOTED.json`` is re-read
+        from the peer itself before it is trusted, so a stale inventory
+        entry — a peer that GC'd or superseded its cache — is skipped, never
+        served."""
+        cands: dict[str, tuple[Path, str]] = {}
+        for name, root in self.peer_roots.items():
+            if self.node is not None and name == self.node:
+                continue
+            cands[name] = (Path(root), self.promote_tier)
+        if self.registry is not None:
+            for name, e in self.registry.warm_peers(
+                    step, exclude=(self.node,)).items():
+                cands.setdefault(
+                    name, (Path(e["local_root"]), e.get("tier", "local")))
+        tiers: list[str] = []
+        for name in sorted(cands):
+            root, via = cands[name]
+            tier = self.store.add_peer(name, root, via_tier=via)
+            try:
+                marker = json.loads(
+                    self.store.get(tier, self._marker_rel()).decode())
+                if not isinstance(marker, dict) or marker.get("step") != step:
+                    continue                    # stale/foreign: never served
+            except (FileNotFoundError, ValueError, OSError):
+                continue
+            tiers.append(tier)
+        return tiers
+
+    def _restore_from_peers(self, step: int):
+        """Multi-source restore of ``step`` from warm peers' promoted caches.
+        Returns (named, manifest, stats) or None to fall through to the
+        shared tier.  The manifest comes from a peer's promoted copy (step
+        pinned; leaf CRCs from it are enforced on every payload byte
+        whatever the source), every range task falls back peer -> peer ->
+        shared, and the promotion tee is pointed at the peers first so the
+        warm-up copy avoids the shared tier too."""
+        peer_tiers = self._peer_sources(step)
+        if not peer_tiers:
+            return None
+        man_rel = f"{_step_dir(self.prefix, step)}/MANIFEST.json"
+        manifest = None
+        for t in peer_tiers:
+            try:
+                man = json.loads(self.store.get(t, man_rel).decode())
+                if man.get("step") != step:
+                    raise ValueError("peer manifest step mismatch")
+                manifest = man
+                break
+            except (FileNotFoundError, ValueError, OSError, KeyError):
+                continue
+        if manifest is None:
+            return None
+        sources = [self.promote_tier] + peer_tiers + [self.tier]
+        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        try:
+            named, st = engine.restore_multi(sources, self._by_file(manifest))
+        except (SER.ChecksumError, OSError, ValueError, KeyError):
+            return None          # peers useless end to end: plain shared path
+        stats = {"mode": "parallel", "tier": "peer", "peer": True,
+                 "peer_tiers": peer_tiers, **st.as_dict()}
+        self._schedule_promotion(manifest,
+                                 src_tiers=peer_tiers + [self.tier])
+        return named, manifest, stats
 
     # -- shared -> local tier promotion --------------------------------
     def _marker_rel(self) -> str:
@@ -409,19 +508,52 @@ class CheckpointManager:
 
     def invalidate_promoted(self) -> None:
         """Drop the promoted-tier cache (marker first, so a concurrent reader
-        never trusts files being deleted under it)."""
+        never trusts files being deleted under it); the registry entry — the
+        cluster-visible claim — comes off with it, so no peer keeps sourcing
+        from a cache that is going away."""
+        if self.registry is not None and self.node:
+            try:
+                self.registry.withdraw(self.node)
+            except OSError:
+                pass    # advisory inventory: a failed withdraw must never
+                        # kill the restore/gc path that is invalidating
         self.store.delete_file(self.promote_tier, self._marker_rel())
         self.store.delete_prefix(self.promote_tier, self.prefix)
 
-    def _schedule_promotion(self, manifest: dict) -> None:
+    def _promo_register(self, step: int) -> None:
+        with self._promo_lock:
+            self._promo_inflight[step] = self._promo_inflight.get(step, 0) + 1
+
+    def _promo_unregister(self, step: int) -> None:
+        with self._promo_lock:
+            n = self._promo_inflight.get(step, 0) - 1
+            if n <= 0:
+                self._promo_inflight.pop(step, None)
+                self._promo_doomed.discard(step)
+            else:
+                self._promo_inflight[step] = n
+
+    def _schedule_promotion(self, manifest: dict,
+                            src_tiers: Optional[list[str]] = None) -> None:
         """Best-effort, never blocking: a busy promotion pool means this
         promotion is dropped (counted), not that the training thread waits
-        on a cache copy."""
+        on a cache copy.  Registered BEFORE submission so gc() can cancel a
+        promotion that is still queued behind a busy copier — not only one
+        already executing."""
         if self._promoter is None:
             return
-        if not self._promoter.try_submit(
-                lambda man=manifest: self._promote_now(man)):
+        step = manifest["step"]
+        self._promo_register(step)
+
+        def task(man=manifest, srcs=src_tiers, s=step):
+            try:
+                self._promote_now(man, src_tiers=srcs)
+            finally:
+                self._promo_unregister(s)
+
+        if not self._promoter.try_submit(task):
             self.promote_skipped += 1
+            self._promo_unregister(step)
 
     def _restore_promoted(self, step: int):
         """Serve a restore entirely from the promoted tier when its cached
@@ -449,7 +581,12 @@ class CheckpointManager:
             self.invalidate_promoted()
             return None
 
-    def _promote_now(self, manifest: dict) -> None:
+    def _promote_cancelled(self, step: int) -> bool:
+        with self._promo_lock:
+            return step in self._promo_doomed
+
+    def _promote_now(self, manifest: dict,
+                     src_tiers: Optional[list[str]] = None) -> None:
         """Write-behind tee of one committed checkpoint into the promote
         tier.  Incremental-friendly: shard files the previous marker already
         promoted are kept in place (an unchanged multi-GB base shard is never
@@ -457,9 +594,24 @@ class CheckpointManager:
         CRC-verified against the manifest, and files the new manifest no
         longer references are retired.  The marker comes off FIRST and is
         republished LAST (two-phase — a torn promotion is invisible and gets
-        cleaned by the next one).  Failures are recorded, never raised:
-        promotion is an opportunistic cache."""
+        cleaned by the next one).  ``src_tiers`` orders where the copy reads
+        from (peer tiers first after a peer-served restore; default the
+        primary tier) with per-file fallback down the list.  A promotion
+        whose step ``gc()`` starts deleting mid-copy is cancelled before any
+        marker is published.  Failures are recorded, never raised: promotion
+        is an opportunistic cache."""
         step = manifest["step"]
+        # a doom flag set while this promotion was QUEUED must survive into
+        # execution, so entry only adds a registration — never clears flags
+        self._promo_register(step)
+        try:
+            self._promote_locked(manifest, step,
+                                 src_tiers or [self.tier])
+        finally:
+            self._promo_unregister(step)
+
+    def _promote_locked(self, manifest: dict, step: int,
+                        src_tiers: list[str]) -> None:
         marker = self._read_marker()
         cached = marker.get("step") if marker is not None else None
         if cached == step:
@@ -476,13 +628,18 @@ class CheckpointManager:
                     f"{_step_dir(self.prefix, cached)}/MANIFEST.json")
             for rel in have - set(by_file):
                 self.store.delete_file(self.promote_tier, rel)
+            copied: list[str] = []       # this run's copies, for cancel undo
             for rel, ents in by_file.items():
+                if self._promote_cancelled(step):
+                    self._abort_cancelled(step, copied)
+                    return          # gc is deleting this step: no marker
                 if rel in have and self.store.exists(self.promote_tier, rel):
                     continue        # already promoted + CRC-verified
-                self.store.copy_file(self.tier, rel, self.promote_tier)
-                self.store.read_shard_leaves(
-                    self.promote_tier, rel, [e["path"] for e in ents],
-                    expect_crcs={e["path"]: e["crc32"] for e in ents})
+                self._copy_promoted(rel, ents, src_tiers)
+                copied.append(rel)
+            if self._promote_cancelled(step):
+                self._abort_cancelled(step, copied)
+                return
             sdir = _step_dir(self.prefix, step)
             self.store.put(self.promote_tier, f"{sdir}/MANIFEST.json",
                            json.dumps(manifest).encode(), replicas=1)
@@ -491,9 +648,51 @@ class CheckpointManager:
                 json.dumps({"step": step, "files": sorted(by_file),
                             "promoted_at": time.time()}).encode(),
                 replicas=1)
+            if self.registry is not None and self.node:
+                try:
+                    self.registry.publish(
+                        self.node, step=step, files=sorted(by_file),
+                        local_root=self.store.tier_roots.get(
+                            self.promote_tier, self.store.root),
+                        tier=self.promote_tier)
+                except OSError as e:
+                    # the registry is ADVISORY: an unwritable inventory must
+                    # not invalidate the (complete, CRC-verified, marker-
+                    # published) local cache it merely advertises
+                    self.promote_failures.append(
+                        f"registry publish step {step}: {e!r}")
         except Exception as e:  # noqa: BLE001 — cache miss, not a failure
             self.promote_failures.append(f"step {step}: {e!r}")
             self.invalidate_promoted()
+
+    def _abort_cancelled(self, step: int, copied: list[str]) -> None:
+        """A cancelled promotion must not leak its partial copies: no marker
+        will ever reference them, so nothing else would retire them.  Only
+        THIS run's copies go — files inherited from the previous marker stay
+        for the follow-up promotion to reuse."""
+        self.promote_cancelled += 1
+        for rel in copied:
+            try:
+                self.store.delete_file(self.promote_tier, rel)
+            except OSError:
+                pass                # best-effort: orphans are data, not harm
+
+    def _copy_promoted(self, rel: str, ents: list[dict],
+                       src_tiers: list[str]) -> None:
+        """Copy + CRC-verify one shard file into the promote tier from the
+        first source that yields intact bytes (a peer dying mid-promotion
+        falls back to the next peer, then the primary tier)."""
+        last: Optional[Exception] = None
+        for src in src_tiers:
+            try:
+                self.store.copy_file(src, rel, self.promote_tier)
+                self.store.read_shard_leaves(
+                    self.promote_tier, rel, [e["path"] for e in ents],
+                    expect_crcs={e["path"]: e["crc32"] for e in ents})
+                return
+            except Exception as e:  # noqa: BLE001 — try the next source
+                last = e
+        raise last if last is not None else FileNotFoundError(rel)
 
     def prefetch_latest(self, step: Optional[int] = None) -> Optional[int]:
         """Eager promotion: schedule a write-behind copy of the latest (or
@@ -528,6 +727,22 @@ class CheckpointManager:
             man = self.read_manifest(s)
             for e in man["leaves"]:
                 referenced_dirs.add(str(Path(e["file"]).parent))
+        doomed = [s for s in steps
+                  if s not in keep
+                  and _step_dir(self.prefix, s) not in referenced_dirs]
+        if doomed and self._promoter is not None:
+            # GC/promotion race: the write-behind copier may be mid-copy of a
+            # step whose shared shards are about to vanish.  Flag it so the
+            # copier aborts before publishing a marker, and drop any marker
+            # already naming a doomed step (marker first — a reader must
+            # never trust files being deleted under it).
+            with self._promo_lock:
+                for s in doomed:
+                    if s in self._promo_inflight:
+                        self._promo_doomed.add(s)
+            marker = self._read_marker()
+            if marker is not None and marker.get("step") in doomed:
+                self.invalidate_promoted()
         for s in steps:
             if s in keep:
                 continue

@@ -1,31 +1,39 @@
-"""Parallel multi-shard restore engine (paper Fig. 2: restart latency).
+"""Parallel multi-shard, multi-source restore engine (paper Fig. 2).
 
 The paper's headline cost is restoring checkpoint images from the shared
-parallel filesystem at scale; DMTCP's answer is parallel per-rank restore and
-NERSC's is a node-local container-image cache.  This module is the framework
-analogue of the first half: ``CheckpointManager.restore`` hands the manifest's
-(file -> leaves) map to a ``ParallelRestorer``, which fans the reads out
-across a thread pool instead of walking shards one at a time.  (The second
-half — teeing restored shards into the node-local tier — lives in
-``CheckpointManager``'s promotion path; see manager.py.)
+parallel filesystem at scale; DMTCP's answer is parallel per-rank restore plus
+peers cooperating on restart, and NERSC's is a node-local container-image
+cache.  This module is the framework analogue of all three:
+``CheckpointManager.restore`` hands the manifest's (file -> leaves) map to a
+``ParallelRestorer``, which fans the reads out across a thread pool instead of
+walking shards one at a time — and, via ``restore_multi``, plans every
+coalesced run against an ordered SOURCE LIST (local promoted cache, warm
+peers' caches over the interconnect, then the shared filesystem) instead of a
+single tier.
 
 Plan phase: every referenced shard's header (a few hundred bytes) is fetched
-concurrently, manifest CRCs are pinned against it, and the requested leaves
-are coalesced into contiguous runs — one ranged read each.  Runs larger than
-``split_bytes`` are split at leaf boundaries so one multi-GB shard becomes
-several same-order tasks instead of a single straggler.
+concurrently from the first source holding a parseable replica, manifest CRCs
+are pinned against it, and the requested leaves are coalesced into contiguous
+runs — one ranged read each.  Runs larger than ``split_bytes`` are split at
+leaf boundaries so one multi-GB shard becomes several same-order tasks
+instead of a single straggler.
 
 Schedule phase: tasks are issued largest-first (LPT — the classic greedy
 bound on makespan), so the big reads start immediately and the small ones
 backfill the tail.  Per-tier concurrency comes from ``TierSpec.concurrency``
-via ``TieredStore.tier_slots``: a pool sized for the RAM tier cannot stampede
-the shared parallel filesystem, because each in-flight read against a tier
-holds one of that tier's slots.
+via ``TieredStore.tier_slots``: each in-flight read against a tier holds one
+of that tier's slots, so a pool sized for the RAM tier cannot stampede the
+shared parallel filesystem — and since every registered peer tier brings its
+OWN slots, k warm peers aggregate to k times the per-peer read bandwidth.
+With multiple warm peers the per-task source chains are rotated round-robin,
+so the range load spreads evenly across the peer set.
 
-Fault model: each range task retries across the replica set independently —
-an ``OSError`` / short read / CRC mismatch on one replica falls back to the
-next, exactly like the serial reader, but scoped to the failed range rather
-than the whole shard.
+Fault model: each range task retries down its source chain independently —
+an ``OSError`` / short read / CRC mismatch on one source falls back to the
+next (the next peer, then the shared tier), exactly like the serial reader's
+replica fallback, but scoped to the failed range rather than the whole shard.
+Manifest CRCs are pinned whatever the source, so a stale or corrupt peer can
+cost a retry, never wrong bytes.
 """
 from __future__ import annotations
 
@@ -33,30 +41,48 @@ import dataclasses
 import os
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
+from typing import Optional
 
 import numpy as np
 
 from repro.checkpoint import serialization as SER
+from repro.checkpoint.store import is_peer_tier
 
 DEFAULT_SPLIT_BYTES = 32 << 20      # target max payload bytes per range task
 
+ENV_RESTORE_WORKERS = "REPRO_RESTORE_WORKERS"
 
-def auto_workers() -> int:
-    return max(2, min(8, os.cpu_count() or 2))
+
+def auto_workers(cap: Optional[int] = None) -> int:
+    """Restore pool sizing.  ``REPRO_RESTORE_WORKERS`` wins outright when
+    set; otherwise the CPU count, capped by ``cap`` — the restore tier's
+    ``TierSpec.concurrency`` budget (summed across sources for multi-source
+    restores), so the pool is sized by what the storage can actually absorb
+    rather than a magic constant."""
+    env = os.environ.get(ENV_RESTORE_WORKERS, "").strip()
+    if env:
+        try:
+            return max(1, int(env))
+        except ValueError:
+            pass        # mangled override degrades to auto, never kills a restore
+    n = max(2, os.cpu_count() or 2)
+    if cap:
+        n = min(n, max(1, cap))
+    return n
 
 
 @dataclasses.dataclass
 class _ShardPlan:
     rel: str
-    paths: list[Path]               # replica candidates; paths[0] parsed clean
+    by_tier: dict                   # tier -> replica paths (plan-clean first)
     want: list[dict]                # offset-sorted header entries to fetch
 
 
 @dataclasses.dataclass
 class _RangeTask:
     rel: str
-    paths: list[Path]
-    run: list[dict]                 # one contiguous run of header entries
+    sources: list[tuple[str, Path]]  # ordered (tier, path) fallback chain
+    run: list[dict]                  # one contiguous run of header entries
     nbytes: int
 
 
@@ -67,6 +93,8 @@ class RestoreStats:
     tasks: int = 0
     bytes_read: int = 0             # payload bytes (headers excluded)
     replica_fallbacks: int = 0
+    sources: list = dataclasses.field(default_factory=list)
+    bytes_by_tier: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -76,31 +104,54 @@ class ParallelRestorer:
     """Fan manifest-referenced byte ranges out across a read pool.
 
     ``restore(tier, by_file)`` takes ``{shard_rel: [manifest leaf entries]}``
-    and returns ``({leaf_path: np.ndarray}, RestoreStats)``.  Results are
+    and returns ``({leaf_path: np.ndarray}, RestoreStats)``;
+    ``restore_multi(sources, by_file)`` does the same against an ordered
+    source-tier list with per-range fallback down the chain.  Results are
     byte-identical to the serial ``TieredStore.read_shard_leaves`` loop — the
-    engine only changes WHEN each range is read, never what is verified.
+    engine only changes WHERE and WHEN each range is read, never what is
+    verified.
     """
 
     def __init__(self, store, *, workers: int = 0,
                  split_bytes: int = DEFAULT_SPLIT_BYTES):
         self.store = store
-        self.workers = workers if workers > 0 else auto_workers()
+        self.workers = workers          # 0 = auto-size per restore (tier-aware)
         self.split_bytes = split_bytes
 
+    def _effective_workers(self, sources: list[str]) -> int:
+        if self.workers > 0:
+            return self.workers
+        caps = [self.store.tiers[t].concurrency for t in sources
+                if t in self.store.tiers]
+        cap = None if (not caps or any(not c for c in caps)) else sum(caps)
+        return auto_workers(cap)
+
     # -- plan ----------------------------------------------------------
-    def _plan_shard(self, tier: str, rel: str, ents: list[dict]) -> _ShardPlan:
-        """Parse one replica's header, pin manifest CRCs against it, and keep
-        the other replicas as per-range fallbacks."""
+    def _plan_shard(self, sources: list[str], rel: str, ents: list[dict],
+                    shard_index: int = 0) -> _ShardPlan:
+        """Parse one candidate's header, pin manifest CRCs against it, and
+        keep every other candidate (all sources) as per-range fallbacks.
+        Peer candidates are rotated by ``shard_index`` so header traffic —
+        like range traffic — spreads across the warm peer set."""
         leaf_paths = [e["path"] for e in ents]
         expect = {e["path"]: e["crc32"] for e in ents
                   if e.get("crc32") is not None}
-        candidates = self.store.replica_paths(tier, rel)
-        errs: list[tuple[str, str]] = []
-        for i, p in enumerate(candidates):
+        by_tier = {t: self.store.replica_paths(t, rel) for t in sources}
+        by_tier = {t: ps for t, ps in by_tier.items() if ps}
+        candidates = [(t, p) for t in _ordered_tiers(sources, by_tier,
+                                                     shard_index)
+                      for p in by_tier[t]]
+        errs: list[tuple[str, str, str]] = []
+        for tier, p in candidates:
             try:
-                size = p.stat().st_size
-                header = SER.read_shard_header(
-                    lambda off, n: self.store.pread(tier, p, off, n), size)
+                # header reads hold tier slots like payload reads do — tier
+                # concurrency is a property of the storage, not of the phase
+                # (and it is what lets k peers aggregate during planning)
+                with self.store.tier_slots(tier):
+                    size = p.stat().st_size
+                    header = SER.read_shard_header(
+                        lambda off, n: self.store.pread(tier, p, off, n),
+                        size)
                 by_path = {t["path"]: t for t in header["tensors"]}
                 for path, crc in expect.items():
                     t = by_path.get(path)
@@ -108,55 +159,92 @@ class ParallelRestorer:
                         raise SER.ChecksumError(
                             f"manifest crc mismatch: {path} in {rel}")
                 want = SER.select_leaves(header, leaf_paths)
-                paths = [p] + candidates[:i] + candidates[i + 1:]
-                return _ShardPlan(rel=rel, paths=paths, want=want)
+                # plan-clean path first within its tier: range reads start on
+                # a replica whose index is known parseable
+                ps = by_tier[tier]
+                by_tier[tier] = [p] + [q for q in ps if q != p]
+                return _ShardPlan(rel=rel, by_tier=by_tier, want=want)
             except (SER.ChecksumError, OSError, ValueError, KeyError) as e:
-                errs.append((str(p), repr(e)))
-        raise SER.ChecksumError(f"no intact replica for {tier}:{rel}: {errs}")
+                errs.append((tier, str(p), repr(e)))
+        raise SER.ChecksumError(
+            f"no intact replica for {'/'.join(sources)}:{rel}: {errs}")
 
     # -- execute -------------------------------------------------------
-    def _exec_task(self, tier: str, task: _RangeTask):
-        """One ranged read with per-replica fallback; returns the task's
-        leaves plus (bytes_read, fallback_count)."""
-        errs: list[tuple[str, str]] = []
-        for i, p in enumerate(task.paths):
+    def _exec_task(self, task: _RangeTask):
+        """One ranged read with fallback down the (tier, path) source chain;
+        returns the task's leaves plus (bytes_read, fallback_count, tier)."""
+        errs: list[tuple[str, str, str]] = []
+        for i, (tier, p) in enumerate(task.sources):
             out: dict[str, np.ndarray] = {}
             try:
                 with self.store.tier_slots(tier):
                     nbytes = SER.read_run(
                         lambda off, n: self.store.pread(tier, p, off, n),
                         task.run, out)
-                return out, nbytes, i
+                return out, nbytes, i, tier
             except (SER.ChecksumError, OSError, ValueError) as e:
-                errs.append((str(p), repr(e)))
+                errs.append((tier, str(p), repr(e)))
         raise SER.ChecksumError(
             f"no intact replica for {task.rel}"
             f"@{task.run[0]['offset']}+{task.nbytes}: {errs}")
 
     # -- public --------------------------------------------------------
     def restore(self, tier: str, by_file: dict[str, list[dict]]):
-        stats = RestoreStats(workers=self.workers, files=len(by_file))
+        return self._run([tier], by_file)
+
+    def restore_multi(self, sources: list[str],
+                      by_file: dict[str, list[dict]]):
+        """Multi-source restore: every range task gets a fallback chain built
+        from ``sources`` in order, with warm peers rotated round-robin per
+        task so k peers aggregate bandwidth instead of queueing on one."""
+        return self._run(list(sources), by_file)
+
+    def _run(self, sources: list[str], by_file: dict[str, list[dict]]):
+        workers = self._effective_workers(sources)
+        stats = RestoreStats(workers=workers, files=len(by_file),
+                             sources=list(sources))
         if not by_file:
             return {}, stats
         named: dict[str, np.ndarray] = {}
-        with ThreadPoolExecutor(max_workers=self.workers,
+        with ThreadPoolExecutor(max_workers=workers,
                                 thread_name_prefix="ckpt-restore") as pool:
             plans = list(pool.map(
-                lambda item: self._plan_shard(tier, item[0], item[1]),
-                by_file.items()))
-            tasks = [
-                _RangeTask(rel=plan.rel, paths=plan.paths, run=run,
-                           nbytes=sum(t["nbytes"] for t in run))
-                for plan in plans
+                lambda item: self._plan_shard(sources, item[1][0], item[1][1],
+                                              shard_index=item[0]),
+                enumerate(by_file.items())))
+            tasks = []
+            j = 0
+            for plan in plans:
                 for run in SER.coalesce_runs(plan.want,
-                                             max_run_bytes=self.split_bytes)
-            ]
+                                             max_run_bytes=self.split_bytes):
+                    chain = [(t, p)
+                             for t in _ordered_tiers(sources, plan.by_tier, j)
+                             for p in plan.by_tier[t]]
+                    tasks.append(_RangeTask(
+                        rel=plan.rel, sources=chain, run=run,
+                        nbytes=sum(t["nbytes"] for t in run)))
+                    j += 1
             tasks.sort(key=lambda t: t.nbytes, reverse=True)   # LPT order
             stats.tasks = len(tasks)
-            futures = [pool.submit(self._exec_task, tier, t) for t in tasks]
+            futures = [pool.submit(self._exec_task, t) for t in tasks]
             for fut in futures:
-                out, nbytes, fallbacks = fut.result()
+                out, nbytes, fallbacks, tier = fut.result()
                 named.update(out)
                 stats.bytes_read += nbytes
                 stats.replica_fallbacks += fallbacks
+                stats.bytes_by_tier[tier] = (
+                    stats.bytes_by_tier.get(tier, 0) + nbytes)
         return named, stats
+
+
+def _ordered_tiers(sources: list[str], by_tier: dict, index: int) -> list[str]:
+    """Source order for one task: non-peer tiers keep their position, the
+    peer subset is rotated by ``index`` (round-robin) so consecutive tasks
+    start on different warm peers — that is the bandwidth aggregation."""
+    avail = [t for t in sources if by_tier.get(t)]
+    peers = [t for t in avail if is_peer_tier(t)]
+    if len(peers) <= 1:
+        return avail
+    k = index % len(peers)
+    rotated = iter(peers[k:] + peers[:k])
+    return [next(rotated) if is_peer_tier(t) else t for t in avail]

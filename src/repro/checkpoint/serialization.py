@@ -178,26 +178,50 @@ def write_shard_bytes(records: list[tuple[str, np.ndarray]],
 
 ReadAt = Callable[[int, int], bytes]     # (offset, nbytes) -> bytes
 
+# One tail read this large usually captures trailer + footer together, so a
+# v2 header costs ONE ranged read instead of three (magic, trailer, footer).
+# Per-op latency dominates header fetches on the shared tier and the peer
+# fabric, so the restore planner's per-shard cost drops ~3x with this hint.
+HEADER_TAIL_HINT = 4096
 
-def read_shard_header(read_at: ReadAt, size: int) -> dict:
+
+def read_shard_header(read_at: ReadAt, size: int, *,
+                      tail_hint: int = HEADER_TAIL_HINT) -> dict:
     """Parse the tensor index of a shard using only ranged reads.
 
     ``read_at(offset, nbytes)`` is any positioned-read primitive (pread/mmap
     slice/HTTP range).  Returns the header dict with every tensor ``offset``
     normalized to an ABSOLUTE file offset regardless of format, so callers can
     ranged-read leaves uniformly.
+
+    v2 fast path: one ``tail_hint``-byte read from the end of the file grabs
+    the trailer and (almost always) the whole footer; only a footer larger
+    than the hint costs a second read.  v1 keeps the magic-first probe.
     """
+    if size >= 8 + TRAILER_LEN:
+        tail_n = min(size, max(tail_hint, TRAILER_LEN))
+        tail = bytes(read_at(size - tail_n, tail_n))
+        if tail[-8:] == MAGIC2:
+            try:
+                (flen,) = struct.unpack("<Q", tail[-TRAILER_LEN:-8])
+                if flen > size - 8 - TRAILER_LEN:
+                    raise ValueError("bad v2 checkpoint footer length")
+                if flen + TRAILER_LEN <= tail_n:
+                    raw = tail[tail_n - TRAILER_LEN - flen:
+                               tail_n - TRAILER_LEN]
+                else:
+                    raw = bytes(read_at(size - TRAILER_LEN - flen, flen))
+                return json.loads(raw.decode())
+            except (ValueError, UnicodeDecodeError, struct.error):
+                # a v1 shard whose last payload bytes collide with MAGIC2
+                # must still parse — the leading magic below disambiguates
+                # (and a genuinely damaged v2 still errors there)
+                pass
     magic = bytes(read_at(0, 8))
     if magic == MAGIC2:
         if size < 8 + TRAILER_LEN:
             raise ValueError("truncated v2 checkpoint shard")
-        tail = bytes(read_at(size - TRAILER_LEN, TRAILER_LEN))
-        if tail[8:] != MAGIC2:
-            raise ValueError("bad v2 checkpoint shard trailer")
-        (flen,) = struct.unpack("<Q", tail[:8])
-        if flen > size - 8 - TRAILER_LEN:
-            raise ValueError("bad v2 checkpoint footer length")
-        return json.loads(bytes(read_at(size - TRAILER_LEN - flen, flen)).decode())
+        raise ValueError("bad v2 checkpoint shard trailer")
     if magic == MAGIC:
         (hlen,) = struct.unpack("<I", bytes(read_at(8, 4)))
         header = json.loads(bytes(read_at(12, hlen)).decode())

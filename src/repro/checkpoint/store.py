@@ -15,18 +15,31 @@ bytes/stream and the remaining k-1 replicas are fanned out with
 replica count multiplies disk traffic but not CPU serialization work.
 
 Ranged access: ``get_range`` / ``read_shard_leaves`` serve sub-file reads via
-positional ``pread``-style access (one open + seeks), which is what lets the
-manager's incremental restore pull single leaves out of multi-GB shards.
+positional ``pread``-style access, which is what lets the manager's
+incremental restore pull single leaves out of multi-GB shards.  The ``_pread``
+choke point keeps one open fd per replica file (``os.pread`` is positional and
+thread-safe), so a task's coalesced reads — and the header/trailer/footer
+triplet of every plan — reuse a descriptor instead of re-opening the shard
+per range; every store-side mutation (rename-into-place, delete) invalidates
+the cached descriptor so a replaced file is never read through a stale fd.
+
+Peer tiers: ``add_peer`` registers another node's local root as an
+addressable read-only tier (``peer:<node>``) carrying the ``peer``
+``TierSpec`` — its own concurrency slots and simulated inter-node latency —
+which is what lets the restore engine source ranges from a warm peer's
+promoted cache instead of the shared parallel filesystem.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import queue
 import random
 import shutil
 import threading
 import time
+from collections import OrderedDict
 from pathlib import Path
 from typing import BinaryIO, Callable, Optional
 
@@ -97,6 +110,18 @@ class _FanoutSink:
         self._join()
 
 
+class _FdEntry:
+    """One cached read descriptor: refcounted so LRU eviction / invalidation
+    never closes an fd another thread is mid-``pread`` on."""
+
+    __slots__ = ("fd", "refs", "dead")
+
+    def __init__(self, fd: int):
+        self.fd = fd
+        self.refs = 0
+        self.dead = False
+
+
 @dataclasses.dataclass
 class TierSpec:
     name: str
@@ -110,7 +135,18 @@ DEFAULT_TIERS = {
     "ram": TierSpec("ram", 40.0, 0.00005, nodes=1, concurrency=16),
     "local": TierSpec("local", 3.0, 0.0005, nodes=1, concurrency=4),
     "shared": TierSpec("shared", 1.0, 0.02, nodes=8, concurrency=8),
+    # template for peer tiers (add_peer): a warm peer's node-local cache read
+    # over the interconnect — slower than our own local tier, but far lower
+    # per-op latency than the contended shared parallel FS, and each peer
+    # brings its OWN concurrency slots (bandwidth aggregates across k peers)
+    "peer": TierSpec("peer", 2.5, 0.002, nodes=1, concurrency=4),
 }
+
+PEER_TIER_PREFIX = "peer:"
+
+
+def is_peer_tier(tier: str) -> bool:
+    return tier.startswith(PEER_TIER_PREFIX)
 
 # tiers that live on a cluster node rather than the shared parallel FS —
 # the set every per-node mount point must cover
@@ -144,9 +180,36 @@ class TieredStore:
         self._rng = rng if rng is not None else random.Random(seed)
         self._sems: dict[str, threading.BoundedSemaphore] = {}
         self._sems_lock = threading.Lock()
+        # peer tiers: tier name -> concrete replica dirs on the peer's root
+        self._peer_dirs: dict[str, list[Path]] = {}
+        # fd cache for positional reads (see _pread); bounded, refcounted
+        self._fds: OrderedDict[Path, _FdEntry] = OrderedDict()
+        self._fd_lock = threading.Lock()
+        self._fd_cap = 64
+
+    # ------------------------------------------------------------------
+    def add_peer(self, name: str, root, *, via_tier: str = "local") -> str:
+        """Register (or re-point) another node's local root as a read-only
+        tier ``peer:<name>``.  ``via_tier`` is the tier the peer's promoted
+        cache lives in under its root (the peer's ``promote_tier``).  The new
+        tier carries the ``peer`` TierSpec — its own concurrency slots and
+        simulated inter-node latency — so peer reads are costed and bounded
+        independently of every other source."""
+        tier = f"{PEER_TIER_PREFIX}{name}"
+        template = self.tiers.get("peer", DEFAULT_TIERS["peer"])
+        self.tiers[tier] = dataclasses.replace(template, name=tier)
+        n = self.tiers[via_tier].nodes if via_tier in self.tiers else 1
+        self._peer_dirs[tier] = [
+            Path(root) / via_tier / f"node{i}" for i in range(n)]
+        return tier
+
+    def peer_tiers(self) -> list[str]:
+        return sorted(self._peer_dirs)
 
     # ------------------------------------------------------------------
     def _node_dirs(self, tier: str) -> list[Path]:
+        if tier in self._peer_dirs:
+            return self._peer_dirs[tier]
         spec = self.tiers[tier]
         root = self.tier_roots.get(tier, self.root)
         return [root / tier / f"node{i}" for i in range(spec.nodes)]
@@ -196,6 +259,7 @@ class TieredStore:
             tmp = p.with_suffix(p.suffix + ".tmp")
             shutil.copyfile(primary, tmp)   # sendfile/copy_file_range path
             tmp.rename(p)
+            self._fd_invalidate(p)
             self._simulate(tier, nbytes)
             written.append(self._rel_of(p))
 
@@ -208,6 +272,7 @@ class TieredStore:
         tmp = primary.with_suffix(primary.suffix + ".tmp")
         tmp.write_bytes(data)
         tmp.rename(primary)
+        self._fd_invalidate(primary)
         self._simulate(tier, len(data))
         written = [self._rel_of(primary)]
         self._replicate(tier, primary, rel, chosen[1:], written)
@@ -246,16 +311,109 @@ class TieredStore:
             raise
         for tmp, final in zip(tmps, finals):
             tmp.rename(final)
+            self._fd_invalidate(final)
             self._simulate(tier, sink.nbytes)
         return [self._rel_of(p) for p in finals]
+
+    # -- fd cache ------------------------------------------------------
+    def _fd_acquire(self, path: Path) -> "_FdEntry":
+        with self._fd_lock:
+            ent = self._fds.get(path)
+            if ent is not None:
+                ent.refs += 1
+                self._fds.move_to_end(path)
+                return ent
+        # open outside the lock: a slow/erroring open must not serialize
+        # every other tier's reads behind it
+        fd = os.open(path, os.O_RDONLY)
+        ent = _FdEntry(fd)
+        ent.refs = 1
+        with self._fd_lock:
+            if path in self._fds:           # raced: use ours once, then close
+                ent.dead = True
+                return ent
+            # TOCTOU guard: the file may have been renamed-over or deleted
+            # between the open above and here — its _fd_invalidate found
+            # nothing to kill, so caching now would pin the dead inode.
+            # Checked under the lock: any mutation AFTER this stat must wait
+            # for the lock and will find (and kill) our entry.
+            try:
+                live = os.stat(path).st_ino == os.fstat(ent.fd).st_ino
+            except OSError:
+                live = False
+            if not live:
+                ent.dead = True             # replaced mid-open: use once only
+                return ent
+            self._fds[path] = ent
+            while len(self._fds) > self._fd_cap:
+                for p, e in self._fds.items():       # LRU with refs==0 only
+                    if e.refs == 0:
+                        e.dead = True
+                        os.close(e.fd)
+                        del self._fds[p]
+                        break
+                else:
+                    break
+            return ent
+
+    def _fd_release(self, path: Path, ent: "_FdEntry") -> None:
+        with self._fd_lock:
+            ent.refs -= 1
+            if ent.dead and ent.refs == 0:
+                os.close(ent.fd)
+                if self._fds.get(path) is ent:
+                    del self._fds[path]
+
+    def _fd_invalidate(self, path: Path) -> None:
+        """Drop the cached descriptor for ``path`` — called by every mutation
+        that replaces or removes a file, so no read ever goes through a stale
+        fd to a renamed-over or deleted inode."""
+        with self._fd_lock:
+            ent = self._fds.pop(Path(path), None)
+            if ent is not None:
+                ent.dead = True
+                if ent.refs == 0:
+                    os.close(ent.fd)
+
+    def _fd_invalidate_under(self, prefix: Path) -> None:
+        prefix = Path(prefix)
+        with self._fd_lock:
+            doomed = [p for p in self._fds
+                      if p == prefix or prefix in p.parents]
+        for p in doomed:
+            self._fd_invalidate(p)
+
+    def close(self) -> None:
+        """Close every cached read descriptor (reads after this just re-open)."""
+        with self._fd_lock:
+            ents, self._fds = list(self._fds.values()), OrderedDict()
+        for ent in ents:
+            ent.dead = True
+            if ent.refs == 0:
+                os.close(ent.fd)
+
+    def __del__(self):  # noqa: D105 — best-effort fd cleanup
+        try:
+            self.close()
+        except Exception:  # noqa: BLE001 — interpreter may be tearing down
+            pass
 
     # ------------------------------------------------------------------
     def _pread(self, path: Path, offset: int, nbytes: int) -> bytes:
         """Positional read — the single choke point for all ranged I/O (tests
-        wrap/override it to count bytes actually fetched)."""
-        with open(path, "rb") as fp:
-            fp.seek(offset)
-            return fp.read(nbytes)
+        wrap/override it to count bytes actually fetched).  Reuses one cached
+        fd per replica file across a task's coalesced reads (``os.pread`` is
+        positional, so concurrent range tasks share the descriptor safely)."""
+        if not hasattr(os, "pread"):            # non-POSIX fallback
+            with open(path, "rb") as fp:
+                fp.seek(offset)
+                return fp.read(nbytes)
+        path = Path(path)
+        ent = self._fd_acquire(path)
+        try:
+            return os.pread(ent.fd, nbytes, offset)
+        finally:
+            self._fd_release(path, ent)
 
     def replica_paths(self, tier: str, rel: str) -> list[Path]:
         """Existing replica files for ``rel``, primary-placement order.  The
@@ -289,6 +447,7 @@ class TieredStore:
         tmp = dst.with_suffix(dst.suffix + ".tmp")
         shutil.copyfile(src_path, tmp)      # sendfile/copy_file_range path
         tmp.rename(dst)
+        self._fd_invalidate(dst)
         self._simulate(dst_tier, dst.stat().st_size)
         return dst
 
@@ -399,12 +558,17 @@ class TieredStore:
             p = nd / prefix
             if p.is_dir():
                 shutil.rmtree(p, ignore_errors=True)
+                # invalidate AFTER the mutation (like put/copy_file): a read
+                # racing the rmtree either misses the cache or gets an entry
+                # this invalidation then kills — never a silently-pinned fd
+                self._fd_invalidate_under(p)
 
     def delete_file(self, tier: str, rel: str) -> None:
         for nd in self._node_dirs(tier):
             p = nd / rel
             if p.exists():
                 p.unlink()
+                self._fd_invalidate(p)
 
     def list_prefix(self, tier: str, prefix: str) -> set[str]:
         out: set[str] = set()

@@ -36,11 +36,16 @@ class CRManager:
                  requeue_file: Optional[RequeueFile] = None,
                  interval_steps: Optional[int] = None,
                  cfg=None, rules=None, node: Optional[str] = None,
+                 peers: Optional[dict] = None,
                  log: Callable[[str], None] = print):
         self.ckpt = ckpt
         # which cluster node this attempt runs on — recorded into the requeue
         # file so the scheduler can round-trip the placement hint
         self.node = node if node is not None else detect_node()
+        # the warm-peer roots this attempt was handed (scheduler hint) —
+        # recorded into the requeue file so a scheduler-less restart can
+        # still source its restore through the peer fabric
+        self.peers = peers
         self.client = client or InlineCoordinator(commit_fn=ckpt.commit)
         self.signal_trap = signal_trap
         self.walltime = walltime
@@ -65,6 +70,8 @@ class CRManager:
         stats = getattr(self.ckpt, "last_restore_stats", None)
         if stats:
             src = "promoted " + stats["tier"] if stats.get("promoted") else stats["tier"]
+            if stats.get("peer"):
+                src = "peers " + ",".join(stats.get("peer_tiers") or [])
             self.log(f"[cr] restore engine: tier={src} mode={stats['mode']} "
                      f"workers={stats.get('workers')} "
                      f"tasks={stats.get('tasks', stats.get('files'))}")
@@ -134,7 +141,7 @@ class CRManager:
     def request_requeue(self, step: int, reason: str = "") -> None:
         if self.requeue_file is not None and self.walltime is not None:
             rec = self.requeue_file.save(self.walltime, step, reason=reason,
-                                         node=self.node)
+                                         node=self.node, peers=self.peers)
             self.log(f"[cr] requeue recorded: {rec}")
 
     def close(self) -> None:

@@ -72,10 +72,11 @@ class RequeueFile:
         if self.path.exists():
             return json.loads(self.path.read_text())
         return {"requeues": 0, "consumed_s": 0.0, "last_step": -1,
-                "node": None, "placements": []}
+                "node": None, "placements": [], "peer_roots": {}}
 
     def save(self, tracker: WalltimeTracker, last_step: int, *,
-             reason: str = "", node: Optional[str] = None) -> dict:
+             reason: str = "", node: Optional[str] = None,
+             peers: Optional[dict] = None) -> dict:
         rec = self.load()
         rec["requeues"] += 1
         rec["consumed_s"] = tracker.total_consumed_s
@@ -88,6 +89,10 @@ class RequeueFile:
             # scheduler-less attempt still wants the previous node preferred
             rec["node"] = node
             rec.setdefault("placements", []).append(node)
+        if peers is not None:
+            # the warm-peer roots this attempt knew about: a scheduler-less
+            # restart can still source its restore from them (peer fabric)
+            rec["peer_roots"] = {str(k): str(v) for k, v in peers.items()}
         tmp = self.path.with_suffix(".tmp")
         tmp.write_text(json.dumps(rec))
         tmp.rename(self.path)

@@ -30,7 +30,9 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.checkpoint.store import TieredStore, node_local_tier_roots
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.cr_manager import CRManager
-from repro.core.requeue import RequeueFile, WalltimeTracker
+from repro.core.requeue import RequeueFile, WalltimeTracker, detect_node
+from repro.sched.cache_registry import (ENV_PEER_ROOTS, REGISTRY_DIRNAME,
+                                        CacheRegistry, parse_peer_roots)
 from repro.core.signals import SignalTrap
 from repro.core.worker import CkptClient, InlineCoordinator
 from repro.data.pipeline import PipelineState, SyntheticTokens
@@ -68,6 +70,13 @@ def build_argparser():
                          "under this path instead of --ckpt-dir, so promoted "
                          "caches are per-node (defaults to $REPRO_LOCAL_ROOT "
                          "as set by sched/slurmsim.py placements)")
+    ap.add_argument("--peer-roots", default=None,
+                    help="warm-peer cache roots as 'name=path,name=path': "
+                         "a cold-node restore sources checkpoint ranges from "
+                         "these peers' local tiers instead of the shared "
+                         "filesystem (defaults to $REPRO_PEER_ROOTS as set "
+                         "by the scheduler, then to the last requeue "
+                         "record's peer_roots)")
     ap.add_argument("--restore-workers", type=int, default=0,
                     help="parallel restore read pool size (0=auto, 1=serial)")
     ap.add_argument("--interval-steps", type=int, default=0)
@@ -107,12 +116,25 @@ def main(argv=None) -> int:
     local_root = args.local_root or os.environ.get("REPRO_LOCAL_ROOT")
     tier_roots = node_local_tier_roots(local_root) if local_root else None
     store = TieredStore(Path(args.ckpt_dir), tier_roots=tier_roots)
+    requeue_file = RequeueFile(Path(args.ckpt_dir) / "requeue.json")
+    prior = requeue_file.load()
+    # peer fabric: scheduler hint first, then whatever the last attempt
+    # recorded; the registry adds decentralized discovery on top
+    node = detect_node()
+    peers = parse_peer_roots(args.peer_roots
+                             or os.environ.get(ENV_PEER_ROOTS))
+    if not peers:
+        peers = {n: Path(r)
+                 for n, r in (prior.get("peer_roots") or {}).items()}
+    registry = CacheRegistry(
+        Path(args.ckpt_dir) / REGISTRY_DIRNAME)
     ckpt = CheckpointManager(
         store, worker_id=args.worker_id, num_workers=args.num_workers,
         replicas=args.ckpt_replicas, mode=args.ckpt_mode,
         incremental=args.ckpt_incremental,
         restore_workers=args.restore_workers,
-        promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier)
+        promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier,
+        peer_roots=peers, node=node, registry=registry)
 
     if args.coordinator:
         host, port = args.coordinator.rsplit(":", 1)
@@ -121,8 +143,6 @@ def main(argv=None) -> int:
         client = InlineCoordinator(commit_fn=ckpt.commit)
 
     walltime = None
-    requeue_file = RequeueFile(Path(args.ckpt_dir) / "requeue.json")
-    prior = requeue_file.load()
     if args.walltime:
         walltime = WalltimeTracker(args.walltime, args.margin,
                                    consumed_s=prior.get("consumed_s", 0.0))
@@ -133,7 +153,8 @@ def main(argv=None) -> int:
         crm = CRManager(ckpt, client=client, signal_trap=trap, walltime=walltime,
                         requeue_file=requeue_file,
                         interval_steps=args.interval_steps or None,
-                        cfg=cfg, rules=rules)
+                        cfg=cfg, rules=rules, node=node,
+                        peers=peers or None)
 
         def init_fn():
             return TS.init_train_state(cfg, oc, jax.random.PRNGKey(args.seed))

@@ -1,0 +1,116 @@
+"""Cluster-wide inventory of warm promoted checkpoint caches (peer fabric).
+
+The scheduler's placement probe (sched/placement.py) answers "is THIS node
+warm?"; the peer fabric needs the transpose — "which OTHER nodes are warm for
+step N, and where do their caches mount?" — so a job placed on a cold node
+can source its restore from a warm peer's local tier instead of the shared
+parallel filesystem (the DMTCP cluster story: peers cooperate on restart).
+
+The registry is one tiny JSON file per node under a shared directory
+(default ``<ckpt_dir>/peer_registry/<node>.json``), written atomically
+(tmp + rename) by ``CheckpointManager`` when a promotion COMMITS (after the
+two-phase ``PROMOTED.json`` marker is published) and withdrawn whenever the
+node invalidates its cache.  Entry schema:
+
+    {"node": "node3", "step": 41, "files": ["ckpt/step_.../shard_...bin"...],
+     "local_root": "/.../nodes/node3", "tier": "local", "published_at": ...}
+
+Readers treat the inventory as strictly ADVISORY: a torn entry reads as
+absent, a ``step`` mismatch is stale and skipped, and even a lying entry (the
+peer died between GC'ing its cache and withdrawing) only costs a per-range
+fallback — the restore path re-checks the peer's marker, pins manifest CRCs,
+and falls back to the next peer or the shared tier on any failure, so a stale
+inventory entry is never *served*.
+
+``REPRO_PEER_ROOTS`` (``name=root,name=root``) is the same information on the
+scheduler -> job wire: SlurmSim computes warm peers from its own placement
+probes and hands them to the launched process, which merges them with
+whatever the registry holds.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Iterable, Optional
+
+ENV_PEER_ROOTS = "REPRO_PEER_ROOTS"
+REGISTRY_DIRNAME = "peer_registry"
+
+
+def format_peer_roots(peers: dict) -> str:
+    """``{name: root}`` -> the ``name=root,name=root`` env/CLI encoding."""
+    return ",".join(f"{n}={p}" for n, p in sorted(peers.items()))
+
+
+def parse_peer_roots(raw: Optional[str]) -> dict[str, Path]:
+    """Parse the ``name=root,name=root`` encoding (env var or ``--peer-roots``
+    flag); malformed fragments are dropped, not fatal — a mangled hint must
+    degrade to a cold restore, never kill the restart."""
+    out: dict[str, Path] = {}
+    for part in (raw or "").split(","):
+        name, sep, root = part.strip().partition("=")
+        if name and sep and root:
+            out[name] = Path(root)
+    return out
+
+
+class CacheRegistry:
+    """Per-node warm-cache inventory under one shared directory."""
+
+    def __init__(self, root: Path):
+        self.root = Path(root)
+
+    def _path(self, node: str) -> Path:
+        return self.root / f"{node}.json"
+
+    def publish(self, node: str, *, step: int, files: Iterable[str],
+                local_root, tier: str = "local") -> dict:
+        """Record that ``node`` holds a validated promoted cache of ``step``
+        under ``local_root`` (atomic tmp + rename, so a concurrent reader
+        sees the old entry or the new one, never a torn one)."""
+        entry = {
+            "node": node,
+            "step": int(step),
+            "files": sorted(files),
+            "local_root": str(local_root),
+            "tier": tier,
+            "published_at": time.time(),
+        }
+        self.root.mkdir(parents=True, exist_ok=True)
+        p = self._path(node)
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_text(json.dumps(entry))
+        tmp.rename(p)
+        return entry
+
+    def withdraw(self, node: str) -> None:
+        """Drop ``node``'s entry (its cache was invalidated or GC'd)."""
+        self._path(node).unlink(missing_ok=True)
+
+    def entries(self) -> dict[str, dict]:
+        """All parseable entries, keyed by node.  Torn/malformed files read
+        as absent — the writer is atomic, but a reader must survive anything
+        a crashed peer left behind."""
+        out: dict[str, dict] = {}
+        if not self.root.is_dir():
+            return out
+        for p in sorted(self.root.glob("*.json")):
+            try:
+                e = json.loads(p.read_text())
+            except (ValueError, OSError):
+                continue
+            if (isinstance(e, dict) and e.get("node")
+                    and isinstance(e.get("step"), int)
+                    and e.get("local_root")):
+                out[e["node"]] = e
+        return out
+
+    def warm_peers(self, step: int, exclude: Iterable[Optional[str]] = ()
+                   ) -> dict[str, dict]:
+        """Entries claiming a warm cache of exactly ``step``, minus
+        ``exclude`` (normally the asking node itself).  Advisory — the
+        restore path re-validates every peer before reading payload."""
+        ex = {n for n in exclude if n}
+        return {n: e for n, e in self.entries().items()
+                if e["step"] == int(step) and n not in ex}

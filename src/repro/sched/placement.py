@@ -19,6 +19,14 @@ Scoring (``rank_nodes``):
                   may still be warm even when no promotion ran;
   SCORE_COLD (0)  everything else.
 
+When the best free node is NOT warm (contention, or the warm node's
+``warm_wait_s`` budget ran out), the scheduler no longer just eats the cold
+restore: ``warm_peer_roots`` turns the same probe results into a peer hint —
+the other nodes whose promoted caches validated warm — which the launcher
+hands to the job (``REPRO_PEER_ROOTS``) so its restore engine sources ranges
+from a warm peer's local tier instead of the shared filesystem (see
+sched/cache_registry.py and checkpoint/restore_engine.py).
+
 Placement is strictly advisory: a wrong pick costs shared-filesystem reads,
 never correctness — stale caches are rejected at probe time AND again (CRC
 pinned) in the restore path.
@@ -101,3 +109,17 @@ def rank_nodes(candidates: list[tuple[str, Path]],
             score = SCORE_COLD
         out[name] = {"score": score, "probe": probe}
     return out
+
+
+def warm_peer_roots(candidates: list[tuple[str, Path]],
+                    ranked: dict[str, dict],
+                    exclude: tuple = ()) -> dict[str, str]:
+    """The peer hint for a job placed on a cold node: every candidate whose
+    promoted cache probed warm, minus ``exclude`` (the chosen node), as
+    ``{node: local_root}`` ready for ``cache_registry.format_peer_roots``.
+    Advisory like every probe — the job re-validates each peer's marker and
+    pins manifest CRCs before trusting a single payload byte."""
+    ex = set(exclude)
+    return {name: str(root) for name, root in candidates
+            if name not in ex
+            and (ranked.get(name) or {}).get("probe", {}).get("valid")}

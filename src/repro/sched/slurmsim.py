@@ -16,7 +16,10 @@ Reproduces the scheduler behaviours the paper's workflow (Fig. 3) depends on:
     ``cache_affinity`` is preferentially placed on the node whose promoted
     checkpoint cache is warm for its latest committed step (the paper's
     container-image-cache effect, scheduler-side), with a bounded
-    wait-for-warm-node policy before falling back to any free node.
+    wait-for-warm-node policy before falling back to any free node — and a
+    job that ends up on a COLD node is handed the warm nodes as a peer hint
+    (``REPRO_PEER_ROOTS``) so its restore sources the checkpoint from a warm
+    peer's local cache instead of the shared filesystem.
 
 The "cluster" is this machine; each node is a directory (its local tier
 root), each job one subprocess.  Jobs learn their placement through
@@ -34,6 +37,7 @@ import time
 from pathlib import Path
 from typing import Callable, Optional
 
+from repro.sched import cache_registry as CR
 from repro.sched import placement as PL
 
 REQUEUE_EXIT = 85     # exit code meaning "checkpointed, please requeue"
@@ -80,6 +84,7 @@ class JobRecord:
     pending_since: float = 0.0              # for the bounded warm-node wait
     placements: list = dataclasses.field(default_factory=list)
     placement_log: list = dataclasses.field(default_factory=list)
+    peer_hint: dict = dataclasses.field(default_factory=dict)  # node -> root
 
 
 class SlurmSim:
@@ -194,6 +199,7 @@ class SlurmSim:
         if aff is None or self.placement == "blind":
             want = self.nodes[rec.requeues % len(self.nodes)]
             chosen = want if self._free(want) else free[0]
+            rec.peer_hint = {}              # blind baseline: no fabric help
             rec.placement_log.append({
                 "attempt": rec.requeues, "node": chosen.name,
                 "policy": "blind", "scores": None,
@@ -215,11 +221,17 @@ class SlurmSim:
         if (ranked[best_any.name]["score"] > ranked[best_free.name]["score"]
                 and waited < aff.warm_wait_s):
             return None                     # bounded wait for the warm node
+        # the peer hint: every OTHER warm node, handed to the job so a
+        # cold placement restores from a warm peer's cache, not the shared FS
+        rec.peer_hint = PL.warm_peer_roots(
+            [(nd.name, nd.local_root) for nd in self.nodes], ranked,
+            exclude=(best_free.name,))
         rec.placement_log.append({
             "attempt": rec.requeues, "node": best_free.name,
             "policy": "affinity",
             "scores": {n: r["score"] for n, r in ranked.items()},
             "reasons": {n: r["probe"]["reason"] for n, r in ranked.items()},
+            "peers": sorted(rec.peer_hint),
             "waited_s": waited})
         return best_free
 
@@ -234,6 +246,10 @@ class SlurmSim:
         env["SLURMSIM_NODE"] = node.name
         env["SLURMD_NODENAME"] = node.name
         env["REPRO_LOCAL_ROOT"] = str(node.local_root)
+        if rec.peer_hint:
+            env[CR.ENV_PEER_ROOTS] = CR.format_peer_roots(rec.peer_hint)
+        else:
+            env.pop(CR.ENV_PEER_ROOTS, None)
         with open(out, "ab") as fh:                      # append across requeues
             fh.write(f"\n=== launch attempt {rec.requeues} "
                      f"on {node.name} ===\n".encode())

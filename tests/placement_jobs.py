@@ -27,8 +27,11 @@ import numpy as np
 
 import faults
 from repro.checkpoint.manager import CheckpointManager
-from repro.checkpoint.store import TieredStore, node_local_tier_roots
+from repro.checkpoint.store import (TieredStore, is_peer_tier,
+                                    node_local_tier_roots)
 from repro.core.requeue import RequeueFile, WalltimeTracker, detect_node
+from repro.sched.cache_registry import (ENV_PEER_ROOTS, REGISTRY_DIRNAME,
+                                        CacheRegistry, parse_peer_roots)
 
 REQUEUE_EXIT = 85
 
@@ -77,6 +80,12 @@ def main(argv=None) -> int:
     ap.add_argument("--mode", default="normal",
                     choices=["normal", "kill-mid-promotion"])
     ap.add_argument("--kill-on-attempt", type=int, default=0)
+    ap.add_argument("--peer-discovery", default="env",
+                    choices=["env", "registry", "off"],
+                    help="where warm-peer roots come from: the scheduler's "
+                         "REPRO_PEER_ROOTS hint (env, default), the shared "
+                         "CacheRegistry (registry), or nowhere (off) — the "
+                         "blind-baseline tests need the fabric fully off")
     args = ap.parse_args(argv)
 
     node = detect_node() or "?"
@@ -84,7 +93,14 @@ def main(argv=None) -> int:
     local_root = os.environ.get("REPRO_LOCAL_ROOT")
     tier_roots = node_local_tier_roots(local_root) if local_root else None
     store = CountingStore(Path(args.ckpt_dir), tier_roots=tier_roots, seed=0)
-    m = CheckpointManager(store, replicas=args.replicas, promote=args.promote)
+    peers = {}
+    registry = None
+    if args.peer_discovery == "env":
+        peers = parse_peer_roots(os.environ.get(ENV_PEER_ROOTS))
+    elif args.peer_discovery == "registry":
+        registry = CacheRegistry(Path(args.ckpt_dir) / REGISTRY_DIRNAME)
+    m = CheckpointManager(store, replicas=args.replicas, promote=args.promote,
+                          peer_roots=peers, node=node, registry=registry)
 
     if args.mode == "kill-mid-promotion" and attempt == args.kill_on_attempt:
         # the promotion copier dies mid-copy: a torn .tmp file and NO marker
@@ -129,8 +145,11 @@ def main(argv=None) -> int:
         "node": node,
         "start_step": start,
         "last_step": last,
+        "peer_roots": {n: str(p) for n, p in peers.items()},
         "restore_stats": restore_stats,
         "restore_reads_by_tier": restore_reads,
+        "peer_read_bytes": sum(v for t, v in restore_reads.items()
+                               if is_peer_tier(t)),
         "state_sum": state_sum(tree),
         "cache_inventory": m.cache_inventory(),
     }

@@ -74,6 +74,23 @@ def test_v1_files_read_through_new_reader(rng):
     assert np.array_equal(got["b"], tree["b"])
 
 
+def test_v1_shard_payload_ending_in_v2_magic_still_parses():
+    """A v1 shard whose LAST payload bytes coincidentally equal the v2
+    trailer magic must not be misread by the tail-probe fast path — the
+    leading magic disambiguates, and the v1 parse still succeeds."""
+    payload = b"x" * 24 + SER.MAGIC2
+    arr = np.frombuffer(payload, dtype=np.uint8).copy()
+    data = SER.write_shard_bytes([("a", arr)])
+    assert data[:8] == SER.MAGIC and data[-8:] == SER.MAGIC2   # the collision
+    named, _ = SER.read_shard_bytes(data)
+    assert named["a"].tobytes() == payload
+
+    def read_at(off, n):
+        return data[off:off + n]
+    header = SER.read_shard_header(read_at, len(data))
+    assert header["format"] == 1
+
+
 def test_v1_checkpoint_restores_through_new_manager(tmp_path, rng):
     """A checkpoint written via the legacy v1 path (seed byte layout) restores
     through the new ranged-read manager."""

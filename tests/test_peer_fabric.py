@@ -1,0 +1,366 @@
+"""Peer-to-peer warm-cache restore fabric: a cold node sources its restore
+from warm peers' promoted caches (multi-source ranged reads, round-robin
+across peers) instead of the shared parallel filesystem; peer-fetched bytes
+are teed into the local tier so one cold restart warms the node; every fault
+(peer death mid-fetch, short read, CRC mismatch, stale inventory) falls back
+per-range and converges byte-identically."""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import faults
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import (TieredStore, is_peer_tier,
+                                    node_local_tier_roots)
+from repro.sched.cache_registry import (CacheRegistry, format_peer_roots,
+                                        parse_peer_roots)
+from repro.sched.slurmsim import SlurmSim
+from test_placement import _blocker_spec, _warm_node0, job_spec, reports
+
+
+class CountingStore(faults.ByteCountingStoreMixin, TieredStore):
+    """Counts every byte actually fetched, keyed by tier (peer tiers count
+    under their ``peer:<node>`` name) — see faults.py."""
+
+
+def _tree(rng, big_kb: int = 64):
+    # two big leaves so that with 2 shards EVERY shard holds a payload run
+    # large enough for the n>4096 fault predicates to see
+    return {
+        "w": rng.standard_normal((64, 32)).astype(np.float32),
+        "b": rng.standard_normal((256,)).astype(np.float32),
+        "big": rng.standard_normal((big_kb * 256,)).astype(np.float32),
+        "big2": rng.standard_normal((big_kb * 256,)).astype(np.float32),
+        "step": np.int32(7),
+    }
+
+
+def _assert_trees_equal(got, want):
+    flat_g = dict(SER.flatten_with_names(got))
+    flat_w = dict(SER.flatten_with_names(want))
+    assert set(flat_g) == set(flat_w)
+    for name in flat_w:
+        a, b = np.asarray(flat_g[name]), np.asarray(flat_w[name])
+        assert a.dtype == b.dtype, name
+        assert a.tobytes() == b.tobytes(), name
+
+
+def _commit_shared(ck, tree, step=1, n_shards=4):
+    store = TieredStore(Path(ck), seed=0)
+    for w in range(n_shards):
+        CheckpointManager(store, worker_id=w, num_workers=n_shards,
+                          replicas=1).save(step, tree)
+    CheckpointManager(store, num_workers=n_shards,
+                      replicas=1).commit(step, num_workers=n_shards)
+
+
+def _warm_peer(ck, peer_root, node, registry=None):
+    """Promote the latest committed step into ``peer_root``'s local tier —
+    the peer whose cache the cold node will read."""
+    store = TieredStore(Path(ck), seed=0,
+                        tier_roots=node_local_tier_roots(peer_root))
+    m = CheckpointManager(store, replicas=1, promote="eager",
+                          node=node, registry=registry)
+    m.prefetch_latest()
+    m.wait_promotions()
+    assert not m.promote_failures
+    m.close()
+
+
+def _cold_manager(ck, cold_root, peer_roots=None, registry=None,
+                  promote="on_restore", **kw):
+    store = CountingStore(Path(ck), seed=0,
+                          tier_roots=node_local_tier_roots(cold_root))
+    m = CheckpointManager(store, replicas=1, promote=promote, node="cold",
+                          peer_roots=peer_roots, registry=registry, **kw)
+    return store, m
+
+
+def _peer_bytes(read_by_tier: dict) -> int:
+    return sum(v for t, v in read_by_tier.items() if is_peer_tier(t))
+
+
+# ---------------------------------------------------------------------------
+# headline: cold node + 1 warm peer -> zero shared bytes, then a warm local
+# ---------------------------------------------------------------------------
+
+def test_peer_fetch_zero_shared_bytes_and_warms_local(tmp_path, rng):
+    tree = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA")
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                            peer_roots={"peerA": tmp_path / "peerA"})
+    out, man = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert man["step"] == 1
+    stats = m.last_restore_stats
+    assert stats["peer"] is True and stats["tier"] == "peer"
+    assert stats["bytes_by_tier"].get("peer:peerA", 0) > 0
+    assert "shared" not in stats["bytes_by_tier"]
+    # zero shared-tier bytes END TO END: payload, headers, marker, manifest
+    assert cold.read_by_tier.get("shared", 0) == 0, cold.read_by_tier
+    assert _peer_bytes(cold.read_by_tier) > 0
+    m.wait_promotions()
+    assert not m.promote_failures
+
+    # the write-behind tee warmed THIS node: the second restart on the same
+    # cold node reads zero bytes from the shared tier AND from the peers
+    cold2, m2 = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                              peer_roots={"peerA": tmp_path / "peerA"})
+    out2, _ = m2.restore(tree)
+    _assert_trees_equal(out2, tree)
+    assert m2.last_restore_stats.get("promoted") is True
+    assert cold2.read_by_tier.get("shared", 0) == 0, cold2.read_by_tier
+    assert _peer_bytes(cold2.read_by_tier) == 0, cold2.read_by_tier
+    m.close()
+    m2.close()
+
+
+def test_registry_discovery_without_scheduler_hint(tmp_path, rng):
+    """The decentralized path: the peer published its promotion into the
+    CacheRegistry; a cold manager with NO scheduler hint finds it there."""
+    reg = CacheRegistry(tmp_path / "ck" / "peer_registry")
+    tree = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA", registry=reg)
+    ent = reg.entries()["peerA"]
+    assert ent["step"] == 1 and ent["tier"] == "local"
+    assert ent["local_root"] == str(tmp_path / "peerA")
+    assert ent["files"]
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold", registry=reg)
+    out, _ = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert m.last_restore_stats["peer"] is True
+    assert cold.read_by_tier.get("shared", 0) == 0, cold.read_by_tier
+    m.wait_promotions()
+    # ...and the freshly warmed cold node published ITSELF as a peer
+    assert reg.entries()["cold"]["step"] == 1
+    m.close()
+
+
+def test_two_peers_round_robin_aggregate(tmp_path, rng):
+    """With k warm peers the range tasks rotate across them — both peers
+    serve payload bytes (the bandwidth-aggregation split), shared serves
+    none, and the tree is exact."""
+    tree = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree, n_shards=4)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA")
+    _warm_peer(tmp_path / "ck", tmp_path / "peerB", "peerB")
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                            peer_roots={"peerA": tmp_path / "peerA",
+                                        "peerB": tmp_path / "peerB"})
+    out, _ = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    bt = m.last_restore_stats["bytes_by_tier"]
+    assert bt.get("peer:peerA", 0) > 0, bt
+    assert bt.get("peer:peerB", 0) > 0, bt
+    assert "shared" not in bt
+    assert cold.read_by_tier.get("shared", 0) == 0, cold.read_by_tier
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# fault matrix: peer death mid-fetch / short read / CRC mismatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fault", ["oserror", "short_read", "crc"])
+def test_peer_fault_mid_fetch_falls_back_per_range(tmp_path, rng, fault):
+    """A peer failing mid-fetch — OSError after the first payload read, a
+    short read, or corrupted payload bytes — must fall back per-range to the
+    shared tier and still reassemble a byte-identical tree."""
+    tree = _tree(rng, big_kb=128)
+    _commit_shared(tmp_path / "ck", tree, n_shards=2)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA")
+    peer_root = tmp_path / "peerA"
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                            peer_roots={"peerA": peer_root})
+    injector = None
+    if fault == "oserror":
+        injector = faults.PreadFaults(
+            cold, lambda p, off, n: peer_root in p.parents and n > 4096,
+            after=1, error=OSError("peer died mid-fetch"))
+        injector.install()
+    elif fault == "short_read":
+        orig = cold._pread
+
+        def short_pread(path, off, n):
+            data = orig(path, off, n)
+            if peer_root in Path(path).parents and n > 4096:
+                return data[: max(1, n // 2)]
+            return data
+
+        cold._pread = short_pread
+    else:   # crc: flip payload bytes in EVERY promoted peer shard
+        shards = sorted(peer_root.glob("local/node0/ckpt/step_*/shard_*.bin"))
+        assert shards
+        for s in shards:
+            faults.flip_byte(s)
+
+    out, _ = m.restore(tree)
+    if injector is not None:
+        injector.uninstall()
+        assert injector.fired > 0
+    _assert_trees_equal(out, tree)
+    stats = m.last_restore_stats
+    assert stats["peer"] is True            # peer path was taken...
+    assert stats["bytes_by_tier"].get("shared", 0) > 0   # ...and fell back
+    assert stats["replica_fallbacks"] > 0
+    m.close()
+
+
+def test_peer_death_falls_back_to_second_peer_not_shared(tmp_path, rng):
+    """With a second warm peer in the chain, a dying peer's ranges fall back
+    to the OTHER peer — the shared tier still serves zero payload bytes."""
+    tree = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree, n_shards=2)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA")
+    _warm_peer(tmp_path / "ck", tmp_path / "peerB", "peerB")
+    peer_a = tmp_path / "peerA"
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                            peer_roots={"peerA": peer_a,
+                                        "peerB": tmp_path / "peerB"})
+    with faults.PreadFaults(
+            cold, lambda p, off, n: peer_a in p.parents and n > 4096,
+            error=OSError("peer A gone")) as inj:
+        out, _ = m.restore(tree)
+    assert inj.fired > 0
+    _assert_trees_equal(out, tree)
+    bt = m.last_restore_stats["bytes_by_tier"]
+    assert bt.get("peer:peerB", 0) > 0, bt
+    assert "shared" not in bt, bt
+    m.close()
+
+
+def test_stale_peer_inventory_is_never_served(tmp_path, rng):
+    """Three staleness shapes: (a) a peer cache superseded by a newer commit
+    is skipped via the registry step filter; (b) a LYING registry entry
+    (claims the right step, peer's marker says otherwise) is skipped at the
+    marker re-check; (c) a peer that invalidates withdraws its entry."""
+    reg = CacheRegistry(tmp_path / "ck" / "peer_registry")
+    tree1 = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree1, step=1)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA", registry=reg)
+
+    # (a) a newer step commits on the shared tier: peerA's step-1 cache is
+    # stale, the registry lookup filters it, the restore serves new bytes
+    tree2 = {k: (np.asarray(v) + 1).astype(np.asarray(v).dtype)
+             for k, v in tree1.items()}
+    _commit_shared(tmp_path / "ck", tree2, step=2)
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold", registry=reg)
+    out, man = m.restore(tree1)
+    assert man["step"] == 2
+    _assert_trees_equal(out, tree2)
+    assert not (m.last_restore_stats or {}).get("peer")
+    assert m.last_restore_stats["bytes_by_tier"].get("shared", 0) > 0
+    m.wait_promotions()
+    m.close()
+
+    # (b) lying inventory: the entry claims step 2 but peerA still holds 1 —
+    # the peer-side marker re-check rejects it before any payload read
+    reg.publish("peerA", step=2, files=[],
+                local_root=tmp_path / "peerA", tier="local")
+    cold2, m2 = _cold_manager(tmp_path / "ck", tmp_path / "cold2",
+                              registry=reg)
+    out2, man2 = m2.restore(tree1)
+    assert man2["step"] == 2
+    _assert_trees_equal(out2, tree2)
+    bt = m2.last_restore_stats["bytes_by_tier"]
+    assert not any(t == "peer:peerA" for t in bt), bt
+    m2.close()
+
+    # (c) invalidation withdraws the cluster-visible claim
+    store_a = TieredStore(tmp_path / "ck", seed=0,
+                          tier_roots=node_local_tier_roots(tmp_path / "peerA"))
+    ma = CheckpointManager(store_a, replicas=1, promote="eager",
+                           node="peerA", registry=reg)
+    ma.invalidate_promoted()
+    assert "peerA" not in reg.entries()
+    ma.close()
+
+
+def test_gone_peer_cache_with_live_marker_falls_back(tmp_path, rng):
+    """The peer GC'd its shard files but its marker/manifest linger (crashed
+    between delete and withdraw): header planning fails on the peer and every
+    range falls back to shared — byte-identical, never an error."""
+    tree = _tree(rng)
+    _commit_shared(tmp_path / "ck", tree, n_shards=2)
+    _warm_peer(tmp_path / "ck", tmp_path / "peerA", "peerA")
+    for s in (tmp_path / "peerA").glob("local/node0/ckpt/step_*/shard_*.bin"):
+        s.unlink()
+
+    cold, m = _cold_manager(tmp_path / "ck", tmp_path / "cold",
+                            peer_roots={"peerA": tmp_path / "peerA"})
+    out, _ = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    assert m.last_restore_stats["bytes_by_tier"].get("shared", 0) > 0
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# registry + wire-format units
+# ---------------------------------------------------------------------------
+
+def test_registry_publish_withdraw_and_torn_entries(tmp_path):
+    reg = CacheRegistry(tmp_path / "reg")
+    assert reg.entries() == {}
+    reg.publish("n0", step=3, files=["a", "b"], local_root="/roots/n0")
+    reg.publish("n1", step=4, files=["a"], local_root="/roots/n1", tier="ram")
+    (tmp_path / "reg" / "torn.json").write_text('{"node": "nX", "ste')
+    ents = reg.entries()
+    assert set(ents) == {"n0", "n1"}
+    assert reg.warm_peers(4) == {"n1": ents["n1"]}
+    assert reg.warm_peers(4, exclude=("n1",)) == {}
+    assert reg.warm_peers(3, exclude=(None,)) == {"n0": ents["n0"]}
+    reg.withdraw("n1")
+    reg.withdraw("n1")                      # idempotent
+    assert set(reg.entries()) == {"n0"}
+
+
+def test_peer_roots_wire_format_roundtrip(tmp_path):
+    peers = {"node1": tmp_path / "a", "node0": tmp_path / "b"}
+    s = format_peer_roots(peers)
+    assert s == f"node0={tmp_path / 'b'},node1={tmp_path / 'a'}"
+    assert parse_peer_roots(s) == {k: Path(v) for k, v in peers.items()}
+    assert parse_peer_roots(None) == {}
+    assert parse_peer_roots("garbage,,=x,name=") == {}
+
+
+# ---------------------------------------------------------------------------
+# scheduler end to end: cold placement + peer hint -> zero shared bytes
+# ---------------------------------------------------------------------------
+
+def test_scheduler_peer_hint_cold_node_restores_via_peer(tmp_path):
+    """node0 is warm but busy; the job's warm-wait budget is tiny, so it is
+    placed COLD on node1 — with a peer hint naming node0.  The job's restore
+    must come from node0's cache over the fabric, zero shared bytes."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2)
+    _warm_node0(sim, ckpt)
+    sim.submit(_blocker_spec(2.5))                     # occupies node0
+    jid = sim.submit(job_spec(ckpt, rdir, total=1, warm_wait_s=0.05))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
+    entry = rec.placement_log[0]
+    assert entry["node"] == "node1"
+    assert entry["peers"] == ["node0"]
+    r0 = reports(rdir)[0]
+    assert r0["node"] == "node1"
+    assert r0["peer_roots"] == {"node0": str(sim.node("node0").local_root)}
+    assert (r0["restore_stats"] or {}).get("peer") is True
+    assert r0["restore_reads_by_tier"].get("shared", 0) == 0, r0
+    assert r0["peer_read_bytes"] > 0
+    from placement_jobs import make_tree, state_sum
+    assert r0["state_sum"] == pytest.approx(state_sum(make_tree()))
+
+
+# The multi-source == single-source property test (any interleaving of
+# peer/shared/local range outcomes) lives in tests/test_peer_property.py so
+# its optional hypothesis dependency cannot skip this module.

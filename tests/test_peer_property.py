@@ -1,0 +1,125 @@
+"""Property: multi-source restore planning is byte-identical to single-source
+under ANY interleaving of peer/shared/local range outcomes — healthy peers,
+peers whose cache is gone, peers that die mid-fetch (OSError after N reads via
+``faults.PreadFaults``), corrupted peer payloads, stale peer markers — the
+restored tree always converges to the same bytes the shared tier alone yields.
+
+The hypothesis-driven search runs when hypothesis is installed; a
+deterministic sweep over the interesting interleavings (including every mode
+paired with every other) runs unconditionally, so the property is exercised
+even in environments without hypothesis.
+"""
+import itertools
+import json
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import faults
+from test_peer_fabric import (_assert_trees_equal, _cold_manager,
+                              _commit_shared, _warm_peer)
+
+PEER_MODES = ("ok", "gone", "late_oserror", "corrupt", "stale_marker")
+
+
+def _tree():
+    rng = np.random.default_rng(0)
+    return {
+        "w": rng.standard_normal((64, 16)).astype(np.float32),
+        "b": rng.standard_normal((512,)).astype(np.float32),
+        "k": rng.standard_normal((2048,)).astype(np.float32),
+    }
+
+
+def _check_interleaving(modes: tuple, afters: dict) -> None:
+    """Build shared + len(modes) peers, damage each peer per its mode, and
+    assert the multi-source restore equals the shared-only restore bit for
+    bit.  ``afters[i]`` is how many peer reads succeed before peer i 'dies'
+    (the mid-fetch death point)."""
+    tree = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        _commit_shared(root / "ck", tree, n_shards=2)
+        peer_roots, injector_specs = {}, []
+        for i, mode in enumerate(modes):
+            name = f"p{i}"
+            peer_root = root / name
+            _warm_peer(root / "ck", peer_root, name)
+            peer_roots[name] = peer_root
+            shards = sorted(peer_root.glob(
+                "local/node0/ckpt/step_*/shard_*.bin"))
+            assert shards
+            if mode == "gone":
+                for s in shards:
+                    s.unlink()
+            elif mode == "corrupt":
+                for s in shards:
+                    faults.flip_byte(s)
+            elif mode == "stale_marker":
+                (peer_root / "local" / "node0" / "ckpt"
+                 / "PROMOTED.json").write_text(
+                     json.dumps({"step": 999, "files": []}))
+            elif mode == "late_oserror":
+                injector_specs.append((peer_root, afters.get(i, 1)))
+
+        cold, m = _cold_manager(root / "ck", root / "cold",
+                                peer_roots=peer_roots, promote="off")
+        installed = []
+        try:
+            for peer_root, after in injector_specs:
+                inj = faults.PreadFaults(
+                    cold,
+                    lambda p, off, n, pr=peer_root: pr in p.parents and n > 1024,
+                    after=after, error=OSError("peer died mid-fetch"))
+                installed.append(inj.install())
+            out_multi, _ = m.restore(tree)
+        finally:
+            for inj in reversed(installed):
+                inj.uninstall()
+        m.close()
+
+        # single-source reference: a fresh cold node, shared tier only
+        _, m_ref = _cold_manager(root / "ck", root / "cold_ref",
+                                 peer_roots=None, promote="off")
+        out_ref, _ = m_ref.restore(tree)
+        m_ref.close()
+
+        _assert_trees_equal(out_multi, out_ref)
+        _assert_trees_equal(out_multi, tree)
+
+
+# every single-peer mode, and every ordered pair of distinct modes — the
+# deterministic core of the property, run whether or not hypothesis exists
+_PAIRS = list(itertools.permutations(PEER_MODES, 2))
+
+
+@pytest.mark.parametrize("modes", [(m,) for m in PEER_MODES] + _PAIRS,
+                         ids=lambda m: "+".join(m))
+def test_interleavings_deterministic(modes):
+    _check_interleaving(tuple(modes), afters={i: 1 for i in range(len(modes))})
+
+
+def test_all_peers_hostile_three_wide():
+    _check_interleaving(("gone", "late_oserror", "corrupt"),
+                        afters={1: 0})
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+except ImportError:                      # pragma: no cover - optional dep
+    pass
+else:
+    @settings(max_examples=15, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_interleavings_hypothesis(data):
+        n_peers = data.draw(st.integers(1, 3), label="n_peers")
+        modes = tuple(
+            data.draw(st.sampled_from(PEER_MODES), label=f"peer{i}_mode")
+            for i in range(n_peers))
+        afters = {i: data.draw(st.integers(0, 2), label=f"peer{i}_after")
+                  for i in range(n_peers) if modes[i] == "late_oserror"}
+        _check_interleaving(modes, afters)

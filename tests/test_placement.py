@@ -264,7 +264,12 @@ def test_bounded_wait_waits_for_busy_warm_node(tmp_path):
     assert r0["restore_reads_by_tier"].get("shared", 0) == 0
 
 
-def test_bounded_wait_expires_and_falls_back_cold(tmp_path):
+def test_bounded_wait_expires_and_falls_back_to_peer_fetch(tmp_path):
+    """The wait budget runs out with the warm node still busy: the job is
+    placed COLD — but since PR 4 it is handed the warm node as a peer hint,
+    so the 'cold' restore comes over the peer fabric (zero shared bytes)
+    rather than from the shared filesystem.  The fully-cold shared read only
+    remains when the fabric is off (asserted below)."""
     ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
     sim = SlurmSim(tmp_path / "sim", nodes=2)
     _warm_node0(sim, ckpt)
@@ -275,6 +280,27 @@ def test_bounded_wait_expires_and_falls_back_cold(tmp_path):
     assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
     entry = rec.placement_log[0]
     assert entry["node"] == "node1" and 0.15 <= entry["waited_s"] < 2.0
+    assert entry["peers"] == ["node0"]
+    r0 = reports(rdir)[0]
+    assert not (r0["restore_stats"] or {}).get("promoted")
+    assert (r0["restore_stats"] or {}).get("peer") is True
+    assert r0["restore_reads_by_tier"].get("shared", 0) == 0, r0
+    assert r0["peer_read_bytes"] > 0
+    assert r0["state_sum"] == pytest.approx(state_sum(make_tree()))
+
+
+def test_bounded_wait_expires_fabric_off_reads_shared(tmp_path):
+    """Same expired-wait scenario with peer discovery disabled: the pre-
+    fabric baseline — a cold placement pays shared-filesystem bytes."""
+    ckpt, rdir = tmp_path / "ck", tmp_path / "reports"
+    sim = SlurmSim(tmp_path / "sim", nodes=2)
+    _warm_node0(sim, ckpt)
+    sim.submit(_blocker_spec(2.5))
+    jid = sim.submit(job_spec(ckpt, rdir, total=1, warm_wait_s=0.15,
+                              peer_discovery="off"))
+    sim.run(timeout_s=120)
+    rec = sim.job(jid)
+    assert rec.state == "COMPLETED", (rec.state, rec.exit_codes)
     r0 = reports(rdir)[0]
     assert not (r0["restore_stats"] or {}).get("promoted")
     assert r0["restore_reads_by_tier"].get("shared", 0) > 0

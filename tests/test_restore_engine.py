@@ -2,7 +2,9 @@
 parallel == serial byte-for-byte, per-range replica fallback, promotion
 serving the second restart with zero shared-tier bytes, manifest-driven
 invalidation, deterministic (seedable) replica placement."""
+import os
 import random
+import threading
 import time
 from pathlib import Path
 
@@ -12,7 +14,7 @@ import pytest
 import faults
 from repro.checkpoint import serialization as SER
 from repro.checkpoint.manager import CheckpointManager
-from repro.checkpoint.restore_engine import ParallelRestorer
+from repro.checkpoint.restore_engine import ParallelRestorer, auto_workers
 from repro.checkpoint.store import DEFAULT_TIERS, TieredStore
 
 
@@ -391,6 +393,141 @@ def test_workpool_try_submit_drops_instead_of_blocking():
     pool.wait()
     assert pool.try_submit(lambda: None) is True    # drained: accepted
     pool.close()
+
+
+def test_gc_cancels_inflight_promotion_for_deleted_step(tmp_path, rng):
+    """GC/promotion race: gc() starts deleting a step whose write-behind
+    promotion is mid-copy.  The copier must abort BEFORE publishing a marker
+    (cancelled, not failed), and the follow-up promotion of the surviving
+    step must land a complete, valid cache."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    gate, started = threading.Event(), threading.Event()
+    real_copy = TieredStore.copy_file
+
+    def slow_copy(self, src_tier, rel, dst_tier, **kw):
+        out = real_copy(self, src_tier, rel, dst_tier, **kw)
+        started.set()
+        assert gate.wait(10)           # gc runs while the copier is "here"
+        return out
+
+    store.copy_file = slow_copy.__get__(store)
+    for w in range(2):                 # two shard files: copy 1 lands, then
+        CheckpointManager(store, worker_id=w, num_workers=2,   # cancel fires
+                          replicas=1).save(1, tree)
+    m = CheckpointManager(store, num_workers=2, replicas=1,
+                          promote="eager", keep_last=1)
+    m.commit(1, num_workers=2)         # schedules promotion; copier blocks
+    assert started.wait(10)
+    for w in range(2):
+        CheckpointManager(store, worker_id=w, num_workers=2,
+                          replicas=1).save(2, tree)
+    m.commit(2, num_workers=2)         # gc deletes step 1 mid-promotion
+    gate.set()
+    m.wait_promotions()
+    assert m.promote_cancelled >= 1
+    assert m._read_marker() is not None and m._read_marker()["step"] == 2
+    assert m.cache_inventory()["valid"]
+    # the cancelled run's partial copies were retired, not leaked (no marker
+    # would ever reference them)
+    assert not store.list_prefix("local", "ckpt/step_0000000001")
+    m.close()
+
+
+def test_gc_cancels_queued_promotion_too(tmp_path, rng):
+    """A promotion still QUEUED behind a busy copier when gc() deletes its
+    step must cancel on dequeue — not run, fail on the retired source, and
+    wipe the whole promote tier via the failure path."""
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    gate, started = threading.Event(), threading.Event()
+    real_copy = TieredStore.copy_file
+
+    def slow_copy(self, *a, **kw):
+        out = real_copy(self, *a, **kw)
+        started.set()
+        assert gate.wait(10)
+        return out
+
+    store.copy_file = slow_copy.__get__(store)
+    m = CheckpointManager(store, replicas=1, promote="eager", keep_last=1)
+    m.save(1, tree)
+    m.commit(1)                        # promo(1) executing (blocked in copy)
+    assert started.wait(10)
+    m.save(2, tree)
+    m.commit(2)                        # gc dooms step 1; promo(2) QUEUED
+    m.save(3, tree)
+    m.commit(3)                        # gc dooms queued promo(2); promo(3)
+    gate.set()                         # dropped (pool full) -> skipped
+    m.wait_promotions()
+    assert m.promote_cancelled >= 2    # the executing AND the queued one
+    assert not m.promote_failures, m.promote_failures
+    assert m.promote_skipped >= 1
+    assert m._read_marker() is None    # no torn/stale marker published
+    store.copy_file = real_copy.__get__(store)
+    m.prefetch_latest()                # cache recovers at the latest step
+    m.wait_promotions()
+    assert m._read_marker()["step"] == 3
+    assert m.cache_inventory()["valid"]
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# restore pool sizing: env override + tier-concurrency cap (no magic 8)
+# ---------------------------------------------------------------------------
+
+def test_auto_workers_env_override_and_tier_cap(tmp_path, rng, monkeypatch):
+    monkeypatch.setenv("REPRO_RESTORE_WORKERS", "3")
+    assert auto_workers() == 3
+    assert auto_workers(cap=1) == 3           # explicit override wins
+    monkeypatch.setenv("REPRO_RESTORE_WORKERS", "garbage")
+    assert auto_workers(cap=2) == 2           # mangled override degrades
+    monkeypatch.delenv("REPRO_RESTORE_WORKERS")
+    assert auto_workers(cap=2) == 2           # tier budget caps the pool
+    assert auto_workers() == max(2, os.cpu_count() or 2)   # no magic 8
+
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, replicas=1)
+    m.save(1, tree)
+    m.commit(1)
+    eng = CheckpointManager(store)             # shared tier: concurrency 8
+    eng.restore(tree)
+    assert 1 <= eng.last_restore_stats["workers"] <= DEFAULT_TIERS["shared"].concurrency
+    monkeypatch.setenv("REPRO_RESTORE_WORKERS", "5")
+    eng2 = CheckpointManager(store)
+    eng2.restore(tree)
+    assert eng2.last_restore_stats["workers"] == 5
+
+
+# ---------------------------------------------------------------------------
+# fd cache: ranged reads reuse one descriptor, mutations invalidate it
+# ---------------------------------------------------------------------------
+
+def test_pread_fd_cache_reuses_and_invalidates(tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    store.put("local", "f/data.bin", b"A" * 1024)
+    p = store.replica_paths("local", "f/data.bin")[0]
+    assert store.get_range("local", "f/data.bin", 0, 4) == b"AAAA"
+    assert p in store._fds                     # descriptor cached...
+    fd1 = store._fds[p].fd
+    assert store.get_range("local", "f/data.bin", 512, 4) == b"AAAA"
+    assert store._fds[p].fd == fd1             # ...and reused, not re-opened
+    # rename-over via put must invalidate: the next read sees NEW bytes
+    store.put("local", "f/data.bin", b"B" * 1024)
+    assert store.get_range("local", "f/data.bin", 0, 4) == b"BBBB"
+    # delete + re-copy (the damaged-cache repromotion path): no stale fd
+    store.get_range("local", "f/data.bin", 0, 1)       # cache it again
+    store.delete_file("local", "f/data.bin")
+    store.put("shared", "f/data.bin", b"C" * 1024)
+    store.copy_file("shared", "f/data.bin", "local")
+    assert store.get_range("local", "f/data.bin", 0, 4) == b"CCCC"
+    # delete_prefix invalidates everything under it
+    store.get_range("local", "f/data.bin", 0, 1)
+    store.delete_prefix("local", "f")
+    assert not store.exists("local", "f/data.bin")
+    store.close()
+    assert not store._fds
 
 
 # ---------------------------------------------------------------------------
