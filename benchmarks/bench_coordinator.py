@@ -9,6 +9,8 @@ from pathlib import Path
 
 import numpy as np
 
+BENCH_KEYS = ()     # prints rows only; owns no BENCH_ckpt_io.json keys
+
 
 def run(results_dir: Path | None = None, worker_counts=(1, 4, 16, 64),
         rounds: int = 5, smoke: bool = False):

@@ -26,6 +26,15 @@ from pathlib import Path
 import jax
 import numpy as np
 
+# keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones):
+# run_ckpt_io merge-writes its whole results dict into the artifact
+BENCH_KEYS = (
+    "payload_mb", "n_leaves", "replicas", "tmpfs",
+    "save_legacy", "save_stream",
+    "restore_full_legacy", "restore_full_stream", "restore_one_leaf_ranged",
+    "save_speedup", "save_peak_mem_ratio", "restore_engine",
+)
+
 
 def _rss_mb() -> float:
     for line in open("/proc/self/status"):

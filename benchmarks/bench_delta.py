@@ -1,0 +1,220 @@
+"""Delta-checkpoint plane (shard v3): bytes-written-per-step and peer-fetch
+bytes vs change rate.
+
+Two artifact rows:
+
+  delta_save        full (non-delta) save vs a delta save where <10% of the
+                    chunks changed — the paper's core cost is checkpoint
+                    SIZE, and content-addressed chunking makes the per-step
+                    write proportional to the change rate instead of the
+                    model size (CRIU's dirty-page pre-dump, applied to the
+                    framework's shard plane).
+  delta_peer_fetch  a warm-but-stale node restores the newer step: unchanged
+                    chunks come from its own stale promoted cache, the delta
+                    comes from a peer — shared-filesystem bytes collapse to
+                    ~the delta size (verified via RestoreStats.bytes_by_tier).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones)
+BENCH_KEYS = ("delta_save", "delta_peer_fetch")
+
+
+def _mutate(tree: dict, frac_leaves: float, elems: int) -> dict:
+    """Touch a small slice of the first ``frac_leaves`` of the leaves — the
+    optimizer-only / frozen-embedding churn pattern the delta plane targets."""
+    out = dict(tree)
+    names = sorted(out)
+    for name in names[:max(1, int(len(names) * frac_leaves))]:
+        a = out[name].copy()
+        a[:elems] += 1.0
+        out[name] = a
+    return out
+
+
+def _delta_save_detail(payload_mb: int, n_leaves: int = 8,
+                       chunk_bytes: int = 256 << 10, steps: int = 4) -> dict:
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.store import TieredStore
+
+    rng = np.random.default_rng(0)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+    payload_bytes = sum(a.nbytes for a in tree.values())
+
+    with tempfile.TemporaryDirectory() as d:
+        # full (non-delta) baseline: every step writes the whole shard
+        store = TieredStore(Path(d) / "full", seed=0)
+        m = CheckpointManager(store, replicas=1)
+        t0 = time.perf_counter()
+        m.save(1, tree)
+        m.commit(1)
+        full_s = time.perf_counter() - t0
+        full_bytes = store.size("shared", "ckpt/step_0000000001/shard_w00000.bin")
+        m.close()
+
+        # delta chain: step 1 is the baseline, steps 2.. mutate <10% of chunks
+        store = TieredStore(Path(d) / "delta", seed=0)
+        m = CheckpointManager(store, replicas=1, delta=True,
+                              chunk_bytes=chunk_bytes)
+        p = m.save(1, tree)
+        m.commit(1)
+        base_written = p["delta"]["bytes_written"]
+        cur = tree
+        per_step = []
+        for s in range(2, 2 + steps):
+            cur = _mutate(cur, 1.0 / n_leaves, chunk_bytes // 8)
+            t0 = time.perf_counter()
+            p = m.save(s, cur)
+            m.commit(s)
+            dt = time.perf_counter() - t0
+            per_step.append({"step": s, "wall_s": dt,
+                             "bytes_written": p["delta"]["bytes_written"],
+                             "chunks_written": p["delta"]["chunks_written"],
+                             "chunks_total": p["delta"]["chunks_total"]})
+        m.close()
+
+    mean_delta = float(np.mean([r["bytes_written"] for r in per_step]))
+    return {
+        "payload_mb": payload_bytes / 1e6,
+        "chunk_bytes": chunk_bytes,
+        "full_shard_bytes": full_bytes,
+        "full_save_s": full_s,
+        "baseline_bytes_written": base_written,
+        "delta_steps": per_step,
+        "delta_mean_bytes_written": mean_delta,
+        "bytes_ratio_delta_vs_full": mean_delta / max(full_bytes, 1),
+        "changed_chunk_fraction": float(np.mean(
+            [r["chunks_written"] / r["chunks_total"] for r in per_step])),
+    }
+
+
+def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
+                             chunk_bytes: int = 256 << 10) -> dict:
+    """Warm-but-stale requeue: nodeB promoted step N, the frontier moved to
+    N+1 (small delta), nodeB restores N+1 — unchanged chunks from its own
+    stale cache, delta chunks from the warm peer, ~zero shared bytes."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.store import TieredStore, node_local_tier_roots
+
+    rng = np.random.default_rng(0)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+
+        def store_for(node: str, sim: float = 0.0) -> TieredStore:
+            return TieredStore(
+                root / "ck", sim_io_factor=sim, seed=0,
+                tier_roots=node_local_tier_roots(root / "nodes" / node))
+
+        w = CheckpointManager(store_for("peerA"), replicas=1, delta=True,
+                              chunk_bytes=chunk_bytes, promote="eager",
+                              node="peerA")
+        w.save(1, tree)
+        w.commit(1)
+        w.wait_promotions()
+
+        # nodeB warms its cache at step 1, then goes away (preempted)
+        b = CheckpointManager(store_for("nodeB"), replicas=1, delta=True,
+                              chunk_bytes=chunk_bytes, promote="on_restore",
+                              node="nodeB")
+        b.restore(tree)
+        b.wait_promotions()
+        b.close()
+
+        # frontier moves: peerA commits step 2 with a small delta (and its
+        # eager promotion keeps its own cache warm at step 2)
+        tree2 = _mutate(tree, 1.0 / n_leaves, chunk_bytes // 8)
+        p = w.save(2, tree2)
+        w.commit(2)
+        w.wait_promotions()
+        w.close()
+        delta_bytes = p["delta"]["bytes_written"]
+
+        # requeued nodeB restores step 2 with peerA as a peer source
+        b2 = CheckpointManager(store_for("nodeB", sim=1.0), replicas=1,
+                               delta=True, chunk_bytes=chunk_bytes,
+                               promote="off", node="nodeB",
+                               peer_roots={"peerA": root / "nodes" / "peerA"})
+        t0 = time.perf_counter()
+        b2.restore(tree)
+        stale_s = time.perf_counter() - t0
+        st = b2.last_restore_stats or {}
+        b2.close()
+
+        # contrast: a fully cold node pays the whole payload to shared
+        c = CheckpointManager(store_for("cold", sim=1.0), replicas=1,
+                              delta=True, chunk_bytes=chunk_bytes)
+        t0 = time.perf_counter()
+        c.restore(tree)
+        cold_s = time.perf_counter() - t0
+        cold_st = c.last_restore_stats or {}
+        c.close()
+
+    by_tier = st.get("bytes_by_tier") or {}
+    remote = sum(n for t, n in by_tier.items() if t != "local")
+    return {
+        "payload_mb": sum(a.nbytes for a in tree.values()) / 1e6,
+        "chunk_bytes": chunk_bytes,
+        "delta_bytes_committed": delta_bytes,
+        "stale_restore_s": stale_s,
+        "cold_restore_s": cold_s,
+        "speedup_vs_cold": cold_s / max(stale_s, 1e-9),
+        "bytes_by_tier": by_tier,
+        "cold_bytes_by_tier": cold_st.get("bytes_by_tier"),
+        "remote_bytes": remote,
+        "remote_vs_delta_ratio": remote / max(delta_bytes, 1),
+        "local_bytes": by_tier.get("local", 0),
+        "shared_bytes": by_tier.get("shared", 0),
+    }
+
+
+def run(results_dir: Path | None = None, smoke: bool = False):
+    from benchmarks.bench_startup import merge_bench_ckpt_io
+
+    payload_mb = 8 if smoke else 64
+    detail_save = _delta_save_detail(payload_mb)
+    detail_peer = _delta_peer_fetch_detail(payload_mb)
+    merge_bench_ckpt_io({"delta_save": detail_save,
+                         "delta_peer_fetch": detail_peer})
+    if results_dir:
+        results_dir.mkdir(parents=True, exist_ok=True)
+        (results_dir / "delta.json").write_text(json.dumps(
+            {"delta_save": detail_save, "delta_peer_fetch": detail_peer},
+            indent=1))
+    rows = [
+        {
+            "name": "ckpt_delta_save",
+            "us_per_call": float(np.mean(
+                [r["wall_s"] for r in detail_save["delta_steps"]])) * 1e6,
+            "derived": (
+                f"full={detail_save['full_shard_bytes']} "
+                f"delta={detail_save['delta_mean_bytes_written']:.0f} "
+                f"ratio={detail_save['bytes_ratio_delta_vs_full']:.3f} "
+                f"changed={detail_save['changed_chunk_fraction']:.3f}"),
+        },
+        {
+            "name": "ckpt_delta_peer_fetch",
+            "us_per_call": detail_peer["stale_restore_s"] * 1e6,
+            "derived": (
+                f"remote_bytes={detail_peer['remote_bytes']} "
+                f"delta_bytes={detail_peer['delta_bytes_committed']} "
+                f"shared={detail_peer['shared_bytes']} "
+                f"speedup_vs_cold={detail_peer['speedup_vs_cold']:.1f}x"),
+        },
+    ]
+    return rows

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+BENCH_KEYS = ()     # prints rows only; owns no BENCH_ckpt_io.json keys
+
 
 def _time(fn, *args, iters=3) -> float:
     fn(*args)  # compile + warm

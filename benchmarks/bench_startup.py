@@ -19,6 +19,9 @@ from pathlib import Path
 
 import numpy as np
 
+# keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones)
+BENCH_KEYS = ("placement_requeue", "peer_fetch")
+
 
 def run(results_dir: Path | None = None,
         ranks_list=(1, 4, 16, 64), shard_mb: float = 4.0,

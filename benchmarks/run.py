@@ -5,10 +5,16 @@
   bench_startup       Fig. 2: restore latency vs ranks x storage tier
   bench_coordinator   §III-A: two-phase barrier latency vs worker count
   bench_kernels       kernel-layer + checkpoint-substrate throughput
+  bench_delta         shard v3: delta save bytes + stale-node peer fetch
+
+Each module declares the BENCH_ckpt_io.json keys it owns in ``BENCH_KEYS``;
+after a run the harness prunes artifact keys no module claims any more, so a
+renamed benchmark cannot leave stale rows masquerading as fresh data.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -46,6 +52,39 @@ def collect_run_meta(smoke: bool = False) -> dict:
     }
 
 
+def known_bench_keys(modules) -> set[str]:
+    """Union of every key a benchmark module claims in the shared artifact
+    (``BENCH_KEYS``), plus the harness's own provenance stamp."""
+    known = {"run_meta"}
+    for mod in modules:
+        known.update(getattr(mod, "BENCH_KEYS", ()))
+    return known
+
+
+def prune_bench_ckpt_io(known: set[str],
+                        path: Path | None = None) -> list[str]:
+    """Schema check on the merge-written artifact: drop BENCH_ckpt_io.json
+    keys no benchmark module produces any more.  merge_bench_ckpt_io never
+    deletes, so without this a renamed/retired benchmark would leave its old
+    row in the artifact forever, silently read as current data.  Returns the
+    pruned keys (for logging/tests)."""
+    path = path or (ROOT / "BENCH_ckpt_io.json")
+    try:
+        data = json.loads(path.read_text())
+    except (FileNotFoundError, ValueError):
+        return []
+    stale = sorted(k for k in data if k not in known)
+    if not stale:
+        return []
+    for k in stale:
+        del data[k]
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(data, indent=1))
+    tmp.rename(path)
+    print(f"[bench] pruned stale artifact keys: {stale}", file=sys.stderr)
+    return stale
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -54,15 +93,19 @@ def main(argv=None) -> None:
                          "are NOT representative, only crashes are failures")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_coordinator, bench_cr_overhead, bench_kernels, bench_startup
+    from benchmarks import (bench_coordinator, bench_cr_overhead, bench_delta,
+                            bench_kernels, bench_startup)
 
+    modules = (bench_kernels, bench_startup, bench_coordinator,
+               bench_cr_overhead, bench_delta)
     # stamped FIRST so even a partially-crashed run is attributable, and the
     # modules' own merge_bench_ckpt_io calls ride on top of it
     bench_startup.merge_bench_ckpt_io(
         {"run_meta": collect_run_meta(smoke=args.smoke)})
     rows = []
-    for mod in (bench_kernels, bench_startup, bench_coordinator, bench_cr_overhead):
+    for mod in modules:
         rows.extend(mod.run(RESULTS, smoke=args.smoke))
+    prune_bench_ckpt_io(known_bench_keys(modules))
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")

@@ -19,6 +19,13 @@ Incremental mode (beyond-paper): a leaf whose crc32 is unchanged since the
 previous *committed* checkpoint is not rewritten — its manifest entry points at
 the older shard file.  GC keeps referenced base files alive.
 
+Delta mode (``delta=True``, shard v3): the chunk-granular successor to
+incremental — every leaf is split into fixed-size content-addressed chunks
+and a save writes only the chunks whose hash changed since the parent step
+(manifest v2 records the baseline+delta chain; GC reaps chunks by refcount).
+Restores resolve each chunk against stale-local-cache -> peers -> shared, so
+a warm-but-stale node fetches only the delta it is missing.
+
 I/O plane (see EXPERIMENTS.md): each leaf is CRC'd exactly once per save (a
 zero-copy pass that doubles as the incremental diff), then streamed through
 ``TieredStore.put_stream`` into a v2 shard — no whole-shard buffer, and the
@@ -32,6 +39,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+import zlib
 from pathlib import Path
 from typing import Optional
 
@@ -40,13 +48,49 @@ import numpy as np
 from repro.checkpoint import serialization as SER
 from repro.checkpoint.async_writer import AsyncWriter, WorkPool
 from repro.checkpoint.restore_engine import ParallelRestorer
-from repro.checkpoint.store import TieredStore
+from repro.checkpoint.store import (TieredStore, chunk_refcounts, chunk_rel,
+                                    manifest_chunk_hashes)
 
 PROMOTE_POLICIES = ("off", "on_restore", "eager")
+
+# how far behind a stale peer's cached step may be before the chunk plane
+# stops considering it a source: chunk overlap decays with step distance, and
+# past this lag the probe cost (per-chunk existence checks over the
+# interconnect) outweighs the expected hits
+STALE_PEER_MAX_LAG = 64
+
+# cap on per-probe stat calls in validate_promoted_cache: a delta cache
+# references one file per chunk, and the scheduler probes MANY nodes
+PROBE_MAX_FILES = 64
 
 
 def _step_dir(prefix: str, step: int) -> str:
     return f"{prefix}/step_{step:010d}"
+
+
+def is_chunked_manifest(manifest: dict) -> bool:
+    """True when any leaf resolves through the content-addressed chunk plane
+    (v3 delta checkpoints) rather than a shard file.  Keyed on the presence
+    of ``chunks`` — a zero-byte leaf legitimately has an EMPTY chunk list
+    and must still restore through the chunk plane, not vanish."""
+    return any("chunks" in e for e in manifest.get("leaves") or ())
+
+
+def manifest_payload_map(manifest: dict, prefix: str) -> dict[str, tuple]:
+    """Every payload file a manifest references, with what verifies it:
+    ``rel -> ("shard", [leaf entries])`` for v1/v2 file-based leaves,
+    ``rel -> ("chunk", chunk entry)`` for content-addressed chunks.  The
+    single definition promotion, cache validation and the registry all share
+    — so a delta checkpoint promotes/validates chunk-by-chunk exactly like a
+    full one promotes shard-by-shard."""
+    out: dict[str, tuple] = {}
+    for e in manifest["leaves"]:
+        if "chunks" in e:
+            for c in e["chunks"]:
+                out.setdefault(chunk_rel(prefix, c["hash"]), ("chunk", c))
+        elif e.get("file"):
+            out.setdefault(e["file"], ("shard", []))[1].append(e)
+    return out
 
 
 def committed_steps(store: TieredStore, tier: str, prefix: str) -> list[int]:
@@ -71,8 +115,10 @@ def validate_promoted_cache(store: TieredStore, *, tier: str = "shared",
     Invalidation-aware and cheap (no payload reads): the marker must parse
     (a torn ``PROMOTED.json`` is cold, not an error), its step must equal the
     latest committed step (a superseded marker is stale), the promoted
-    manifest must parse and match, and every referenced shard file must exist
-    in the promote tier at the source file's size (catching truncation).
+    manifest must parse and match, and referenced payload files (shards or
+    chunks; sampled when a delta cache references more than
+    ``PROBE_MAX_FILES`` of them) must exist in the promote tier at the
+    source file's size (catching truncation).
     Deliberately advisory — deep CRC verification stays in the restore path,
     so a probe that wrongly says "warm" costs one cache miss, never stale
     bytes.
@@ -115,11 +161,21 @@ def validate_promoted_cache(store: TieredStore, *, tier: str = "shared",
             promote_tier, f"{_step_dir(prefix, step)}/MANIFEST.json").decode())
         if man.get("step") != step:
             raise ValueError("promoted manifest step mismatch")
-        rels = sorted({e["file"] for e in man["leaves"]})
+        rels = sorted(manifest_payload_map(man, prefix))
     except (FileNotFoundError, ValueError, OSError, KeyError, TypeError):
         info["reason"] = "damaged promoted manifest"
         return info
-    for rel in rels:
+    probe = rels
+    if len(rels) > PROBE_MAX_FILES:
+        # a chunked (delta) cache can reference thousands of chunk files;
+        # stat'ing them all would break this probe's "cheap, many nodes"
+        # contract.  The probe is ADVISORY by design (deep verification
+        # stays in the restore path), so an evenly-spaced sample bounds the
+        # cost — a wrongly-warm verdict costs one cache miss, never stale
+        # bytes
+        stride = len(rels) / PROBE_MAX_FILES
+        probe = [rels[int(i * stride)] for i in range(PROBE_MAX_FILES)]
+    for rel in probe:
         try:
             cached = store.size(promote_tier, rel)
         except FileNotFoundError:
@@ -142,6 +198,8 @@ class CheckpointManager:
     def __init__(self, store: TieredStore, *, tier: str = "shared",
                  worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
                  mode: str = "sync", incremental: bool = False,
+                 delta: bool = False, rebase_every: int = 8,
+                 chunk_bytes: Optional[int] = None,
                  keep_last: int = 3, prefix: str = "ckpt",
                  shard_format: int = 2, restore_workers: int = 0,
                  promote: str = "off", promote_tier: str = "local",
@@ -150,6 +208,11 @@ class CheckpointManager:
         assert mode in ("sync", "async")
         assert shard_format in (1, 2)      # 1 = legacy writer (compat tests)
         assert promote in PROMOTE_POLICIES
+        # delta (v3 chunk plane) and incremental (v1/v2 leaf reuse) are two
+        # answers to the same question; combining them would mix chunked and
+        # file-based leaves inside one manifest for no gain
+        assert not (delta and incremental), "delta and incremental are exclusive"
+        assert rebase_every >= 1
         # the promote tier is a CACHE whose invalidation deletes files —
         # pointing it at the primary tier would let a stale-cache cleanup
         # destroy the committed checkpoints themselves
@@ -163,6 +226,15 @@ class CheckpointManager:
         self.replicas = replicas
         self.mode = mode
         self.incremental = incremental
+        # delta mode: saves go through the content-addressed chunk plane —
+        # only chunks whose hash changed since the parent step are written,
+        # and the manifest records the baseline+delta chain.  rebase_every
+        # bounds the chain length (metadata hygiene: content addressing means
+        # a "rebaseline" costs no extra payload writes, it only resets the
+        # chain the manifest reports).
+        self.delta = delta
+        self.rebase_every = rebase_every
+        self.chunk_bytes = chunk_bytes or SER.DELTA_CHUNK_BYTES
         self.keep_last = keep_last
         self.prefix = prefix
         self.shard_format = shard_format
@@ -220,6 +292,8 @@ class CheckpointManager:
         t0 = time.time()
         records = SER.tree_to_records(tree)            # snapshot (device_get)
         snap_s = time.time() - t0
+        if self.delta:
+            return self._save_delta(step, records, snap_s, extra_meta)
         mine = self._my_leaves(records)
         sdir = _step_dir(self.prefix, step)
         shard_rel = f"{sdir}/shard_w{self.worker_id:05d}.bin"
@@ -302,6 +376,124 @@ class CheckpointManager:
             do_write()
         return part
 
+    # -- delta (content-addressed chunk) save --------------------------
+    def _parent_manifest(self) -> Optional[dict]:
+        """The manifest a delta save/commit diffs against: the LATEST
+        COMMITTED step on the store, with ``_prev_manifest`` as a same-step
+        cache.  It must track the store, not this manager's last commit or
+        restore: a distributed worker never commits (the coordinator does),
+        so a baseline pinned at its restore-time manifest would (a) grow the
+        per-step delta with total drift instead of per-step change and
+        (b) eventually skip chunk writes against a manifest GC has already
+        retired — referencing reaped chunks.  The latest committed manifest
+        is always in the GC keep set, so its chunks cannot be reaped under
+        an in-flight save."""
+        try:
+            steps = self.steps()
+        except OSError:
+            return self._prev_manifest
+        if not steps:
+            return self._prev_manifest
+        latest = steps[-1]
+        if (self._prev_manifest is not None
+                and self._prev_manifest.get("step") == latest):
+            return self._prev_manifest
+        try:
+            self._prev_manifest = self.read_manifest(latest)
+        except (FileNotFoundError, ValueError, KeyError, OSError):
+            return self._prev_manifest
+        return self._prev_manifest
+
+    def _save_delta(self, step: int, records, snap_s: float,
+                    extra_meta: Optional[dict]) -> dict:
+        """Chunk-plane save: every leaf is chunked/hashed/CRC'd in ONE pass,
+        then only chunks absent from the parent manifest are written to the
+        dedup store (``chunks/<hh>/<hash>``) — save cost is proportional to
+        the CHANGE RATE, not the model size.  A payload-free v3 index file
+        records the leaf -> chunk mapping next to the wpart."""
+        mine = self._my_leaves(records)
+        sdir = _step_dir(self.prefix, step)
+        index_rel = f"{sdir}/shard_w{self.worker_id:05d}.chunks"
+        parent = self._parent_manifest()
+        parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+
+        entries: list[dict] = []
+        new_views: dict[str, object] = {}     # hash -> zero-copy byte view
+        chunks_total = bytes_total = 0
+        for idx, name, arr in mine:
+            arr = np.asarray(arr)
+            chunks, views, leaf_crc = SER.chunk_leaf(arr, self.chunk_bytes)
+            nbytes = sum(c["nbytes"] for c in chunks)
+            fresh = 0
+            for c, v in zip(chunks, views):
+                chunks_total += 1
+                bytes_total += c["nbytes"]
+                if c["hash"] in parent_hashes:
+                    continue
+                fresh += 1
+                # dedup at diff time: unchanged-since-parent chunks (the
+                # parent manifest is always in the GC keep set, so its
+                # chunks cannot be reaped under us) and duplicates within
+                # this save are never queued for writing
+                if c["hash"] not in new_views:
+                    new_views[c["hash"]] = v
+            entries.append({
+                "path": name, "index": idx, "crc32": leaf_crc,
+                "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "nbytes": nbytes, "chunks": chunks,
+                "reused": not fresh,
+            })
+        part = {
+            "worker_id": self.worker_id,
+            "num_workers": self.num_workers,
+            "step": step,
+            "leaves": entries,
+            "snapshot_s": snap_s,
+            "meta": extra_meta or {},
+            "delta": {
+                "chunk_bytes": self.chunk_bytes,
+                "chunks_total": chunks_total,
+                "bytes_total": bytes_total,
+                "chunks_new": len(new_views),
+                "bytes_new": sum(v.nbytes for v in new_views.values()),
+                "parent_step": parent["step"] if parent else None,
+            },
+        }
+
+        def do_write():
+            # store writes only; the diff above already decided what moves.
+            # force=True: a chunk outside the parent manifest is written even
+            # if a file with its hash exists — bare existence could be a
+            # doomed old step's copy that a concurrent gc is about to reap
+            # (the rewrite is idempotent; unchanged-since-parent chunks never
+            # reach this loop, so the dedup win is untouched).
+            written_b = written_c = 0
+            for h, v in new_views.items():
+                if self.store.put_chunk(self.tier, self.prefix, h, v,
+                                        replicas=self.replicas, force=True):
+                    written_c += 1
+                    written_b += v.nbytes
+            part["delta"]["chunks_written"] = written_c
+            part["delta"]["bytes_written"] = written_b
+            # the v3 index file is the format's on-disk artifact for tooling
+            # and disaster recovery (a manifest can be rebuilt from index
+            # files alone); the restore path reads the manifest, so one
+            # replica of this few-KB file is plenty
+            self.store.put(
+                self.tier, index_rel,
+                SER.write_chunk_index_bytes(entries, meta={"step": step},
+                                            chunk_bytes=self.chunk_bytes),
+                replicas=1)
+            self.store.put(
+                self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
+                json.dumps(part).encode(), replicas=self.replicas)
+
+        if self._writer is not None:
+            self._writer.submit(do_write)
+        else:
+            do_write()
+        return part
+
     def wait_writes(self, timeout: Optional[float] = None) -> None:
         if self._writer is not None:
             self._writer.wait(timeout)
@@ -329,6 +521,27 @@ class CheckpointManager:
             "committed_at": time.time(),
             "meta": meta,
         }
+        if any("chunks" in e for e in leaves):
+            # manifest v2: record the baseline+delta chain.  The manifest is
+            # SELF-CONTAINED (it lists every chunk each leaf needs, not just
+            # the new ones), so the chain is provenance/observability — GC
+            # and restore never have to walk ancestors.  rebase_every bounds
+            # the reported chain; content addressing makes the rebaseline
+            # free (unchanged chunks are never re-written).
+            manifest["manifest_version"] = 2
+            parent = self._parent_manifest()
+            chain, baseline, parent_step = [step], step, None
+            if parent is not None and is_chunked_manifest(parent):
+                pdelta = parent.get("delta") or {}
+                pchain = pdelta.get("chain") or [parent["step"]]
+                if len(pchain) < self.rebase_every:
+                    parent_step = parent["step"]
+                    chain = pchain + [step]
+                    baseline = pdelta.get("baseline", parent["step"])
+            manifest["delta"] = {
+                "baseline": baseline, "parent": parent_step, "chain": chain,
+                "chunk_bytes": self.chunk_bytes,
+            }
         self.store.put(self.tier, f"{sdir}/MANIFEST.json",
                        json.dumps(manifest).encode(), replicas=self.replicas)
         self._prev_manifest = manifest
@@ -359,14 +572,45 @@ class CheckpointManager:
     def _by_file(manifest: dict) -> dict[str, list[dict]]:
         by_file: dict[str, list[dict]] = {}
         for e in manifest["leaves"]:
-            by_file.setdefault(e["file"], []).append(e)
+            if e.get("file"):           # chunked leaves resolve via the
+                by_file.setdefault(e["file"], []).append(e)   # chunk plane
         return by_file
+
+    def _restore_chunked(self, sources: list[str], manifest: dict):
+        """Chunk-plane restore against an ordered source list (stale local
+        cache first, then peers, then the primary tier): every chunk resolves
+        independently down the list, so a warm-but-stale node reads its
+        unchanged chunks locally and fetches only the missing delta."""
+        leaves = manifest["leaves"]
+        chunked = [e for e in leaves if "chunks" in e]
+        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        named, st = engine.restore_chunked(sources, chunked,
+                                           prefix=self.prefix)
+        stats = {"mode": "chunked", "tier": sources[-1], "delta": True,
+                 **st.as_dict()}
+        by_file = self._by_file(manifest)
+        if by_file:     # mixed manifest (mode switched mid-run): file leaves
+            named2, st2 = (engine.restore_multi(sources, by_file)
+                           if len(sources) > 1
+                           else engine.restore(sources[0], by_file))
+            named.update(named2)
+            stats["bytes_read"] += st2.bytes_read
+            stats["tasks"] += st2.tasks
+            stats["files"] += st2.files
+            stats["replica_fallbacks"] += st2.replica_fallbacks
+            for t, n in st2.bytes_by_tier.items():
+                stats["bytes_by_tier"][t] = (
+                    stats["bytes_by_tier"].get(t, 0) + n)
+        return named, stats
 
     def _restore_files(self, tier: str, manifest: dict):
         """Fetch every manifest-referenced leaf from ``tier``.  Returns
         ({leaf_path: array}, stats).  ``restore_workers=1`` keeps the serial
         per-shard loop (the pre-engine path, and the benchmark baseline);
-        anything else fans out through the ParallelRestorer."""
+        anything else fans out through the ParallelRestorer.  Chunked (v3)
+        manifests route through the chunk plane whatever the worker count."""
+        if is_chunked_manifest(manifest):
+            return self._restore_chunked([tier], manifest)
         by_file = self._by_file(manifest)
         if self.restore_workers == 1:
             named: dict[str, np.ndarray] = {}
@@ -420,7 +664,16 @@ class CheckpointManager:
                 named, manifest, stats = got
         if named is None:
             manifest = self.read_manifest(step)
-            named, stats = self._restore_files(self.tier, manifest)
+            if is_chunked_manifest(manifest) and self.promote_tier != self.tier:
+                # the node's own — possibly STALE — promoted cache joins the
+                # source list: content-addressed chunks stay valid whatever
+                # step the cache marker names, so a requeued warm-but-stale
+                # node reads unchanged chunks locally and pays the primary
+                # tier only for the delta
+                named, stats = self._restore_chunked(
+                    [self.promote_tier, self.tier], manifest)
+            else:
+                named, stats = self._restore_files(self.tier, manifest)
             self._schedule_promotion(manifest)
         tree = SER.restore_tree(template, named)
         self._prev_manifest = manifest
@@ -428,48 +681,71 @@ class CheckpointManager:
         return tree, manifest
 
     # -- peer cache fabric ---------------------------------------------
-    def _peer_sources(self, step: int) -> list[str]:
-        """Registered peer tiers whose promoted cache is warm for exactly
-        ``step``.  Candidates come from the scheduler hint (``peer_roots``)
-        merged with the registry; each one's ``PROMOTED.json`` is re-read
-        from the peer itself before it is trusted, so a stale inventory
-        entry — a peer that GC'd or superseded its cache — is skipped, never
-        served."""
+    def _peer_sources(self, step: int) -> tuple[list[str], list[str]]:
+        """Registered peer tiers whose promoted cache can serve ``step``,
+        bucketed ``(exact, stale)`` in ONE marker sweep (each candidate's
+        ``PROMOTED.json`` is a remote read over the latency-carrying peer
+        tier — re-reading it per bucket would double the planning cost of
+        exactly the warm-restart path this fabric optimizes).
+
+        Candidates come from the scheduler hint (``peer_roots``) merged with
+        the registry; each one's marker is re-read from the peer itself
+        before it is trusted, so a stale inventory entry — a peer that GC'd
+        or superseded its cache — is skipped, never served.  ``exact`` peers
+        cache EXACTLY ``step`` (the only ones the full-shard fabric can
+        use); ``stale`` peers hold a parseable cache of some other step —
+        useless for shard files, but a chunk-plane restore resolves per
+        content hash, so a stale peer still serves every chunk the target
+        step shares with its cached one."""
         cands: dict[str, tuple[Path, str]] = {}
-        for name, root in self.peer_roots.items():
+        for name, root in sorted(self.peer_roots.items()):
             if self.node is not None and name == self.node:
                 continue
             cands[name] = (Path(root), self.promote_tier)
         if self.registry is not None:
-            for name, e in self.registry.warm_peers(
-                    step, exclude=(self.node,)).items():
+            entries = dict(self.registry.warm_peers(step,
+                                                    exclude=(self.node,)))
+            entries.update(self.registry.near_peers(
+                step, exclude=(self.node,), max_lag=STALE_PEER_MAX_LAG))
+            for name, e in entries.items():
                 cands.setdefault(
                     name, (Path(e["local_root"]), e.get("tier", "local")))
-        tiers: list[str] = []
-        for name in sorted(cands):
-            root, via = cands[name]
+        exact: list[str] = []
+        stale: list[tuple[int, str]] = []
+        for name, (root, via) in cands.items():
             tier = self.store.add_peer(name, root, via_tier=via)
             try:
                 marker = json.loads(
                     self.store.get(tier, self._marker_rel()).decode())
-                if not isinstance(marker, dict) or marker.get("step") != step:
-                    continue                    # stale/foreign: never served
-            except (FileNotFoundError, ValueError, OSError):
+                if not isinstance(marker, dict):
+                    continue
+                cached = int(marker.get("step"))
+            except (FileNotFoundError, ValueError, TypeError, OSError):
                 continue
-            tiers.append(tier)
-        return tiers
+            if cached == step:
+                exact.append(tier)
+            elif abs(cached - step) <= STALE_PEER_MAX_LAG:
+                # ordered by the MARKER's actual lag (the registry claim may
+                # be outdated): the nearer the cached step, the larger the
+                # expected chunk overlap, so the better the source
+                stale.append((abs(cached - step), tier))
+        return exact, [t for _, t in sorted(stale)]
 
     def _restore_from_peers(self, step: int):
-        """Multi-source restore of ``step`` from warm peers' promoted caches.
-        Returns (named, manifest, stats) or None to fall through to the
-        shared tier.  The manifest comes from a peer's promoted copy (step
-        pinned; leaf CRCs from it are enforced on every payload byte
-        whatever the source), every range task falls back peer -> peer ->
-        shared, and the promotion tee is pointed at the peers first so the
-        warm-up copy avoids the shared tier too."""
-        peer_tiers = self._peer_sources(step)
-        if not peer_tiers:
-            return None
+        """Multi-source restore of ``step`` from peers' promoted caches.
+        Returns (named, manifest, stats) or None to fall through.
+
+        Full-shard (v1/v2) manifests keep the PR-4 fabric: only exact-step
+        warm peers can serve, the manifest itself comes from a peer's
+        promoted copy, and every range task falls back peer -> peer ->
+        shared.  Chunked (v3) manifests widen the source list with STALE
+        peers and this node's own stale cache — content-addressed chunks
+        are step-agnostic, so a requeued node fetches only the delta chunks
+        it is missing, peers first.  Leaf/chunk CRCs from the manifest are
+        enforced on every payload byte whatever the source, and the
+        promotion tee is pointed at the peers first so the warm-up copy
+        avoids the shared tier too."""
+        peer_tiers, stale_tiers = self._peer_sources(step)
         man_rel = f"{_step_dir(self.prefix, step)}/MANIFEST.json"
         manifest = None
         for t in peer_tiers:
@@ -482,6 +758,32 @@ class CheckpointManager:
             except (FileNotFoundError, ValueError, OSError, KeyError):
                 continue
         if manifest is None:
+            # no exact-step peer could serve the manifest: only the chunk
+            # plane can still profit (from stale peers), and the manifest
+            # is a tiny primary-tier read next to the payload it unlocks
+            if not stale_tiers:
+                return None
+            try:
+                manifest = self.read_manifest(step)
+            except (FileNotFoundError, ValueError, KeyError):
+                return None
+            if not is_chunked_manifest(manifest):
+                return None
+        if is_chunked_manifest(manifest):
+            peers = peer_tiers + [t for t in stale_tiers
+                                  if t not in peer_tiers]
+            if not peers:
+                return None           # plain stale-local + primary path
+            sources = [self.promote_tier] + peers + [self.tier]
+            try:
+                named, stats = self._restore_chunked(sources, manifest)
+            except (SER.ChecksumError, OSError, ValueError, KeyError):
+                return None
+            stats.update({"tier": "peer", "peer": True, "peer_tiers": peers})
+            self._schedule_promotion(manifest,
+                                     src_tiers=peers + [self.tier])
+            return named, manifest, stats
+        if not peer_tiers:
             return None
         sources = [self.promote_tier] + peer_tiers + [self.tier]
         engine = ParallelRestorer(self.store, workers=self.restore_workers)
@@ -619,23 +921,25 @@ class CheckpointManager:
         if cached is not None and cached > step and cached in self.steps():
             return      # never clobber a warmer cache with an older step
         try:
-            by_file = self._by_file(manifest)
+            pmap = manifest_payload_map(manifest, self.prefix)
             have = set(marker.get("files") or []) if marker is not None else set()
             self.store.delete_file(self.promote_tier, self._marker_rel())
             if cached is not None:
                 self.store.delete_file(
                     self.promote_tier,
                     f"{_step_dir(self.prefix, cached)}/MANIFEST.json")
-            for rel in have - set(by_file):
+            for rel in have - set(pmap):
                 self.store.delete_file(self.promote_tier, rel)
             copied: list[str] = []       # this run's copies, for cancel undo
-            for rel, ents in by_file.items():
+            for rel in sorted(pmap):
                 if self._promote_cancelled(step):
                     self._abort_cancelled(step, copied)
                     return          # gc is deleting this step: no marker
                 if rel in have and self.store.exists(self.promote_tier, rel):
-                    continue        # already promoted + CRC-verified
-                self._copy_promoted(rel, ents, src_tiers)
+                    continue        # already promoted + CRC-verified (for a
+                    # delta step this skips every unchanged chunk the stale
+                    # cache already holds — the tee copies only the delta)
+                self._copy_promoted(rel, pmap[rel], src_tiers)
                 copied.append(rel)
             if self._promote_cancelled(step):
                 self._abort_cancelled(step, copied)
@@ -645,16 +949,28 @@ class CheckpointManager:
                            json.dumps(manifest).encode(), replicas=1)
             self.store.put(
                 self.promote_tier, self._marker_rel(),
-                json.dumps({"step": step, "files": sorted(by_file),
+                json.dumps({"step": step, "files": sorted(pmap),
                             "promoted_at": time.time()}).encode(),
                 replicas=1)
             if self.registry is not None and self.node:
                 try:
+                    delta = manifest.get("delta") or {}
+                    chunk_count = sum(1 for k in pmap
+                                      if pmap[k][0] == "chunk")
+                    # the registry is a SUMMARY inventory: peers re-read the
+                    # node's marker before trusting it, so the per-chunk
+                    # list (which scales with model size) stays in the local
+                    # marker; the registry carries only the shard files plus
+                    # chunk_count/baseline_step
                     self.registry.publish(
-                        self.node, step=step, files=sorted(by_file),
+                        self.node, step=step,
+                        files=sorted(r for r in pmap
+                                     if pmap[r][0] == "shard"),
                         local_root=self.store.tier_roots.get(
                             self.promote_tier, self.store.root),
-                        tier=self.promote_tier)
+                        tier=self.promote_tier,
+                        baseline_step=delta.get("baseline"),
+                        chunk_count=chunk_count or None)
                 except OSError as e:
                     # the registry is ADVISORY: an unwritable inventory must
                     # not invalidate the (complete, CRC-verified, marker-
@@ -677,18 +993,26 @@ class CheckpointManager:
             except OSError:
                 pass                # best-effort: orphans are data, not harm
 
-    def _copy_promoted(self, rel: str, ents: list[dict],
+    def _copy_promoted(self, rel: str, payload: tuple,
                        src_tiers: list[str]) -> None:
-        """Copy + CRC-verify one shard file into the promote tier from the
-        first source that yields intact bytes (a peer dying mid-promotion
-        falls back to the next peer, then the primary tier)."""
+        """Copy + CRC-verify one payload file (a shard or a single chunk)
+        into the promote tier from the first source that yields intact bytes
+        (a peer dying mid-promotion falls back to the next peer, then the
+        primary tier)."""
+        kind, info = payload
         last: Optional[Exception] = None
         for src in src_tiers:
             try:
                 self.store.copy_file(src, rel, self.promote_tier)
-                self.store.read_shard_leaves(
-                    self.promote_tier, rel, [e["path"] for e in ents],
-                    expect_crcs={e["path"]: e["crc32"] for e in ents})
+                if kind == "chunk":
+                    data = self.store.get(self.promote_tier, rel)
+                    if (len(data) != info["nbytes"]
+                            or zlib.crc32(data) != info["crc32"]):
+                        raise SER.ChecksumError(f"chunk crc mismatch: {rel}")
+                else:
+                    self.store.read_shard_leaves(
+                        self.promote_tier, rel, [e["path"] for e in info],
+                        expect_crcs={e["path"]: e["crc32"] for e in info})
                 return
             except Exception as e:  # noqa: BLE001 — try the next source
                 last = e
@@ -718,15 +1042,31 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     def gc(self) -> None:
         """Old manifests are always removed (a checkpoint 'exists' iff its
-        manifest does); step dirs survive only while an incremental manifest in
-        the kept set references their shard files."""
+        manifest does); step dirs survive only while an incremental manifest
+        in the kept set references their shard files.  Content-addressed
+        chunks are reaped by REFCOUNT, not by step: a chunk stays on disk
+        while ANY kept manifest references it (delta chains share most of
+        their chunks, so per-step deletion would tear live data), and is
+        deleted exactly when its count drops to zero."""
         steps = self.steps()
         keep = set(steps[-self.keep_last:]) if self.keep_last else set(steps)
         referenced_dirs = set()
+        kept_manifests = []
         for s in keep:
             man = self.read_manifest(s)
+            kept_manifests.append(man)
             for e in man["leaves"]:
-                referenced_dirs.add(str(Path(e["file"]).parent))
+                if e.get("file"):
+                    referenced_dirs.add(str(Path(e["file"]).parent))
+        # retired manifests are read BEFORE anything is deleted: their chunk
+        # references are the reap candidates below
+        retired_manifests = []
+        for s in steps:
+            if s not in keep:
+                try:
+                    retired_manifests.append(self.read_manifest(s))
+                except (FileNotFoundError, ValueError, KeyError):
+                    continue
         doomed = [s for s in steps
                   if s not in keep
                   and _step_dir(self.prefix, s) not in referenced_dirs]
@@ -768,6 +1108,17 @@ class CheckpointManager:
                             self.store.delete_file(self.tier, rel)
             else:
                 self.store.delete_prefix(self.tier, sdir)
+        # chunk plane: refcount-aware reaping.  A chunk is reaped when the
+        # manifests RETIRED this cycle referenced it and its refcount across
+        # the KEPT manifests is zero (each manifest is self-contained, so
+        # ancestors of a kept delta step pin nothing beyond what it lists).
+        # Deliberately NOT "every on-disk chunk not in a kept manifest": a
+        # worker may have already written chunks for a step whose manifest
+        # is not committed yet — like the file plane, which never touches
+        # uncommitted step dirs, gc must not eat an in-flight save.
+        live = set(chunk_refcounts(kept_manifests))
+        for h in sorted(set(chunk_refcounts(retired_manifests)) - live):
+            self.store.delete_file(self.tier, chunk_rel(self.prefix, h))
 
     def close(self) -> None:
         try:

@@ -34,11 +34,20 @@ next (the next peer, then the shared tier), exactly like the serial reader's
 replica fallback, but scoped to the failed range rather than the whole shard.
 Manifest CRCs are pinned whatever the source, so a stale or corrupt peer can
 cost a retry, never wrong bytes.
+
+Chunk plane (``restore_chunked``): content-addressed (v3) leaves resolve
+per CHUNK instead of per byte range — every chunk independently walks an
+ordered source list that starts with the node's own (possibly stale)
+promoted cache, so a delta restore reads only the chunks the node is
+actually missing from remote tiers.  Same fault model, same CRC pinning,
+plus a whole-leaf CRC after assembly.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Optional
@@ -46,25 +55,37 @@ from typing import Optional
 import numpy as np
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.store import is_peer_tier
+from repro.checkpoint.store import chunk_rel, is_peer_tier
 
 DEFAULT_SPLIT_BYTES = 32 << 20      # target max payload bytes per range task
 
 ENV_RESTORE_WORKERS = "REPRO_RESTORE_WORKERS"
 
+log = logging.getLogger(__name__)
+
 
 def auto_workers(cap: Optional[int] = None) -> int:
     """Restore pool sizing.  ``REPRO_RESTORE_WORKERS`` wins outright when
-    set; otherwise the CPU count, capped by ``cap`` — the restore tier's
-    ``TierSpec.concurrency`` budget (summed across sources for multi-source
-    restores), so the pool is sized by what the storage can actually absorb
-    rather than a magic constant."""
+    set to a positive integer; otherwise the CPU count, capped by ``cap`` —
+    the restore tier's ``TierSpec.concurrency`` budget (summed across sources
+    for multi-source restores), so the pool is sized by what the storage can
+    actually absorb rather than a magic constant.
+
+    A mangled override (non-integer, zero, negative) degrades to auto sizing
+    with a logged warning — an operator typo in a job script must never turn
+    into a ``ValueError`` at restore time, which is exactly when the job can
+    least afford to die."""
     env = os.environ.get(ENV_RESTORE_WORKERS, "").strip()
     if env:
         try:
-            return max(1, int(env))
+            n = int(env)
         except ValueError:
-            pass        # mangled override degrades to auto, never kills a restore
+            n = None
+        if n is not None and n >= 1:
+            return n
+        log.warning(
+            "ignoring invalid %s=%r (want a positive integer); "
+            "falling back to auto worker sizing", ENV_RESTORE_WORKERS, env)
     n = max(2, os.cpu_count() or 2)
     if cap:
         n = min(n, max(1, cap))
@@ -87,6 +108,17 @@ class _RangeTask:
 
 
 @dataclasses.dataclass
+class _ChunkWork:
+    """One unique chunk to fetch (dedup'd: the same content hash wanted by
+    several leaves — or several positions of one leaf — is read ONCE)."""
+    digest: str
+    nbytes: int
+    crc32: Optional[int]
+    users: list                     # (leaf_path, byte offset) placements
+    by_tier: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class RestoreStats:
     workers: int
     files: int = 0
@@ -95,6 +127,8 @@ class RestoreStats:
     replica_fallbacks: int = 0
     sources: list = dataclasses.field(default_factory=list)
     bytes_by_tier: dict = dataclasses.field(default_factory=dict)
+    chunks: int = 0                 # unique chunks fetched (chunked restores)
+    chunk_refs: int = 0             # chunk references before dedup
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -198,6 +232,132 @@ class ParallelRestorer:
         from ``sources`` in order, with warm peers rotated round-robin per
         task so k peers aggregate bandwidth instead of queueing on one."""
         return self._run(list(sources), by_file)
+
+    def restore_chunked(self, sources: list[str], leaves: list[dict], *,
+                        prefix: str):
+        """Restore content-addressed (v3) leaves against an ordered source
+        list.  Returns ``({leaf_path: np.ndarray}, RestoreStats)``.
+
+        Every chunk is resolved INDEPENDENTLY down the source list — which is
+        what makes delta restores cheap: a requeued node whose stale local
+        cache still holds 95% of the chunks reads those locally and fetches
+        only the missing delta chunks from peers (or the shared tier).
+        Duplicate sources and duplicate chunk references are dedup'd; chunks
+        are batched into ~``split_bytes`` tasks grouped by their primary
+        source, issued largest-first, with peers rotated round-robin per task.
+        Per-chunk CRCs AND the whole-leaf CRC are pinned from the manifest,
+        so the result is byte-identical to a full-shard restore or it fails.
+        """
+        srcs = list(dict.fromkeys(sources))         # dedup, order-preserving
+        workers = self._effective_workers(srcs)
+        stats = RestoreStats(workers=workers, files=len(leaves),
+                             sources=srcs)
+        buffers: dict[str, np.ndarray] = {}
+        works: dict[str, _ChunkWork] = {}
+        for e in leaves:
+            nbytes = sum(c["nbytes"] for c in e["chunks"])
+            buffers[e["path"]] = np.empty(nbytes, dtype=np.uint8)
+            off = 0
+            for c in e["chunks"]:
+                w = works.get(c["hash"])
+                if w is None:
+                    w = works[c["hash"]] = _ChunkWork(
+                        digest=c["hash"], nbytes=c["nbytes"],
+                        crc32=c.get("crc32"), users=[])
+                w.users.append((e["path"], off))
+                off += c["nbytes"]
+                stats.chunk_refs += 1
+        stats.chunks = len(works)
+        if not works:
+            return self._finish_chunked(leaves, buffers, stats)
+
+        def locate(w: _ChunkWork) -> _ChunkWork:
+            rel = chunk_rel(prefix, w.digest)
+            w.by_tier = {t: ps for t in srcs
+                         if (ps := self.store.replica_paths(t, rel))}
+            return w
+
+        with ThreadPoolExecutor(max_workers=workers,
+                                thread_name_prefix="ckpt-restore") as pool:
+            ordered = list(pool.map(locate,
+                                    (works[d] for d in sorted(works))))
+            # batch by primary source so one task streams from one tier;
+            # cap at split_bytes so a large delta still fans out
+            groups: dict[str, list[_ChunkWork]] = {}
+            for w in ordered:
+                first = next((t for t in srcs if w.by_tier.get(t)), "")
+                groups.setdefault(first, []).append(w)
+            tasks: list[list[_ChunkWork]] = []
+            for _, ws in sorted(groups.items()):
+                cur: list[_ChunkWork] = []
+                cur_bytes = 0
+                for w in ws:
+                    if cur and cur_bytes + w.nbytes > self.split_bytes:
+                        tasks.append(cur)
+                        cur, cur_bytes = [], 0
+                    cur.append(w)
+                    cur_bytes += w.nbytes
+                if cur:
+                    tasks.append(cur)
+            tasks.sort(key=lambda ws: sum(w.nbytes for w in ws),
+                       reverse=True)                    # LPT order
+            stats.tasks = len(tasks)
+            futures = [pool.submit(self._exec_chunk_task, srcs, j, ws,
+                                   buffers)
+                       for j, ws in enumerate(tasks)]
+            for fut in futures:
+                by_tier, fallbacks = fut.result()
+                stats.replica_fallbacks += fallbacks
+                for tier, n in by_tier.items():
+                    stats.bytes_read += n
+                    stats.bytes_by_tier[tier] = (
+                        stats.bytes_by_tier.get(tier, 0) + n)
+        return self._finish_chunked(leaves, buffers, stats)
+
+    def _exec_chunk_task(self, srcs: list[str], index: int,
+                         ws: list[_ChunkWork], buffers: dict):
+        """Fetch one batch of chunks, each with independent fallback down its
+        own source chain, and scatter the verified bytes into the leaf
+        buffers (disjoint regions, so no locking)."""
+        by_tier: dict[str, int] = {}
+        fallbacks = 0
+        for w in ws:
+            errs: list[tuple[str, str, str]] = []
+            chain = [(t, p) for t in _ordered_tiers(srcs, w.by_tier, index)
+                     for p in w.by_tier[t]]
+            for i, (tier, p) in enumerate(chain):
+                try:
+                    with self.store.tier_slots(tier):
+                        raw = self.store.pread(tier, p, 0, w.nbytes)
+                    if w.crc32 is not None and zlib.crc32(raw) != w.crc32:
+                        raise SER.ChecksumError(
+                            f"crc mismatch for chunk {w.digest}")
+                    break
+                except (SER.ChecksumError, OSError, ValueError) as e:
+                    errs.append((tier, str(p), repr(e)))
+            else:
+                raise SER.ChecksumError(
+                    f"no intact source for chunk {w.digest}: {errs}")
+            fallbacks += i
+            by_tier[tier] = by_tier.get(tier, 0) + len(raw)
+            for leaf_path, off in w.users:
+                memoryview(buffers[leaf_path])[off:off + w.nbytes] = raw
+        return by_tier, fallbacks
+
+    @staticmethod
+    def _finish_chunked(leaves: list[dict], buffers: dict,
+                        stats: RestoreStats):
+        """Whole-leaf CRC check + dtype/shape materialization (zero-copy
+        views over the assembled buffers)."""
+        named: dict[str, np.ndarray] = {}
+        for e in leaves:
+            buf = buffers[e["path"]]
+            if e.get("crc32") is not None and zlib.crc32(buf) != e["crc32"]:
+                raise SER.ChecksumError(
+                    f"leaf crc mismatch for {e['path']} after chunk assembly")
+            named[e["path"]] = buf.view(
+                np.dtype(e["dtype"])).reshape(e["shape"])
+        return named, stats
 
     def _run(self, sources: list[str], by_file: dict[str, list[dict]]):
         workers = self._effective_workers(sources)

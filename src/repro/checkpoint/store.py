@@ -28,6 +28,15 @@ addressable read-only tier (``peer:<node>``) carrying the ``peer``
 ``TierSpec`` — its own concurrency slots and simulated inter-node latency —
 which is what lets the restore engine source ranges from a warm peer's
 promoted cache instead of the shared parallel filesystem.
+
+Chunk plane (v3 delta checkpoints): content-addressed chunk files live under
+``<prefix>/chunks/<hash-prefix>/<hash>`` — one file per unique chunk,
+whatever step(s) reference it.  ``put_chunk`` is the dedup write (a chunk
+already present is never re-written), ``chunk_digests`` lists a tier's
+inventory, and ``chunk_refcounts`` folds manifests into per-chunk reference
+counts so GC reaps exactly the chunks no live manifest references (the CRIU
+dirty-page idea applied to the store: a delta step writes only changed
+chunks, and an unchanged chunk's single copy stays pinned by its refcount).
 """
 from __future__ import annotations
 
@@ -41,7 +50,7 @@ import threading
 import time
 from collections import OrderedDict
 from pathlib import Path
-from typing import BinaryIO, Callable, Optional
+from typing import BinaryIO, Callable, Iterable, Optional
 
 from repro.checkpoint import serialization as SER
 
@@ -147,6 +156,47 @@ PEER_TIER_PREFIX = "peer:"
 
 def is_peer_tier(tier: str) -> bool:
     return tier.startswith(PEER_TIER_PREFIX)
+
+
+# -- content-addressed chunk plane (v3 delta checkpoints) -------------------
+
+CHUNKS_DIRNAME = "chunks"
+
+
+def chunk_rel(prefix: str, digest: str) -> str:
+    """Store-relative path of one content-addressed chunk.  The two-hex-char
+    fan-out directory keeps any single directory from holding the whole
+    chunk population (the classic git-objects layout)."""
+    return f"{prefix}/{CHUNKS_DIRNAME}/{digest[:2]}/{digest}"
+
+
+def chunk_digest_of(rel: str) -> Optional[str]:
+    """Inverse of ``chunk_rel``: the digest if ``rel`` is a chunk file path,
+    else None."""
+    parts = Path(rel).parts
+    if len(parts) >= 3 and parts[-3] == CHUNKS_DIRNAME:
+        return parts[-1]
+    return None
+
+
+def manifest_chunk_hashes(manifest: dict) -> set[str]:
+    """Every chunk digest a manifest's leaves reference (empty for v1/v2
+    file-based manifests)."""
+    return {c["hash"] for e in manifest.get("leaves", ())
+            for c in (e.get("chunks") or ())}
+
+
+def chunk_refcounts(manifests: Iterable[dict]) -> dict[str, int]:
+    """Fold manifests into per-chunk reference counts — the GC input: a
+    chunk is live while its count is nonzero, reapable at exactly zero.
+    Counted per MANIFEST (a chunk shared by two leaves of one step still
+    counts once per step), so the count is 'how many committed steps pin
+    this chunk'."""
+    counts: dict[str, int] = {}
+    for man in manifests:
+        for h in manifest_chunk_hashes(man):
+            counts[h] = counts.get(h, 0) + 1
+    return counts
 
 # tiers that live on a cluster node rather than the shared parallel FS —
 # the set every per-node mount point must cover
@@ -315,6 +365,38 @@ class TieredStore:
             self._simulate(tier, sink.nbytes)
         return [self._rel_of(p) for p in finals]
 
+    # -- chunk plane ---------------------------------------------------
+    def put_chunk(self, tier: str, prefix: str, digest: str, data, *,
+                  replicas: int = 1, force: bool = False) -> bool:
+        """Dedup write into the chunk plane: a chunk whose content-addressed
+        file already exists on ``tier`` is NOT re-written (that is the whole
+        point — identical chunks across steps/leaves cost one write ever).
+        Returns True iff bytes were actually written.  ``data`` may be any
+        buffer (the delta writer hands zero-copy memoryviews).
+
+        ``force=True`` writes even when the file exists (idempotent: same
+        hash, same bytes, atomic tmp+rename).  The delta saver uses it for
+        chunks NOT pinned by the parent manifest: trusting bare existence
+        there would race a concurrent gc reaping that very file after its
+        last committed reference retired (content that oscillates back)."""
+        rel = chunk_rel(prefix, digest)
+        if not force and self.exists(tier, rel):
+            return False
+        self.put(tier, rel, data, replicas=replicas)
+        return True
+
+    def get_chunk(self, tier: str, prefix: str, digest: str) -> bytes:
+        return self.get(tier, chunk_rel(prefix, digest))
+
+    def chunk_digests(self, tier: str, prefix: str) -> set[str]:
+        """Every chunk digest present on ``tier`` (union across replicas)."""
+        out = set()
+        for rel in self.list_prefix(tier, f"{prefix}/{CHUNKS_DIRNAME}"):
+            d = chunk_digest_of(rel)
+            if d is not None:
+                out.add(d)
+        return out
+
     # -- fd cache ------------------------------------------------------
     def _fd_acquire(self, path: Path) -> "_FdEntry":
         with self._fd_lock:
@@ -384,13 +466,28 @@ class TieredStore:
             self._fd_invalidate(p)
 
     def close(self) -> None:
-        """Close every cached read descriptor (reads after this just re-open)."""
-        with self._fd_lock:
+        """Close every cached read descriptor (reads after this just re-open).
+
+        Idempotent and shutdown-safe: callable any number of times, from
+        ``__del__``, and during interpreter teardown — when module globals
+        (``os``) may already be None — without raising.  ``_OS_CLOSE`` is
+        bound at class-definition time so the close syscall survives the
+        ``os`` module being torn down first; a descriptor that fails to
+        close (EBADF from a racing release) is skipped, not fatal."""
+        lock = getattr(self, "_fd_lock", None)
+        if lock is None:            # __init__ never completed
+            return
+        with lock:
             ents, self._fds = list(self._fds.values()), OrderedDict()
         for ent in ents:
             ent.dead = True
             if ent.refs == 0:
-                os.close(ent.fd)
+                try:
+                    self._OS_CLOSE(ent.fd)
+                except (OSError, TypeError):
+                    pass            # already closed / teardown half-done
+
+    _OS_CLOSE = staticmethod(os.close)
 
     def __del__(self):  # noqa: D105 — best-effort fd cleanup
         try:

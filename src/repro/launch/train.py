@@ -57,6 +57,15 @@ def build_argparser():
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--ckpt-mode", default="sync", choices=["sync", "async"])
     ap.add_argument("--ckpt-incremental", action="store_true")
+    ap.add_argument("--ckpt-delta", action="store_true",
+                    help="content-addressed delta checkpoints (shard v3): "
+                         "each save writes only the chunks whose hash "
+                         "changed since the parent step, and restores "
+                         "fetch only chunks the node is missing")
+    ap.add_argument("--ckpt-rebase-every", type=int, default=8,
+                    help="delta-chain length bound: after this many chained "
+                         "delta commits the manifest re-baselines (chunk "
+                         "dedup makes the rebaseline itself free)")
     ap.add_argument("--ckpt-replicas", type=int, default=1)
     ap.add_argument("--ckpt-promote", default="off",
                     choices=["off", "on_restore", "eager"],
@@ -93,6 +102,8 @@ def build_argparser():
 
 def main(argv=None) -> int:
     args = build_argparser().parse_args(argv)
+    if args.ckpt_delta and args.ckpt_incremental:
+        sys.exit("--ckpt-delta and --ckpt-incremental are mutually exclusive")
     # trap preemption signals from the very start: a USR1 during jit compile /
     # restore must checkpoint-and-requeue, not kill the process (default USR1
     # action is terminate) — the paper's startup-time lesson (Fig. 2) applies
@@ -132,6 +143,7 @@ def main(argv=None) -> int:
         store, worker_id=args.worker_id, num_workers=args.num_workers,
         replicas=args.ckpt_replicas, mode=args.ckpt_mode,
         incremental=args.ckpt_incremental,
+        delta=args.ckpt_delta, rebase_every=args.ckpt_rebase_every,
         restore_workers=args.restore_workers,
         promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier,
         peer_roots=peers, node=node, registry=registry)

@@ -65,10 +65,19 @@ class CacheRegistry:
         return self.root / f"{node}.json"
 
     def publish(self, node: str, *, step: int, files: Iterable[str],
-                local_root, tier: str = "local") -> dict:
+                local_root, tier: str = "local",
+                baseline_step: Optional[int] = None,
+                chunk_count: Optional[int] = None) -> dict:
         """Record that ``node`` holds a validated promoted cache of ``step``
         under ``local_root`` (atomic tmp + rename, so a concurrent reader
-        sees the old entry or the new one, never a torn one)."""
+        sees the old entry or the new one, never a torn one).
+
+        Delta-aware entries additionally advertise the chunk inventory: for
+        a chunked (v3) cache, ``files`` already lists the content-addressed
+        chunk paths, and ``baseline_step``/``chunk_count`` tell readers the
+        cache's delta-chain baseline and how many chunks it holds — what a
+        cold node's planner needs to decide that a STALE peer is still worth
+        sourcing from (most chunks survive across nearby steps)."""
         entry = {
             "node": node,
             "step": int(step),
@@ -77,6 +86,10 @@ class CacheRegistry:
             "tier": tier,
             "published_at": time.time(),
         }
+        if baseline_step is not None:
+            entry["baseline_step"] = int(baseline_step)
+        if chunk_count is not None:
+            entry["chunk_count"] = int(chunk_count)
         self.root.mkdir(parents=True, exist_ok=True)
         p = self._path(node)
         tmp = p.with_name(p.name + ".tmp")
@@ -114,3 +127,19 @@ class CacheRegistry:
         ex = {n for n in exclude if n}
         return {n: e for n, e in self.entries().items()
                 if e["step"] == int(step) and n not in ex}
+
+    def near_peers(self, step: int, exclude: Iterable[Optional[str]] = (),
+                   max_lag: Optional[int] = None) -> dict[str, dict]:
+        """Entries caching some OTHER step than ``step`` — stale for the
+        shard fabric, but a chunk-plane (delta) restore resolves by content
+        hash, so these peers still serve every chunk shared with the target
+        step.  Ordered nearest-step-first (the closer the cached step, the
+        larger the expected chunk overlap); ``max_lag`` drops entries more
+        than that many steps away.  Advisory, like everything here."""
+        ex = {n for n in exclude if n}
+        step = int(step)
+        cands = [(abs(e["step"] - step), n, e)
+                 for n, e in self.entries().items()
+                 if e["step"] != step and n not in ex
+                 and (max_lag is None or abs(e["step"] - step) <= max_lag)]
+        return {n: e for _, n, e in sorted(cands)}

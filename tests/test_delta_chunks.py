@@ -1,0 +1,643 @@
+"""Content-addressed chunk plane (shard v3): delta saves, dedup chunk store,
+refcount-aware GC, stale-cache/peer delta fetch, and the satellite hardening
+(auto_workers env parsing, TieredStore close idempotency, bench-artifact key
+pruning)."""
+import json
+import logging
+import os
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import (CheckpointManager, is_chunked_manifest,
+                                      manifest_payload_map)
+from repro.checkpoint.restore_engine import (ENV_RESTORE_WORKERS,
+                                             ParallelRestorer, auto_workers)
+from repro.checkpoint.store import (TieredStore, chunk_refcounts,
+                                    manifest_chunk_hashes,
+                                    node_local_tier_roots)
+from repro.sched.cache_registry import CacheRegistry
+
+ROOT = Path(__file__).resolve().parents[1]
+
+CHUNK = 1 << 16          # small chunks so a few-MB tree spans many of them
+
+
+def _tree(rng, n_leaves=4, elems=70_000):
+    return {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _mutate(tree, names, elems=100):
+    out = dict(tree)
+    for n in names:
+        a = out[n].copy()
+        a[:elems] += 1.0
+        out[n] = a
+    return out
+
+
+def _assert_trees_equal(got, want):
+    for k, a in want.items():
+        b = got[k]
+        assert np.asarray(b).dtype == np.asarray(a).dtype, k
+        assert np.array_equal(np.asarray(b), np.asarray(a)), k
+
+
+# ---------------------------------------------------------------------------
+# serialization: chunking + v3 index format
+# ---------------------------------------------------------------------------
+
+def test_chunk_leaf_single_pass_consistency(rng):
+    arr = rng.standard_normal(50_000).astype(np.float32)
+    entries, views, leaf_crc = SER.chunk_leaf(arr, CHUNK)
+    assert leaf_crc == SER.leaf_checksum(arr)
+    assert sum(e["nbytes"] for e in entries) == arr.nbytes
+    assert [v.nbytes for v in views] == [e["nbytes"] for e in entries]
+    # content addressing: identical bytes -> identical hash, a flipped byte
+    # -> a different hash for exactly that chunk
+    entries2, _, _ = SER.chunk_leaf(arr.copy(), CHUNK)
+    assert [e["hash"] for e in entries] == [e["hash"] for e in entries2]
+    mut = arr.copy()
+    mut[0] += 1.0
+    entries3, _, _ = SER.chunk_leaf(mut, CHUNK)
+    assert entries3[0]["hash"] != entries[0]["hash"]
+    assert [e["hash"] for e in entries3[1:]] == [e["hash"] for e in entries[1:]]
+
+
+def test_v3_index_roundtrip_and_assembly(rng):
+    tree = _tree(rng, n_leaves=2)
+    chunk_store = {}
+    tensors = []
+    for name, arr in SER.tree_to_records(tree):
+        entries, views, leaf_crc = SER.chunk_leaf(arr, CHUNK)
+        for e, v in zip(entries, views):
+            chunk_store[e["hash"]] = bytes(v)
+        tensors.append({"path": name, "dtype": str(arr.dtype),
+                        "shape": list(arr.shape), "nbytes": arr.nbytes,
+                        "crc32": leaf_crc, "chunks": entries})
+    data = SER.write_chunk_index_bytes(tensors, meta={"step": 9},
+                                       chunk_bytes=CHUNK)
+    assert data[:8] == SER.MAGIC3 and data[-8:] == SER.MAGIC3
+
+    def read_at(off, n):
+        return data[off:off + n]
+
+    header = SER.read_shard_header(read_at, len(data))
+    assert header["format"] == 3 and header["chunk_bytes"] == CHUNK
+    named, meta = SER.read_chunked_leaves(
+        header, lambda c: chunk_store[c["hash"]])
+    assert meta == {"step": 9}
+    _assert_trees_equal(named, tree)
+
+    # a torn chunk is detected before any bytes are served
+    bad = dict(chunk_store)
+    h = tensors[0]["chunks"][0]["hash"]
+    bad[h] = b"\x00" * len(bad[h])
+    with pytest.raises(SER.ChecksumError):
+        SER.read_chunked_leaves(header, lambda c: bad[c["hash"]])
+
+
+def test_v3_index_rejected_by_payload_readers(rng):
+    """A v3 index holds no payload: the ranged/whole-buffer readers must
+    refuse it loudly instead of misparsing."""
+    data = SER.write_chunk_index_bytes([], meta={})
+    with pytest.raises(ValueError, match="chunk plane"):
+        SER.read_shard_bytes(data)
+
+
+# ---------------------------------------------------------------------------
+# manager: delta save / chain / restore
+# ---------------------------------------------------------------------------
+
+def test_delta_save_writes_only_changed_chunks(rng, tmp_path):
+    tree = _tree(rng)
+    full_store = TieredStore(tmp_path / "full", seed=0)
+    CheckpointManager(full_store, replicas=1).save(1, tree)
+    full_bytes = full_store.size(
+        "shared", "ckpt/step_0000000001/shard_w00000.bin")
+
+    store = TieredStore(tmp_path / "delta", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    p1 = m.save(1, tree)
+    man1 = m.commit(1)
+    assert man1["manifest_version"] == 2
+    assert man1["delta"] == {"baseline": 1, "parent": None, "chain": [1],
+                             "chunk_bytes": CHUNK}
+    assert p1["delta"]["chunks_written"] == p1["delta"]["chunks_total"]
+
+    # <10% of chunks mutated -> far under 20% of the full-shard bytes
+    tree2 = _mutate(tree, ["l00"])
+    p2 = m.save(2, tree2)
+    man2 = m.commit(2)
+    assert man2["delta"]["chain"] == [1, 2] and man2["delta"]["parent"] == 1
+    written = p2["delta"]["bytes_written"]
+    assert 0 < written < 0.2 * full_bytes
+    assert p2["delta"]["chunks_written"] <= 2   # one touched chunk (+ slack)
+
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree2)
+    m.close()
+
+
+def test_delta_restore_byte_identical_to_full_shard_restore(rng, tmp_path):
+    """The acceptance contract: whatever the chunk plane does internally, a
+    delta restore returns exactly the bytes a full (non-delta) v2 restore of
+    the same tree returns."""
+    tree = _tree(rng)
+    tree2 = _mutate(tree, ["l01", "l03"])
+    d_store = TieredStore(tmp_path / "d", seed=0)
+    f_store = TieredStore(tmp_path / "f", seed=0)
+    dm = CheckpointManager(d_store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    fm = CheckpointManager(f_store, replicas=1)
+    for step, t in ((1, tree), (2, tree2)):
+        dm.save(step, t)
+        dm.commit(step)
+        fm.save(step, t)
+        fm.commit(step)
+    got_d, man_d = CheckpointManager(d_store, replicas=1).restore(tree)
+    got_f, man_f = CheckpointManager(f_store, replicas=1).restore(tree)
+    assert man_d["step"] == man_f["step"] == 2
+    for k in tree:
+        a, b = np.asarray(got_d[k]), np.asarray(got_f[k])
+        assert a.dtype == b.dtype and a.tobytes() == b.tobytes(), k
+    dm.close()
+    fm.close()
+
+
+def test_delta_chain_rebaselines_at_limit(rng, tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          rebase_every=3, keep_last=10)
+    tree = _tree(rng, n_leaves=2)
+    chains = []
+    for step in range(1, 6):
+        tree = _mutate(tree, ["l00"])
+        m.save(step, tree)
+        chains.append(m.commit(step)["delta"]["chain"])
+    assert chains == [[1], [1, 2], [1, 2, 3], [4], [4, 5]]
+    m.close()
+
+
+def test_delta_worker_baseline_tracks_committed_frontier(rng, tmp_path):
+    """A distributed worker saves but never commits (the coordinator does):
+    its delta diff must chase the latest COMMITTED manifest, not stay pinned
+    at whatever it last restored — else per-step deltas grow with total
+    drift and can reference retired chunks."""
+    store = TieredStore(tmp_path, seed=0)
+    worker = CheckpointManager(store, replicas=1, delta=True,
+                               chunk_bytes=CHUNK)
+    committer = CheckpointManager(store, replicas=1, delta=True,
+                                  chunk_bytes=CHUNK, keep_last=2)
+    tree = _tree(rng)
+    worker.save(1, tree)
+    committer.commit(1)
+    for step, leaf in ((2, "l01"), (3, "l02"), (4, "l03")):
+        tree = _mutate(tree, [leaf])
+        p = worker.save(step, tree)
+        committer.commit(step)
+        # one mutated chunk per step — against the frontier, not step 1
+        assert p["delta"]["parent_step"] == step - 1, p["delta"]
+        assert p["delta"]["chunks_new"] == 1, p["delta"]
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree)
+    worker.close()
+    committer.close()
+
+
+def test_v1_v2_and_nondelta_saves_still_restore(rng, tmp_path):
+    """Flipping delta on for new steps must not break reading older
+    full-shard checkpoints (v1 or v2) from the same store."""
+    tree = _tree(rng, n_leaves=2)
+    store = TieredStore(tmp_path, seed=0)
+    CheckpointManager(store, replicas=1, shard_format=1).save(1, tree)
+    CheckpointManager(store, replicas=1, shard_format=1).commit(1)
+    got1, _ = CheckpointManager(store, replicas=1).restore(tree, step=1)
+    _assert_trees_equal(got1, tree)
+
+    tree2 = _mutate(tree, ["l00"])
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          keep_last=10)
+    m.save(2, tree2)
+    man2 = m.commit(2)
+    assert is_chunked_manifest(man2)
+    got1, _ = CheckpointManager(store, replicas=1).restore(tree, step=1)
+    _assert_trees_equal(got1, tree)
+    got2, _ = CheckpointManager(store, replicas=1).restore(tree, step=2)
+    _assert_trees_equal(got2, tree2)
+    m.close()
+
+
+def test_multi_worker_delta_dedups_across_workers(rng, tmp_path):
+    """Two workers of one step share the chunk namespace: a chunk two leaves
+    happen to share is written once (put_chunk dedup)."""
+    base = rng.standard_normal(40_000).astype(np.float32)
+    tree = {"a": base, "b": base.copy(), "c": rng.standard_normal(
+        40_000).astype(np.float32)}
+    store = TieredStore(tmp_path, seed=0)
+    for w in range(2):
+        CheckpointManager(store, worker_id=w, num_workers=2, replicas=1,
+                          delta=True, chunk_bytes=CHUNK).save(1, tree)
+    man = CheckpointManager(store, num_workers=2, replicas=1,
+                            delta=True).commit(1, num_workers=2)
+    hashes = manifest_chunk_hashes(man)
+    # identical leaves -> identical chunk lists -> dedup'd on disk
+    assert len(store.chunk_digests("shared", "ckpt")) == len(hashes)
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree)
+
+
+def test_delta_roundtrips_zero_size_and_scalar_leaves(rng, tmp_path):
+    """A zero-byte leaf has an EMPTY chunk list — it must still round-trip
+    through the chunk plane (shape, dtype and all), not silently vanish
+    from the restore."""
+    tree = {
+        "empty": np.zeros((0,), dtype=np.float32),
+        "empty2d": np.zeros((0, 4), dtype=np.int64),
+        "scalar": np.int32(7),
+        "normal": rng.standard_normal(10_000).astype(np.float32),
+    }
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    m.save(1, tree)
+    man = m.commit(1)
+    assert is_chunked_manifest(man)
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    for k, a in tree.items():
+        b = got[k]
+        assert np.asarray(b).dtype == np.asarray(a).dtype, k
+        assert np.asarray(b).shape == np.asarray(a).shape, k
+        assert np.array_equal(np.asarray(b), np.asarray(a)), k
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# GC: refcount-aware chunk reaping
+# ---------------------------------------------------------------------------
+
+def test_gc_reaps_only_dead_chunks(rng, tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          keep_last=1)
+    tree = _tree(rng)
+    m.save(1, tree)
+    man1 = m.commit(1)
+    h1 = manifest_chunk_hashes(man1)
+    tree2 = _mutate(tree, ["l00"])
+    m.save(2, tree2)
+    man2 = m.commit(2)       # commit() gc's: step 1 manifest retired
+    h2 = manifest_chunk_hashes(man2)
+    present = store.chunk_digests("shared", "ckpt")
+    assert present == h2                     # live chunks exactly
+    assert h1 - h2                           # something WAS reaped
+    assert chunk_refcounts([man2]) == {h: 1 for h in h2}
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree2)
+    m.close()
+
+
+def test_gc_never_reaps_chunks_of_uncommitted_save(rng, tmp_path):
+    """The file plane never touches uncommitted step dirs; the chunk plane
+    must match: chunks already written for a step whose manifest is not yet
+    committed survive a concurrent gc, and the commit then restores."""
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          keep_last=1)
+    tree = _tree(rng, n_leaves=2)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    m.save(2, tree2)
+    m.commit(2)
+    # a worker has saved step 3 (new chunks on disk) but NOT committed yet
+    tree3 = _mutate(tree2, ["l01"], elems=300)
+    w = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    w.save(3, tree3)
+    m.gc()                                   # interleaved gc
+    man3 = w.commit(3)
+    got, man = CheckpointManager(store, replicas=1).restore(tree)
+    assert man["step"] == man3["step"] == 3
+    _assert_trees_equal(got, tree3)
+    m.close()
+    w.close()
+
+
+def test_gc_race_property_save_gc_restore_peer_fetch(rng, tmp_path):
+    """Property-style sweep (satellite): interleave save -> gc -> restore ->
+    peer fetch over a delta chain with aggressive keep_last and assert, at
+    every point, that (a) no chunk referenced by a kept manifest is ever
+    reaped and (b) restored bytes are byte-identical to a full-shard restore
+    of the same state."""
+    for seed in range(4):
+        prng = np.random.default_rng(seed)
+        root = tmp_path / f"seed{seed}"
+
+        def store_for(node):
+            return TieredStore(root / "ck", seed=0,
+                               tier_roots=node_local_tier_roots(
+                                   root / "nodes" / node))
+
+        writer = CheckpointManager(store_for("writer"), replicas=1,
+                                   delta=True, chunk_bytes=CHUNK,
+                                   keep_last=2, rebase_every=3,
+                                   promote="eager", node="writer")
+        full_store = TieredStore(root / "full", seed=0)
+        full = CheckpointManager(full_store, replicas=1, keep_last=2)
+        tree = _tree(prng, n_leaves=3)
+        for step in range(1, 7):
+            touched = [f"l{i:02d}" for i in range(3)
+                       if prng.random() < 0.5] or ["l00"]
+            tree = _mutate(tree, touched, elems=int(prng.integers(1, 200)))
+            writer.save(step, tree)
+            man = writer.commit(step)        # gc interleaves here
+            full.save(step, tree)
+            full.commit(step)
+            # (a) every chunk referenced by ANY kept manifest survived gc
+            kept = [writer.read_manifest(s) for s in writer.steps()]
+            live = set(chunk_refcounts(kept))
+            present = writer.store.chunk_digests("shared", "ckpt")
+            assert live <= present, f"live chunk reaped at step {step}"
+            # (b) chunked restore == full-shard restore, byte for byte
+            got_d, _ = CheckpointManager(store_for("writer"),
+                                         replicas=1).restore(tree)
+            got_f, _ = CheckpointManager(full_store, replicas=1).restore(tree)
+            for k in tree:
+                assert (np.asarray(got_d[k]).tobytes()
+                        == np.asarray(got_f[k]).tobytes()), (seed, step, k)
+            # peer fetch from the writer's warm cache, every other step
+            if step % 2 == 0:
+                writer.wait_promotions()
+                cold = CheckpointManager(
+                    store_for(f"cold{step}"), replicas=1, node=f"cold{step}",
+                    peer_roots={"writer": root / "nodes" / "writer"})
+                got_p, man_p = cold.restore(tree)
+                assert man_p["step"] == man["step"]
+                for k in tree:
+                    assert (np.asarray(got_p[k]).tobytes()
+                            == np.asarray(got_f[k]).tobytes()), (seed, step, k)
+                cold.close()
+        writer.close()
+        full.close()
+
+
+# ---------------------------------------------------------------------------
+# stale-cache + peer delta fetch
+# ---------------------------------------------------------------------------
+
+def test_warm_but_stale_node_fetches_only_delta(rng, tmp_path):
+    """The tentpole's acceptance scenario: a node whose promoted cache is one
+    step behind restores the newer step reading ~delta bytes from the shared
+    tier and everything else from its own stale local cache."""
+    def store_for(node):
+        return TieredStore(tmp_path / "ck", seed=0,
+                           tier_roots=node_local_tier_roots(
+                               tmp_path / "nodes" / node))
+
+    tree = _tree(rng)
+    w = CheckpointManager(store_for("writer"), replicas=1, delta=True,
+                          chunk_bytes=CHUNK)
+    w.save(1, tree)
+    w.commit(1)
+    # nodeB warms at step 1
+    b = CheckpointManager(store_for("nodeB"), replicas=1,
+                          promote="on_restore", node="nodeB")
+    b.restore(tree)
+    b.wait_promotions()
+    b.close()
+    # frontier moves one small delta ahead
+    tree2 = _mutate(tree, ["l00"])
+    p = w.save(2, tree2)
+    w.commit(2)
+    w.close()
+    delta_bytes = p["delta"]["bytes_written"]
+    total_bytes = sum(a.nbytes for a in tree.values())
+    assert delta_bytes < 0.2 * total_bytes
+
+    b2 = CheckpointManager(store_for("nodeB"), replicas=1,
+                           promote="on_restore", node="nodeB")
+    got, man = b2.restore(tree)
+    st = b2.last_restore_stats
+    _assert_trees_equal(got, tree2)
+    assert man["step"] == 2 and st["mode"] == "chunked"
+    by_tier = st["bytes_by_tier"]
+    assert by_tier.get("shared", 0) <= delta_bytes
+    assert by_tier.get("local", 0) >= total_bytes - delta_bytes
+    b2.close()
+
+
+def test_stale_peer_serves_delta_chunks(rng, tmp_path):
+    """A cold node with NO local cache sources unchanged chunks from a
+    stale peer (cached step N) and only the delta from the shared tier when
+    restoring step N+1 — stale peers are useless to the shard fabric but
+    first-class chunk sources."""
+    def store_for(node):
+        return TieredStore(tmp_path / "ck", seed=0,
+                           tier_roots=node_local_tier_roots(
+                               tmp_path / "nodes" / node))
+
+    tree = _tree(rng)
+    w = CheckpointManager(store_for("writer"), replicas=1, delta=True,
+                          chunk_bytes=CHUNK, promote="eager", node="writer")
+    w.save(1, tree)
+    w.commit(1)
+    w.wait_promotions()          # writer's cache warm at step 1
+    w.close()
+    # a DIFFERENT manager (no promotion) commits step 2, so the writer's
+    # cache goes stale at step 1
+    tree2 = _mutate(tree, ["l00"])
+    w2 = CheckpointManager(store_for("writer2"), replicas=1, delta=True,
+                           chunk_bytes=CHUNK)
+    p = w2.save(2, tree2)
+    w2.commit(2)
+    w2.close()
+    delta_bytes = p["delta"]["bytes_written"]
+
+    cold = CheckpointManager(store_for("cold"), replicas=1, node="cold",
+                             peer_roots={"writer": tmp_path / "nodes" / "writer"})
+    got, man = cold.restore(tree)
+    st = cold.last_restore_stats
+    _assert_trees_equal(got, tree2)
+    assert man["step"] == 2 and st.get("peer")
+    by_tier = st["bytes_by_tier"]
+    assert by_tier.get("shared", 0) <= delta_bytes
+    assert by_tier.get("peer:writer", 0) > 0
+    cold.close()
+
+
+def test_stale_peer_sources_ordered_by_lag_and_bounded(tmp_path):
+    """_peer_sources buckets exact/stale in one marker sweep, orders stale
+    peers nearest-cached-step-first (largest expected chunk overlap), and
+    drops peers staler than STALE_PEER_MAX_LAG."""
+    from repro.checkpoint.manager import STALE_PEER_MAX_LAG
+
+    def write_marker(node, step):
+        p = (tmp_path / "nodes" / node / "local" / "node0" / "ckpt"
+             / "PROMOTED.json")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps({"step": step, "files": []}))
+
+    target = STALE_PEER_MAX_LAG + 20
+    write_marker("far", target - 4)
+    write_marker("near", target - 1)
+    write_marker("exact", target)
+    write_marker("ancient", target - STALE_PEER_MAX_LAG - 5)
+    m = CheckpointManager(
+        TieredStore(tmp_path / "ck", seed=0), replicas=1, node="me",
+        peer_roots={n: tmp_path / "nodes" / n
+                    for n in ("far", "near", "exact", "ancient")})
+    exact, stale = m._peer_sources(target)
+    assert exact == ["peer:exact"]
+    assert stale == ["peer:near", "peer:far"]    # nearest first, ancient out
+    m.close()
+
+
+def test_registry_near_peers_and_chunk_inventory(tmp_path):
+    reg = CacheRegistry(tmp_path / "reg")
+    reg.publish("n1", step=5, files=["ckpt/chunks/ab/abcd"],
+                local_root="/x", baseline_step=3, chunk_count=1)
+    reg.publish("n2", step=7, files=[], local_root="/y")
+    reg.publish("n3", step=4, files=[], local_root="/z")
+    e = reg.entries()["n1"]
+    assert e["baseline_step"] == 3 and e["chunk_count"] == 1
+    assert sorted(reg.warm_peers(5)) == ["n1"]
+    near = reg.near_peers(5)
+    assert list(near) == ["n3", "n2"]        # nearest cached step first
+    assert sorted(reg.near_peers(5, exclude=("n3",))) == ["n2"]
+    assert sorted(reg.near_peers(5, max_lag=1)) == ["n3"]
+
+
+def test_promoted_cache_validates_chunked_manifest(rng, tmp_path):
+    """validate_promoted_cache / cache_inventory understand chunk-based
+    manifests: warm after an eager delta promotion, stale after the next
+    commit."""
+    store = TieredStore(tmp_path / "ck", seed=0,
+                        tier_roots=node_local_tier_roots(tmp_path / "node"))
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          promote="eager", node="n0")
+    tree = _tree(rng, n_leaves=2)
+    man = None
+    m.save(1, tree)
+    man = m.commit(1)
+    m.wait_promotions()
+    inv = m.cache_inventory()
+    assert inv["valid"] and inv["step"] == 1
+    assert inv["files"] == len(manifest_payload_map(man, "ckpt"))
+    # a newer commit (elsewhere) makes the inventory stale, not broken
+    tree2 = _mutate(tree, ["l00"])
+    w2 = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), replicas=1,
+                           delta=True, chunk_bytes=CHUNK)
+    w2.save(2, tree2)
+    w2.commit(2)
+    w2.close()
+    inv2 = m.cache_inventory()
+    assert not inv2["valid"] and "stale" in inv2["reason"]
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# satellites: auto_workers env hardening, store close/fd-cache, bench pruning
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", ["not-a-number", "-3", "0", "2.5"])
+def test_auto_workers_invalid_env_falls_back_with_warning(
+        monkeypatch, caplog, bad):
+    monkeypatch.setenv(ENV_RESTORE_WORKERS, bad)
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.restore_engine"):
+        n = auto_workers(cap=4)
+    assert 1 <= n <= 4                       # auto sizing, never ValueError
+    assert any(ENV_RESTORE_WORKERS in r.message for r in caplog.records)
+
+
+def test_auto_workers_valid_env_still_wins(monkeypatch):
+    monkeypatch.setenv(ENV_RESTORE_WORKERS, "3")
+    assert auto_workers(cap=1) == 3
+
+
+def test_store_close_is_idempotent_and_shutdown_safe(rng, tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    store.put("local", "a/f.bin", b"x" * 64)
+    p = store.replica_paths("local", "a/f.bin")[0]
+    assert store._pread(p, 0, 4) == b"xxxx"
+    assert store._fds                        # descriptor cached
+    store.close()
+    assert not store._fds
+    store.close()                            # second close: no-op, no raise
+    # interpreter-teardown simulation: the close syscall itself is gone
+    store._pread(p, 0, 4)
+    with pytest.MonkeyPatch.context() as mp:
+        mp.setattr(TieredStore, "_OS_CLOSE",
+                   staticmethod(lambda fd: (_ for _ in ()).throw(TypeError())))
+        store.close()                        # swallowed, not raised
+    assert not store._fds
+    store.close()
+    del store                                # __del__ after close: silent
+
+
+def test_fd_cache_releases_entry_on_pread_exception(tmp_path, monkeypatch):
+    """The satellite contract: an exception INSIDE the positional read must
+    release the cached descriptor's refcount, or eviction/invalidation would
+    leak the fd forever."""
+    if not hasattr(os, "pread"):
+        pytest.skip("no os.pread on this platform")
+    store = TieredStore(tmp_path, seed=0)
+    store.put("local", "a/f.bin", b"y" * 128)
+    p = store.replica_paths("local", "a/f.bin")[0]
+    store._pread(p, 0, 8)                    # populate the cache
+
+    def boom(fd, n, off):
+        raise OSError("injected pread failure")
+
+    monkeypatch.setattr(os, "pread", boom)
+    with pytest.raises(OSError, match="injected"):
+        store._pread(p, 0, 8)
+    ent = store._fds[Path(p)]
+    assert ent.refs == 0                     # released on the exception path
+    monkeypatch.undo()
+    assert store._pread(p, 0, 8) == b"y" * 8   # cache still serviceable
+    store._fd_invalidate(Path(p))
+    assert Path(p) not in store._fds         # and still evictable
+    store.close()
+
+
+def test_bench_artifact_prunes_stale_keys(tmp_path):
+    if str(ROOT) not in sys.path:
+        sys.path.insert(0, str(ROOT))
+    from benchmarks import run as bench_run
+
+    art = tmp_path / "BENCH.json"
+    art.write_text(json.dumps({"delta_save": {}, "zombie_row": 1,
+                               "run_meta": {}}))
+    pruned = bench_run.prune_bench_ckpt_io(
+        {"delta_save", "run_meta"}, path=art)
+    assert pruned == ["zombie_row"]
+    assert sorted(json.loads(art.read_text())) == ["delta_save", "run_meta"]
+    # declared keys cover everything bench_delta merges
+    from benchmarks import bench_delta
+    assert set(bench_delta.BENCH_KEYS) == {"delta_save", "delta_peer_fetch"}
+
+
+# ---------------------------------------------------------------------------
+# engine-level: source dedup + ordered resolution
+# ---------------------------------------------------------------------------
+
+def test_restore_chunked_dedups_sources_and_chunk_refs(rng, tmp_path):
+    """Duplicate source tiers collapse; a chunk referenced twice (identical
+    leaves) is fetched once."""
+    base = rng.standard_normal(30_000).astype(np.float32)
+    tree = {"a": base, "b": base.copy()}
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    m.save(1, tree)
+    man = m.commit(1)
+    eng = ParallelRestorer(store)
+    named, st = eng.restore_chunked(["shared", "shared"], man["leaves"],
+                                    prefix="ckpt")
+    _assert_trees_equal(named, tree)
+    assert st.sources == ["shared"]          # dedup'd, order preserved
+    assert st.chunk_refs == 2 * st.chunks    # two leaves share every chunk
+    assert st.bytes_read == sum(a.nbytes for a in tree.values()) // 2
+    m.close()
