@@ -3,7 +3,7 @@
 ``WorkPool`` is the shared primitive: a small pool of daemon threads with a
 bounded in-flight count — ``submit`` blocks once the bound is hit, which is
 the backpressure knob for everything the checkpoint plane runs off the
-training thread.  Two users:
+training thread.  Three users:
 
 * ``AsyncWriter`` (save path): the paper's DMTCP checkpoint is synchronous —
   user threads quiesce for the whole image write (the CPU dips in its
@@ -15,6 +15,12 @@ training thread.  Two users:
   bytes into the node-local tier write-behind on a ``WorkPool`` so the
   restore returns as soon as the state is materialized — the copy into the
   container-image-cache-like tier never blocks the restart.
+* chunk hashing (delta save path): ``serialization.ChunkHashEngine`` fans
+  every leaf's blake2b/CRC chunk digests across a pool — both primitives
+  release the GIL on multi-KB buffers, so the hash pass scales with memory
+  bandwidth instead of single-core hash speed.  The pre-dump (``precommit``)
+  phase additionally runs whole hash+pre-write passes as single pool tasks,
+  overlapped with the next training step.
 
 ``wait()`` drains the queue — called before a requeue/exit so the last image
 is durable, and by the two-phase coordinator barrier before WRITTEN is sent.
@@ -42,6 +48,7 @@ class WorkPool:
                  name: str = "ckpt-pool"):
         self._max_inflight = max(1, max_inflight)
         workers = min(max(1, workers), self._max_inflight)
+        self.workers = workers          # resolved size, for bench run_meta
         self._q: queue.Queue = queue.Queue()   # _inflight gate does the bounding
         self._err: Optional[BaseException] = None
         self._lock = threading.Lock()

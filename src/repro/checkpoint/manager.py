@@ -202,6 +202,7 @@ class CheckpointManager:
                  chunk_bytes: Optional[int] = None,
                  keep_last: int = 3, prefix: str = "ckpt",
                  shard_format: int = 2, restore_workers: int = 0,
+                 fingerprint: bool = False, hash_workers: int = 0,
                  promote: str = "off", promote_tier: str = "local",
                  peer_roots: Optional[dict] = None,
                  node: Optional[str] = None, registry=None):
@@ -241,6 +242,21 @@ class CheckpointManager:
         # restore_workers: 0 = auto-sized pool, 1 = serial (legacy loop, kept
         # as the benchmark baseline), N = pool of N readers
         self.restore_workers = restore_workers
+        # fingerprint=True: delta saves stamp a 32-bit per-chunk fingerprint
+        # into the manifest and use the parent step's fingerprints as a
+        # dirty-chunk PRE-FILTER — fp-equal chunks skip blake2b entirely.
+        # Opt-in because a dirty chunk colliding on 32 bits (p ~ 2^-32 per
+        # chunk) would be silently treated as clean; the default path keeps
+        # the full-hash guarantee.  hash_workers sizes the parallel chunk
+        # hash engine (0 = auto / $REPRO_HASH_WORKERS, 1 = serial).
+        self.fingerprint = fingerprint
+        self.hash_workers = hash_workers
+        self._hash_engine: Optional[SER.ChunkHashEngine] = None
+        # pre-dump (precommit) state: hashed/pre-written snapshot of a step,
+        # produced on a background pool, consumed by the next _save_delta
+        self._predump: Optional[dict] = None
+        self._predump_pending = False
+        self._predumper: Optional[WorkPool] = None
         self.promote = promote
         self.promote_tier = promote_tier
         # peer fabric: scheduler-provided warm-peer hint ({name: local_root})
@@ -404,25 +420,185 @@ class CheckpointManager:
             return self._prev_manifest
         return self._prev_manifest
 
+    @property
+    def hash_engine(self) -> SER.ChunkHashEngine:
+        """Lazily built parallel chunk hash/CRC engine (a WorkPool is only
+        spun up on the first delta save that needs it — many short-lived
+        managers never do)."""
+        if self._hash_engine is None:
+            self._hash_engine = SER.ChunkHashEngine(workers=self.hash_workers)
+        return self._hash_engine
+
+    # -- pre-dump (overlapped snapshot) ---------------------------------
+    def precommit(self, step: int, tree,
+                  extra_meta: Optional[dict] = None) -> dict:
+        """CRIU-style pre-dump: snapshot now, hash/fingerprint/pre-write in
+        the background, so the NEXT ``save()`` only pays for what changed
+        since this call.
+
+        The device->host snapshot happens here (the only step-visible part);
+        chunking, fingerprinting, content hashing and the pre-write of
+        new-vs-parent chunks all run on the writer pool (async mode) or a
+        dedicated single-thread pool, overlapped with the following training
+        step(s).  ``save()`` consumes the pre-dump: chunks whose live
+        fingerprint equals the pre-dump fingerprint reuse the pre-computed
+        hash/CRC and the already-written chunk file; only chunks dirtied
+        AFTER the pre-dump are hashed and written inside the save stall.
+
+        Pre-written chunks that the eventual save no longer references are
+        orphans no manifest will ever name: gc() cannot reap them (it only
+        walks manifests), so the consuming save sweeps them — see
+        ``_save_delta``.  Returns ``{"step", "snapshot_s"}``.
+        """
+        if not self.delta:
+            raise ValueError("precommit requires delta mode")
+        t0 = time.time()
+        records = SER.tree_to_records(tree)        # snapshot (device_get)
+        snap_s = time.time() - t0
+        mine = self._my_leaves(records)
+        parent = self._parent_manifest()
+        parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+
+        def do_predump():
+            t1 = time.perf_counter()
+            fps = {name: SER.fingerprint_chunks(
+                       SER.as_byte_view(np.asarray(arr)), self.chunk_bytes)
+                   for _, name, arr in mine}
+            hashed, _ = self.hash_engine.chunk_records(
+                [(name, arr) for _, name, arr in mine], self.chunk_bytes,
+                fps=fps)
+            hash_s = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            written: set = set()
+            leaves = {}
+            for _, name, _arr in mine:
+                entries, views, leaf_crc = hashed[name]
+                leaves[name] = {"entries": entries, "crc32": leaf_crc}
+                for e, v in zip(entries, views):
+                    h = e["hash"]
+                    if h in parent_hashes or h in written:
+                        continue
+                    # force=True for the same gc-race reason as the save
+                    # path; the save re-checks existence before trusting a
+                    # pre-written chunk, so a reap between now and then is
+                    # repaired, not served
+                    self.store.put_chunk(self.tier, self.prefix, h, v,
+                                         replicas=self.replicas, force=True)
+                    written.add(h)
+            self._predump = {
+                "step": step, "chunk_bytes": self.chunk_bytes,
+                "leaves": leaves, "written": written,
+                "hash_s": hash_s, "write_s": time.perf_counter() - t1,
+            }
+
+        self._predump_pending = True
+        pool = self._writer
+        if pool is None:
+            if self._predumper is None:
+                # bound 2: one executing + one queued pre-dump; a third
+                # precommit back-pressures rather than pinning snapshots
+                self._predumper = WorkPool(max_inflight=2, workers=1,
+                                           name="ckpt-predump")
+            pool = self._predumper
+        pool.submit(do_predump)
+        return {"step": step, "snapshot_s": snap_s}
+
+    def _consume_predump(self) -> Optional[dict]:
+        """Claim the latest pre-dump for the save in progress (waiting out a
+        still-running background phase — training finishing early shrinks
+        the overlap win, never corrupts).  Chunk-size changes invalidate."""
+        if not self._predump_pending and self._predump is None:
+            return None
+        if self._predump_pending:
+            pool = self._writer if self._writer is not None else self._predumper
+            if pool is not None:
+                pool.wait()
+            self._predump_pending = False
+        pre, self._predump = self._predump, None
+        if pre is not None and pre.get("chunk_bytes") != self.chunk_bytes:
+            return None
+        return pre
+
     def _save_delta(self, step: int, records, snap_s: float,
                     extra_meta: Optional[dict]) -> dict:
-        """Chunk-plane save: every leaf is chunked/hashed/CRC'd in ONE pass,
-        then only chunks absent from the parent manifest are written to the
-        dedup store (``chunks/<hh>/<hash>``) — save cost is proportional to
-        the CHANGE RATE, not the model size.  A payload-free v3 index file
-        records the leaf -> chunk mapping next to the wpart."""
+        """Chunk-plane save: every leaf is chunked/hashed/CRC'd concurrently
+        (all chunks in flight across the hash engine's pool), then only
+        chunks absent from the parent manifest are written to the dedup
+        store (``chunks/<hh>/<hash>``) — save cost is proportional to the
+        CHANGE RATE, not the model size.  A payload-free v3 index file
+        records the leaf -> chunk mapping next to the wpart.
+
+        Two pre-filters can shrink the hash pass itself:
+
+        * a consumed pre-dump (``precommit``): chunks whose live fingerprint
+          matches the pre-dump's reuse its hash/CRC AND its already-written
+          chunk file — the stall pays only for bytes dirtied after the
+          pre-dump;
+        * ``fingerprint=True``: same comparison against the fingerprints
+          stamped into the PARENT manifest, with no pre-dump needed.
+
+        Per-phase wall times land in ``part["delta"]`` (``fp_s``/``hash_s``/
+        ``diff_s``/``write_s`` and the step-visible ``stall_s``) so the
+        bench measures, not infers."""
+        t_entry = time.perf_counter()
         mine = self._my_leaves(records)
         sdir = _step_dir(self.prefix, step)
         index_rel = f"{sdir}/shard_w{self.worker_id:05d}.chunks"
         parent = self._parent_manifest()
         parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        pre = self._consume_predump()
+        pre_leaves = (pre or {}).get("leaves") or {}
+        pre_written = (pre or {}).get("written") or set()
+        parent_leaves = {}
+        if self.fingerprint and parent is not None:
+            parent_leaves = {e["path"]: e for e in parent["leaves"]
+                             if "chunks" in e}
 
+        # fingerprint pre-filter: per-chunk fp of the LIVE bytes, compared
+        # positionally against the pre-dump state first, else the parent
+        # manifest.  fp-equal chunks skip blake2b (the engine still checks
+        # per-chunk nbytes, so a reshaped leaf can never alias).  The 32-bit
+        # fp never NAMES a chunk — blake2b does — it only decides which
+        # chunks need renaming.
+        t0 = time.perf_counter()
+        items = []
+        known: dict = {}
+        fps_by_name: dict = {}
+        for idx, name, arr in mine:
+            arr = np.asarray(arr)
+            items.append((name, arr))
+            ref_entries = None
+            if name in pre_leaves:
+                ref_entries = pre_leaves[name]["entries"]
+            elif name in parent_leaves:
+                ref_entries = parent_leaves[name]["chunks"]
+            if ref_entries is None and not self.fingerprint:
+                continue          # nothing to compare and nothing to stamp
+            fp = SER.fingerprint_chunks(SER.as_byte_view(arr),
+                                        self.chunk_bytes)
+            fps_by_name[name] = fp
+            if not ref_entries:
+                continue
+            kmap = {i: e for i, e in enumerate(ref_entries)
+                    if i < len(fp) and e.get("fp") is not None
+                    and int(fp[i]) == int(e["fp"])}
+            if kmap:
+                known[name] = kmap
+        fp_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        hashed, hstats = self.hash_engine.chunk_records(
+            items, self.chunk_bytes, known=known,
+            fps=fps_by_name if (self.fingerprint or fps_by_name) else None)
+        hash_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
         entries: list[dict] = []
         new_views: dict[str, object] = {}     # hash -> zero-copy byte view
         chunks_total = bytes_total = 0
         for idx, name, arr in mine:
             arr = np.asarray(arr)
-            chunks, views, leaf_crc = SER.chunk_leaf(arr, self.chunk_bytes)
+            chunks, views, leaf_crc = hashed[name]
             nbytes = sum(c["nbytes"] for c in chunks)
             fresh = 0
             for c, v in zip(chunks, views):
@@ -443,6 +619,7 @@ class CheckpointManager:
                 "nbytes": nbytes, "chunks": chunks,
                 "reused": not fresh,
             })
+        diff_s = time.perf_counter() - t0
         part = {
             "worker_id": self.worker_id,
             "num_workers": self.num_workers,
@@ -457,6 +634,11 @@ class CheckpointManager:
                 "chunks_new": len(new_views),
                 "bytes_new": sum(v.nbytes for v in new_views.values()),
                 "parent_step": parent["step"] if parent else None,
+                "chunks_hashed": hstats["chunks_hashed"],
+                "chunks_fp_clean": hstats["chunks_known"],
+                "hash_workers": hstats["hash_workers"],
+                "predump_step": pre["step"] if pre else None,
+                "fp_s": fp_s, "hash_s": hash_s, "diff_s": diff_s,
             },
         }
 
@@ -466,15 +648,34 @@ class CheckpointManager:
             # if a file with its hash exists — bare existence could be a
             # doomed old step's copy that a concurrent gc is about to reap
             # (the rewrite is idempotent; unchanged-since-parent chunks never
-            # reach this loop, so the dedup win is untouched).
-            written_b = written_c = 0
+            # reach this loop, so the dedup win is untouched).  Chunks the
+            # pre-dump already wrote are skipped after an existence
+            # re-check — a pre-dump chunk reaped since is rewritten (same
+            # residual TOCTOU family the force=True note documents).
+            t1 = time.perf_counter()
+            written_b = written_c = predumped = 0
             for h, v in new_views.items():
+                if h in pre_written and self.store.exists(
+                        self.tier, chunk_rel(self.prefix, h)):
+                    predumped += 1
+                    continue
                 if self.store.put_chunk(self.tier, self.prefix, h, v,
                                         replicas=self.replicas, force=True):
                     written_c += 1
                     written_b += v.nbytes
             part["delta"]["chunks_written"] = written_c
             part["delta"]["bytes_written"] = written_b
+            part["delta"]["chunks_predumped"] = predumped
+            if pre_written and self.num_workers == 1:
+                # pre-dumped chunks the live state no longer contains are
+                # referenced by NO manifest ever — gc() walks manifests, so
+                # they would leak forever.  Single-worker only: with
+                # concurrent workers a same-content chunk could legitimately
+                # belong to another worker's in-flight save.
+                final = {c["hash"] for e in entries for c in e["chunks"]}
+                for h in sorted(pre_written - final - parent_hashes):
+                    self.store.delete_file(self.tier,
+                                           chunk_rel(self.prefix, h))
             # the v3 index file is the format's on-disk artifact for tooling
             # and disaster recovery (a manifest can be rebuilt from index
             # files alone); the restore path reads the manifest, so one
@@ -487,16 +688,28 @@ class CheckpointManager:
             self.store.put(
                 self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
                 json.dumps(part).encode(), replicas=self.replicas)
+            part["delta"]["write_s"] = time.perf_counter() - t1
 
         if self._writer is not None:
             self._writer.submit(do_write)
         else:
             do_write()
+        # the step-visible pause attributable to this save call: snapshot +
+        # everything that ran synchronously here (in async mode the writes
+        # are off-thread, so stall covers fp/hash/diff only)
+        part["delta"]["stall_s"] = snap_s + (time.perf_counter() - t_entry)
         return part
 
     def wait_writes(self, timeout: Optional[float] = None) -> None:
         if self._writer is not None:
             self._writer.wait(timeout)
+
+    def wait_predump(self, timeout: Optional[float] = None) -> None:
+        """Drain a pending background pre-dump without consuming it (tests/
+        shutdown; ``save()`` itself waits via ``_consume_predump``)."""
+        pool = self._writer if self._writer is not None else self._predumper
+        if self._predump_pending and pool is not None:
+            pool.wait(timeout)
 
     # ------------------------------------------------------------------
     def commit(self, step: int, *, num_workers: Optional[int] = None,
@@ -1125,5 +1338,13 @@ class CheckpointManager:
             if self._writer is not None:
                 self._writer.close()
         finally:
-            if self._promoter is not None:
-                self._promoter.close()
+            try:
+                if self._predumper is not None:
+                    self._predumper.close()
+            finally:
+                try:
+                    if self._hash_engine is not None:
+                        self._hash_engine.close()
+                finally:
+                    if self._promoter is not None:
+                        self._promoter.close()

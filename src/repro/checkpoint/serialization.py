@@ -40,9 +40,12 @@ another replica on mismatch).  Pure numpy/zlib; no pickle for tensor data.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import io
 import json
+import logging
+import os
 import struct
 import zlib
 from pathlib import Path
@@ -52,6 +55,8 @@ import jax
 import numpy as np
 
 from repro.utils.tree import flatten_with_names, unflatten_like
+
+log = logging.getLogger(__name__)
 
 MAGIC = b"RPRCKPT1"      # v1: header-first
 MAGIC2 = b"RPRCKPT2"     # v2: footer-last, absolute offsets, streamable
@@ -170,14 +175,70 @@ def chunk_hash(view) -> str:
     return hashlib.blake2b(view, digest_size=16).hexdigest()
 
 
+# -- CRC32 combining (GF(2) matrix shift, zlib's crc32_combine) ------------
+#
+# crc32(A+B) == apply(OP(len(B)), crc32(A)) ^ crc32(B) where OP(n) is the
+# linear operator advancing a CRC register past n zero bytes.  zlib composes
+# OP from log2(n) squarings PER CALL (~20k Python ops here) — slower than
+# just re-CRCing a small chunk.  The delta plane folds per-chunk CRCs into a
+# leaf CRC over a handful of DISTINCT lengths (chunk_bytes plus one tail per
+# leaf), so the composed operator is cached per length and each fold costs
+# one 32x32 GF(2) apply (~32 int ops), making the leaf CRC free of any
+# second byte traversal.
+
+_CRC32_POLY = 0xEDB88320
+
+
+def _gf2_times_vec(mat: tuple, vec: int) -> int:
+    out = 0
+    i = 0
+    while vec:
+        if vec & 1:
+            out ^= mat[i]
+        vec >>= 1
+        i += 1
+    return out
+
+
+def _gf2_square(mat: tuple) -> tuple:
+    return tuple(_gf2_times_vec(mat, mat[n]) for n in range(32))
+
+
+@functools.lru_cache(maxsize=1024)
+def _crc32_shift_operator(nbytes: int) -> tuple:
+    """32x32 GF(2) matrix (columns as ints) advancing a CRC32 register past
+    ``nbytes`` zero bytes.  Cached: chunked leaves fold over very few
+    distinct lengths."""
+    odd = (_CRC32_POLY,) + tuple(1 << (n - 1) for n in range(1, 32))  # 1 bit
+    odd = _gf2_square(_gf2_square(odd))                               # 4 bits
+    op = tuple(1 << n for n in range(32))                             # identity
+    n = nbytes
+    while n:
+        odd = _gf2_square(odd)            # 8, 16, 32, ... zero bits
+        if n & 1:
+            op = tuple(_gf2_times_vec(odd, op[i]) for i in range(32))
+        n >>= 1
+    return op
+
+
+def crc32_combine(crc1: int, crc2: int, len2: int) -> int:
+    """``crc32(A+B)`` from ``crc32(A)``, ``crc32(B)`` and ``len(B)`` without
+    touching any bytes (zlib's crc32_combine, with the shift operator cached
+    per length)."""
+    if len2 <= 0:
+        return crc1
+    return _gf2_times_vec(_crc32_shift_operator(len2), crc1) ^ crc2
+
+
 def chunk_leaf(arr: np.ndarray, chunk_bytes: int = DELTA_CHUNK_BYTES):
     """Split one leaf into fixed-size content-addressed chunks.
 
     Returns ``(entries, views, leaf_crc32)``: per-chunk dicts
     ``{"hash","nbytes","crc32"}``, the matching zero-copy ``memoryview``s
     (aligned with ``entries``; valid while ``arr`` lives), and the whole-leaf
-    CRC32 folded across the same pass — so a delta save hashes, CRCs and
-    diffs every leaf in ONE traversal of its bytes.
+    CRC32 folded from the per-chunk CRCs via ``crc32_combine`` — so a delta
+    save hashes, CRCs and diffs every leaf in ONE traversal of its bytes and
+    the leaf CRC costs zero additional byte passes.
     """
     view = as_byte_view(np.asarray(arr))
     entries, views = [], []
@@ -185,11 +246,199 @@ def chunk_leaf(arr: np.ndarray, chunk_bytes: int = DELTA_CHUNK_BYTES):
     for start in range(0, view.nbytes, chunk_bytes):
         part = view[start:start + chunk_bytes]
         crc = zlib.crc32(part)
-        leaf_crc = zlib.crc32(part, leaf_crc)
+        leaf_crc = crc32_combine(leaf_crc, crc, part.nbytes)
         entries.append({"hash": chunk_hash(part), "nbytes": part.nbytes,
                         "crc32": crc})
         views.append(part)
     return entries, views, leaf_crc
+
+
+# -- per-chunk fingerprints (the dirty-chunk pre-filter) -------------------
+#
+# A 32-bit FNV-style mix per chunk, bit-identical across three impls: this
+# vectorized numpy path (host bytes), kernels/ref.py::chunk_fingerprints
+# (jnp oracle) and kernels/checksum.py::chunk_fingerprints_pallas (on-device,
+# HBM bandwidth).  The fingerprint is a cheap PRE-FILTER in the CRIU
+# soft-dirty sense: a chunk whose fingerprint matches the parent step's is
+# treated as clean and skips blake2b; chunks it flags dirty are still named
+# by their full content hash.  Correctness therefore never depends on the 32
+# bits — a colliding dirty chunk (p ~ 2^-32 per chunk) is silently treated
+# as clean, which is why fingerprint filtering is opt-in on the manager.
+
+FP_PRIME = 16777619          # matches kernels PRIME (FNV-1 32-bit prime)
+
+
+def fingerprint_chunks(data, chunk_bytes: int = DELTA_CHUNK_BYTES) -> np.ndarray:
+    """uint32 fingerprint per fixed-size chunk of ``data`` (bytes-like or a
+    byte view); the tail chunk is zero-padded so the value agrees with the
+    device kernels on padded word streams.  Index mixing is chunk-LOCAL so a
+    chunk's fingerprint is position-independent within the leaf."""
+    if chunk_bytes < 4 or chunk_bytes % 4:
+        raise ValueError(f"chunk_bytes must be a multiple of 4, got {chunk_bytes}")
+    buf = np.frombuffer(data, dtype=np.uint8)
+    n = buf.nbytes
+    if n == 0:
+        return np.zeros(0, np.uint32)
+    nchunks = -(-n // chunk_bytes)
+    if nchunks * chunk_bytes != n:
+        padded = np.zeros(nchunks * chunk_bytes, np.uint8)
+        padded[:n] = buf
+        buf = padded
+    words = buf.view("<u4").reshape(nchunks, chunk_bytes // 4)
+    idx = np.arange(chunk_bytes // 4, dtype=np.uint32)
+    mixed = (words ^ (idx * np.uint32(FP_PRIME))) * (idx | np.uint32(1))
+    return np.bitwise_xor.reduce(mixed, axis=1) + mixed.sum(
+        axis=1, dtype=np.uint32)
+
+
+# -- parallel chunk hash/CRC engine ----------------------------------------
+
+ENV_HASH_WORKERS = "REPRO_HASH_WORKERS"
+
+# below this size the WorkPool handoff costs more than the digest itself
+# (and neither blake2b nor crc32 releases the GIL for tiny buffers), so
+# sub-threshold chunks are digested inline on the producer thread
+INLINE_HASH_BYTES = 1 << 15
+
+
+def auto_hash_workers(cap: Optional[int] = None) -> int:
+    """Hash-engine pool sizing, mirroring restore_engine.auto_workers:
+    ``REPRO_HASH_WORKERS`` wins outright when set to a positive integer;
+    otherwise the CPU count (min 2, optionally capped).  A mangled override
+    degrades to auto sizing with a logged warning — an operator typo must
+    never kill a save."""
+    env = os.environ.get(ENV_HASH_WORKERS, "").strip()
+    if env:
+        try:
+            n = int(env)
+        except ValueError:
+            n = None
+        if n is not None and n >= 1:
+            return n
+        log.warning(
+            "ignoring invalid %s=%r (want a positive integer); "
+            "falling back to auto worker sizing", ENV_HASH_WORKERS, env)
+    n = max(2, os.cpu_count() or 2)
+    if cap:
+        n = min(n, max(1, cap))
+    return n
+
+
+class ChunkHashEngine:
+    """Multi-threaded chunk hash/CRC engine behind the ``chunk_leaf``
+    contract.
+
+    blake2b releases the GIL for updates past ~2 KB and zlib.crc32 past
+    ~5 KB, so digesting many chunks on a small ``WorkPool`` (the same
+    primitive the async writer and the promotion tee run on) scales with
+    memory bandwidth instead of single-core hash speed.  Results are written
+    into per-chunk slots, so entry order, hashes, per-chunk CRCs and the
+    folded leaf CRC are byte-identical to the serial ``chunk_leaf`` path.
+
+    The pool is created lazily on first use and only when ``workers > 1`` —
+    a serial engine costs nothing beyond the function calls.
+    """
+
+    def __init__(self, workers: int = 0):
+        self.workers = int(workers) if workers and int(workers) >= 1 \
+            else auto_hash_workers()
+        self._pool = None
+
+    def _ensure_pool(self):
+        if self.workers <= 1:
+            return None
+        if self._pool is None:
+            from repro.checkpoint.async_writer import WorkPool
+            self._pool = WorkPool(max_inflight=4 * self.workers,
+                                  workers=self.workers, name="ckpt-hash")
+        return self._pool
+
+    @staticmethod
+    def _digest(part) -> tuple[str, int]:
+        return chunk_hash(part), zlib.crc32(part)
+
+    def chunk_leaf(self, arr: np.ndarray,
+                   chunk_bytes: int = DELTA_CHUNK_BYTES):
+        """Parallel drop-in for module-level ``chunk_leaf`` — identical
+        ``(entries, views, leaf_crc32)``."""
+        out, _ = self.chunk_records([("", np.asarray(arr))], chunk_bytes)
+        return out[""]
+
+    def chunk_records(self, items, chunk_bytes: int = DELTA_CHUNK_BYTES, *,
+                      known: Optional[dict] = None,
+                      fps: Optional[dict] = None):
+        """Hash/CRC every chunk of every leaf with ALL chunks in flight at
+        once (one ``wait()`` at the end — no per-leaf barrier).
+
+        ``items``: [(name, np.ndarray)].  ``known`` optionally maps
+        ``name -> {chunk_index: entry}`` of already-trusted entries (the
+        fingerprint pre-filter / pre-dump state); a known entry is reused
+        verbatim — no blake2b, no crc — after its ``nbytes`` is checked
+        against the live chunk layout.  ``fps`` optionally maps ``name`` to
+        a per-chunk uint32 array stamped into the entries as ``"fp"``.
+
+        Returns ``({name: (entries, views, leaf_crc)}, stats)`` with stats
+        counting ``chunks_hashed`` vs ``chunks_known``.
+        """
+        known = known or {}
+        fps = fps or {}
+        plans = []
+        for name, arr in items:
+            view = as_byte_view(np.asarray(arr))
+            parts = [view[s:s + chunk_bytes]
+                     for s in range(0, view.nbytes, chunk_bytes)]
+            slots: list = [None] * len(parts)
+            kmap = known.get(name) or {}
+            todo = []
+            for i, part in enumerate(parts):
+                e = kmap.get(i)
+                if e is not None and e.get("nbytes") == part.nbytes:
+                    slots[i] = (e["hash"], e["crc32"])
+                else:
+                    todo.append(i)
+            plans.append((name, parts, slots, todo))
+
+        pool = self._ensure_pool()
+        if pool is None:
+            for _, parts, slots, todo in plans:
+                for i in todo:
+                    slots[i] = self._digest(parts[i])
+        else:
+            # distinct list indices per task: no lock needed on the slots
+            def task(slots, i, part):
+                slots[i] = self._digest(part)
+            for _, parts, slots, todo in plans:
+                for i in todo:
+                    if parts[i].nbytes < INLINE_HASH_BYTES:
+                        slots[i] = self._digest(parts[i])
+                    else:
+                        pool.submit(functools.partial(task, slots, i,
+                                                      parts[i]))
+            pool.wait()
+
+        out = {}
+        hashed = reused = 0
+        for name, parts, slots, todo in plans:
+            fp = fps.get(name)
+            entries = []
+            leaf_crc = 0
+            for i, (part, (h, crc)) in enumerate(zip(parts, slots)):
+                e = {"hash": h, "nbytes": part.nbytes, "crc32": crc}
+                if fp is not None and i < len(fp):
+                    e["fp"] = int(fp[i])
+                entries.append(e)
+                leaf_crc = crc32_combine(leaf_crc, crc, part.nbytes)
+            hashed += len(todo)
+            reused += len(parts) - len(todo)
+            out[name] = (entries, parts, leaf_crc)
+        stats = {"chunks_hashed": hashed, "chunks_known": reused,
+                 "hash_workers": self.workers if pool is not None else 1}
+        return out, stats
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool = None
 
 
 def write_chunk_index(fp: BinaryIO, tensors: list[dict],

@@ -35,10 +35,18 @@ class CRManager:
                  walltime: Optional[WalltimeTracker] = None,
                  requeue_file: Optional[RequeueFile] = None,
                  interval_steps: Optional[int] = None,
+                 predump: bool = False, predump_lead: int = 1,
                  cfg=None, rules=None, node: Optional[str] = None,
                  peers: Optional[dict] = None,
                  log: Callable[[str], None] = print):
         self.ckpt = ckpt
+        # predump=True (delta mode only): ``predump_lead`` steps before each
+        # interval checkpoint, snapshot + hand the hash/fingerprint/pre-write
+        # work to the manager's background pool (CheckpointManager.precommit)
+        # so the interval save pays only for bytes dirtied in the last
+        # ``predump_lead`` steps — CRIU's pre-dump, at the training loop level
+        self.predump = predump
+        self.predump_lead = predump_lead
         # which cluster node this attempt runs on — recorded into the requeue
         # file so the scheduler can round-trip the placement hint
         self.node = node if node is not None else detect_node()
@@ -135,6 +143,14 @@ class CRManager:
             self.checkpoint_now(step, state_fn, reason="interval",
                                 extra_meta=extra_meta)
             return "checkpointed"
+        if (self.predump and self.interval_steps
+                and getattr(self.ckpt, "delta", False)):
+            from repro.train.step import predump_boundary
+            if predump_boundary(step, self.interval_steps, self.predump_lead):
+                host = fetch_tree(state_fn())   # quiesce: device -> host only
+                info = self.ckpt.precommit(step, host)
+                self.events.append({"step": step, "reason": "predump",
+                                    **info})
         return "continue"
 
     # ------------------------------------------------------------------

@@ -21,6 +21,15 @@ from jax.experimental.pallas import tpu as pltpu
 PRIME = 16777619
 
 
+def require_pow2(value: int, name: str = "block") -> None:
+    """Both kernels fold their XOR reduction with a reshape-halving tree, so
+    the tile length must be a positive power of two — anything else would
+    silently drop words.  Raised eagerly (host-side), mirrored by
+    kernels/ops.py so every impl fails the same way."""
+    if value < 1 or value & (value - 1):
+        raise ValueError(f"{name} must be a positive power of two, got {value}")
+
+
 def _checksum_kernel(w_ref, o_ref, xacc_ref, sacc_ref, *, nb, block):
     bi = pl.program_id(0)
 
@@ -52,7 +61,14 @@ def _checksum_kernel(w_ref, o_ref, xacc_ref, sacc_ref, *, nb, block):
 def checksum_pallas(words: jax.Array, *, block: int = 2048,
                     interpret: bool = False) -> jax.Array:
     """words: (N,) uint32 -> uint32 digest.  N padded to a power-of-two block."""
+    require_pow2(block)
     n = words.shape[0]
+    if n == 0:
+        # the ref oracle's empty digest: XOR and SUM over nothing are both 0.
+        # Without this guard the block math below degenerates through
+        # (-1).bit_length() == 0 into a zero-step grid with an uninitialized
+        # SMEM output.
+        return jnp.uint32(0)
     block = min(block, max(8, 1 << (n - 1).bit_length()))
     pad = (-n) % block
     if pad:
@@ -73,3 +89,52 @@ def checksum_pallas(words: jax.Array, *, block: int = 2048,
         scratch_shapes=[pltpu.SMEM((1,), jnp.uint32), pltpu.SMEM((1,), jnp.uint32)],
         interpret=interpret,
     )(words)[0]
+
+
+def _chunk_fp_kernel(w_ref, o_ref, *, chunk_words):
+    # one grid step = one chunk; index mixing is chunk-LOCAL so the value
+    # matches serialization.fingerprint_chunks / ref.chunk_fingerprints on
+    # the same word stream whatever the chunk's position in the leaf
+    w = w_ref[...]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (chunk_words,), 0).astype(jnp.uint32)
+    mixed = (w ^ (idx * jnp.uint32(PRIME))) * (idx | jnp.uint32(1))
+    x = mixed
+    n = chunk_words
+    while n > 1:
+        x = x[: n // 2] ^ x[n // 2 :]
+        n //= 2
+    o_ref[0] = x[0] + jnp.sum(mixed, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "interpret"))
+def chunk_fingerprints_pallas(words: jax.Array, *, chunk_words: int,
+                              interpret: bool = False) -> jax.Array:
+    """Per-chunk fingerprints of a uint32 word stream, on device.
+
+    words: (N,) uint32 -> (ceil(N / chunk_words),) uint32, one digest per
+    fixed-size chunk (the delta plane's dirty-chunk pre-filter: comparing
+    these against the parent step's marks which chunks even need a content
+    hash, at HBM bandwidth instead of host hash speed).  A ragged tail is
+    zero-padded — same convention as every other impl, so the three agree
+    bit-for-bit.  Same tiling idiom as ``checksum_pallas``: a 1-d grid over
+    blocks with the per-chunk digest landing in SMEM; no scratch, since
+    chunks don't combine across grid steps.
+    """
+    require_pow2(chunk_words, name="chunk_words")
+    n = words.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    pad = (-n) % chunk_words
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    nc = words.shape[0] // chunk_words
+    kernel = functools.partial(_chunk_fp_kernel, chunk_words=chunk_words)
+    return pl.pallas_call(
+        kernel,
+        grid=(nc,),
+        in_specs=[pl.BlockSpec((chunk_words,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((nc,), jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -110,12 +110,39 @@ def wkv6(r, k, v, w, u, *, impl="auto", init_state=None, return_state=False,
 def checksum(words: jax.Array, *, impl="auto", block: int = 2048) -> jax.Array:
     """Digest of a uint32 word stream; input zero-padded to a block multiple so
     every impl (ref oracle, pallas, pallas_interpret) agrees bit-for-bit."""
+    from repro.kernels import checksum as ck
+
+    # mirror the kernel's guards here so the ref impl rejects / short-circuits
+    # exactly like the pallas one (empty input: XOR/SUM over nothing is 0)
+    ck.require_pow2(block)
+    if words.shape[0] == 0:
+        return jnp.uint32(0)
     pad = (-words.shape[0]) % block
     if pad:
         words = jnp.pad(words, (0, pad))
     if impl in ("pallas", "pallas_interpret"):
-        from repro.kernels import checksum as ck
-
         return ck.checksum_pallas(words, block=block,
                                   interpret=(impl == "pallas_interpret"))
     return ref.checksum(words)
+
+
+def chunk_fingerprints(words: jax.Array, *, chunk_words: int,
+                       impl="auto") -> jax.Array:
+    """Per-chunk uint32 fingerprints of a uint32 word stream — the delta
+    plane's dirty-chunk pre-filter (one digest per fixed-size chunk, index
+    mixing chunk-local).  Input is zero-padded to a chunk multiple so every
+    impl (ref oracle, pallas, pallas_interpret, and the host-side
+    serialization.fingerprint_chunks) agrees bit-for-bit."""
+    from repro.kernels import checksum as ck
+
+    ck.require_pow2(chunk_words, name="chunk_words")
+    if words.shape[0] == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    pad = (-words.shape[0]) % chunk_words
+    if pad:
+        words = jnp.pad(words, (0, pad))
+    if impl in ("pallas", "pallas_interpret"):
+        return ck.chunk_fingerprints_pallas(
+            words, chunk_words=chunk_words,
+            interpret=(impl == "pallas_interpret"))
+    return ref.chunk_fingerprints(words, chunk_words)

@@ -144,3 +144,18 @@ def checksum(words: jax.Array) -> jax.Array:
     idx = jnp.arange(words.shape[0], dtype=jnp.uint32)
     mixed = (words.astype(jnp.uint32) ^ (idx * PRIME)) * (idx | jnp.uint32(1))
     return jnp.bitwise_xor.reduce(mixed) + jnp.sum(mixed, dtype=jnp.uint32)
+
+
+def chunk_fingerprints(words: jax.Array, chunk_words: int) -> jax.Array:
+    """Per-chunk digests: (N,) uint32 with N a multiple of ``chunk_words`` ->
+    (N // chunk_words,) uint32.  Same FNV-style mix as ``checksum`` but with
+    the index CHUNK-LOCAL, so each chunk's value is independent of its
+    position — the property the delta plane's dirty-chunk pre-filter needs.
+    Oracle for checksum.chunk_fingerprints_pallas and the numpy
+    serialization.fingerprint_chunks path (all three bit-identical)."""
+    PRIME = jnp.uint32(16777619)
+    w = words.astype(jnp.uint32).reshape(-1, chunk_words)
+    idx = jnp.arange(chunk_words, dtype=jnp.uint32)[None, :]
+    mixed = (w ^ (idx * PRIME)) * (idx | jnp.uint32(1))
+    return jnp.bitwise_xor.reduce(mixed, axis=1) + jnp.sum(
+        mixed, axis=1, dtype=jnp.uint32)

@@ -88,6 +88,24 @@ def build_argparser():
                          "record's peer_roots)")
     ap.add_argument("--restore-workers", type=int, default=0,
                     help="parallel restore read pool size (0=auto, 1=serial)")
+    ap.add_argument("--hash-workers", type=int, default=0,
+                    help="parallel chunk hash/CRC pool size for delta saves "
+                         "(0=auto / $REPRO_HASH_WORKERS, 1=serial)")
+    ap.add_argument("--ckpt-fingerprint", action="store_true",
+                    help="delta saves stamp per-chunk 32-bit fingerprints "
+                         "and use the parent step's as a dirty-chunk "
+                         "pre-filter: fingerprint-equal chunks skip blake2b "
+                         "(opt-in: a dirty chunk colliding on 32 bits would "
+                         "be treated as clean)")
+    ap.add_argument("--ckpt-predump", action="store_true",
+                    help="CRIU-style pre-dump: before each interval "
+                         "checkpoint, snapshot + hash + pre-write chunks in "
+                         "the background so the save stall covers only "
+                         "bytes dirtied in the last --ckpt-predump-lead "
+                         "steps (requires --ckpt-delta)")
+    ap.add_argument("--ckpt-predump-lead", type=int, default=1,
+                    help="how many steps before the interval boundary the "
+                         "pre-dump fires")
     ap.add_argument("--interval-steps", type=int, default=0)
     ap.add_argument("--walltime", type=float, default=0.0)
     ap.add_argument("--margin", type=float, default=5.0)
@@ -104,6 +122,8 @@ def main(argv=None) -> int:
     args = build_argparser().parse_args(argv)
     if args.ckpt_delta and args.ckpt_incremental:
         sys.exit("--ckpt-delta and --ckpt-incremental are mutually exclusive")
+    if (args.ckpt_predump or args.ckpt_fingerprint) and not args.ckpt_delta:
+        sys.exit("--ckpt-predump/--ckpt-fingerprint require --ckpt-delta")
     # trap preemption signals from the very start: a USR1 during jit compile /
     # restore must checkpoint-and-requeue, not kill the process (default USR1
     # action is terminate) — the paper's startup-time lesson (Fig. 2) applies
@@ -145,6 +165,7 @@ def main(argv=None) -> int:
         incremental=args.ckpt_incremental,
         delta=args.ckpt_delta, rebase_every=args.ckpt_rebase_every,
         restore_workers=args.restore_workers,
+        fingerprint=args.ckpt_fingerprint, hash_workers=args.hash_workers,
         promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier,
         peer_roots=peers, node=node, registry=registry)
 
@@ -165,6 +186,8 @@ def main(argv=None) -> int:
         crm = CRManager(ckpt, client=client, signal_trap=trap, walltime=walltime,
                         requeue_file=requeue_file,
                         interval_steps=args.interval_steps or None,
+                        predump=args.ckpt_predump,
+                        predump_lead=args.ckpt_predump_lead,
                         cfg=cfg, rules=rules, node=node,
                         peers=peers or None)
 

@@ -27,6 +27,22 @@ def state_logical_axes(cfg: ModelConfig):
     return {"params": pax, "opt": {"m": pax, "v": pax}, "step": ()}
 
 
+def predump_boundary(step: int, interval: int, lead: int = 1) -> bool:
+    """True when ``step`` is where the pre-dump (``CheckpointManager.
+    precommit``) for the next interval checkpoint should fire: ``lead``
+    steps before each interval boundary, so the background hash/pre-write
+    overlaps the remaining training steps and the save at the boundary pays
+    only for what changed since.  ``lead >= interval`` would pre-dump a
+    state staler than the previous checkpoint — clamped to ``interval - 1``.
+    """
+    if interval <= 0 or step < 0:
+        return False
+    lead = max(1, min(lead, interval - 1)) if interval > 1 else 0
+    if lead == 0:
+        return False            # interval=1: every step saves; nothing to overlap
+    return (step + lead) % interval == 0
+
+
 def abstract_train_state(cfg: ModelConfig, oc: adamw.OptConfig):
     p = M.abstract_params(cfg)
     mdt = jnp.dtype(oc.moment_dtype)

@@ -617,7 +617,8 @@ def test_bench_artifact_prunes_stale_keys(tmp_path):
     assert sorted(json.loads(art.read_text())) == ["delta_save", "run_meta"]
     # declared keys cover everything bench_delta merges
     from benchmarks import bench_delta
-    assert set(bench_delta.BENCH_KEYS) == {"delta_save", "delta_peer_fetch"}
+    assert set(bench_delta.BENCH_KEYS) == {"delta_save", "delta_save_overlap",
+                                           "delta_peer_fetch"}
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,304 @@
+"""Parallel chunk hash/CRC engine, CRC32 combining, fingerprint pre-filter
+and the pre-dump (precommit) save path.
+
+The load-bearing contract: whatever the engine parallelizes, reuses or
+pre-computes, the produced (entries, views, leaf_crc) — and therefore the
+bytes a restore returns — are byte-identical to the serial ``chunk_leaf``
+path with no shortcuts."""
+import logging
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.store import TieredStore, chunk_rel
+
+CHUNK = 1 << 16
+
+
+def _tree(rng, n_leaves=4, elems=70_000):
+    return {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _mutate(tree, names, elems=100):
+    out = dict(tree)
+    for n in names:
+        a = out[n].copy()
+        a[:elems] += 1.0
+        out[n] = a
+    return out
+
+
+def _assert_trees_equal(got, want):
+    for k, a in want.items():
+        assert np.array_equal(np.asarray(got[k]), np.asarray(a)), k
+
+
+# ---------------------------------------------------------------------------
+# crc32_combine
+# ---------------------------------------------------------------------------
+
+def test_crc32_combine_matches_zlib_on_concatenation(rng):
+    data = rng.integers(0, 256, size=100_000, dtype=np.uint8).tobytes()
+    for split in (0, 1, 17, 4096, 65_536, len(data) - 1, len(data)):
+        a, b = data[:split], data[split:]
+        got = SER.crc32_combine(zlib.crc32(a), zlib.crc32(b), len(b))
+        assert got == zlib.crc32(data), split
+
+
+def test_crc32_combine_multi_piece_fold(rng):
+    pieces = [rng.integers(0, 256, size=n, dtype=np.uint8).tobytes()
+              for n in (1, 7, 333, 65_536, 70_001, 0)]
+    crc = 0
+    for p in pieces:
+        crc = SER.crc32_combine(crc, zlib.crc32(p), len(p))
+    assert crc == zlib.crc32(b"".join(pieces))
+
+
+def test_crc32_combine_zero_length_is_identity():
+    assert SER.crc32_combine(0xDEADBEEF, 0x123, 0) == 0xDEADBEEF
+
+
+# ---------------------------------------------------------------------------
+# parallel engine == serial chunk_leaf, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbytes", [0, 1, CHUNK - 1, CHUNK, CHUNK + 1,
+                                    3 * CHUNK + 17])
+def test_parallel_chunk_leaf_identical_to_serial(rng, nbytes):
+    arr = rng.integers(0, 256, size=nbytes, dtype=np.uint8)
+    want_entries, want_views, want_crc = SER.chunk_leaf(arr, CHUNK)
+    eng = SER.ChunkHashEngine(workers=4)
+    try:
+        entries, views, crc = eng.chunk_leaf(arr, CHUNK)
+    finally:
+        eng.close()
+    assert entries == want_entries
+    assert crc == want_crc
+    assert [bytes(v) for v in views] == [bytes(v) for v in want_views]
+
+
+def test_parallel_chunk_records_many_leaves(rng):
+    items = [(f"l{i}", rng.standard_normal(50_000 + i * 7).astype(np.float32))
+             for i in range(6)]
+    eng = SER.ChunkHashEngine(workers=4)
+    try:
+        out, stats = eng.chunk_records(items, CHUNK)
+    finally:
+        eng.close()
+    total = 0
+    for name, arr in items:
+        entries, views, crc = out[name]
+        w_entries, _, w_crc = SER.chunk_leaf(arr, CHUNK)
+        assert entries == w_entries and crc == w_crc, name
+        total += len(entries)
+    assert stats["chunks_hashed"] == total and stats["chunks_known"] == 0
+
+
+def test_chunk_records_known_entries_skip_hashing(rng):
+    items = [("a", rng.standard_normal(60_000).astype(np.float32))]
+    eng = SER.ChunkHashEngine(workers=1)
+    try:
+        fresh, _ = eng.chunk_records(items, CHUNK)
+        known = {"a": dict(enumerate(fresh["a"][0]))}
+        again, stats = eng.chunk_records(items, CHUNK, known=known)
+    finally:
+        eng.close()
+    assert stats["chunks_hashed"] == 0
+    assert stats["chunks_known"] == len(fresh["a"][0])
+    assert again["a"][0] == fresh["a"][0] and again["a"][2] == fresh["a"][2]
+
+
+def test_chunk_records_stamps_fingerprints(rng):
+    arr = rng.standard_normal(40_000).astype(np.float32)
+    fp = SER.fingerprint_chunks(SER.as_byte_view(arr), CHUNK)
+    eng = SER.ChunkHashEngine(workers=1)
+    try:
+        out, _ = eng.chunk_records([("a", arr)], CHUNK, fps={"a": fp})
+    finally:
+        eng.close()
+    assert [e["fp"] for e in out["a"][0]] == [int(x) for x in fp]
+
+
+# ---------------------------------------------------------------------------
+# host fingerprints: semantics + agreement with the device kernels
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_chunks_basic_shape_and_sensitivity(rng):
+    data = rng.integers(0, 256, size=5 * CHUNK + 100, dtype=np.uint8)
+    fp = SER.fingerprint_chunks(data, CHUNK)
+    assert fp.dtype == np.uint32 and len(fp) == 6
+    flipped = data.copy()
+    flipped[3 * CHUNK + 5] ^= 1
+    fp2 = SER.fingerprint_chunks(flipped, CHUNK)
+    assert fp2[3] != fp[3]
+    assert np.array_equal(np.delete(fp2, 3), np.delete(fp, 3))
+
+
+def test_fingerprint_is_position_independent_within_leaf(rng):
+    chunk = rng.integers(0, 256, size=CHUNK, dtype=np.uint8)
+    rep = np.concatenate([chunk, chunk, chunk])
+    fp = SER.fingerprint_chunks(rep, CHUNK)
+    assert fp[0] == fp[1] == fp[2]
+
+
+def test_fingerprint_chunks_rejects_unaligned_chunk_bytes():
+    with pytest.raises(ValueError):
+        SER.fingerprint_chunks(b"\0" * 16, 6)
+    assert len(SER.fingerprint_chunks(b"", CHUNK)) == 0
+
+
+@pytest.mark.parametrize("n,chunk_words", [(4096, 1024), (5000, 1024),
+                                           (40, 8), (8, 8)])
+def test_fingerprint_host_vs_device_impls(rng, n, chunk_words):
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.kernels import ops
+
+    words = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    host = SER.fingerprint_chunks(words.tobytes(), 4 * chunk_words)
+    dev_ref = np.asarray(ops.chunk_fingerprints(
+        jnp.asarray(words), chunk_words=chunk_words, impl="ref"))
+    dev_pl = np.asarray(ops.chunk_fingerprints(
+        jnp.asarray(words), chunk_words=chunk_words,
+        impl="pallas_interpret"))
+    assert np.array_equal(host, dev_ref)
+    assert np.array_equal(host, dev_pl)
+
+
+# ---------------------------------------------------------------------------
+# REPRO_HASH_WORKERS env knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", ["not-a-number", "-3", "0", "2.5"])
+def test_auto_hash_workers_invalid_env_falls_back_with_warning(
+        monkeypatch, caplog, bad):
+    monkeypatch.setenv(SER.ENV_HASH_WORKERS, bad)
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.serialization"):
+        n = SER.auto_hash_workers(cap=4)
+    assert 1 <= n <= 4                       # auto sizing, never ValueError
+    assert any(SER.ENV_HASH_WORKERS in r.message for r in caplog.records)
+
+
+def test_auto_hash_workers_valid_env_still_wins(monkeypatch):
+    monkeypatch.setenv(SER.ENV_HASH_WORKERS, "3")
+    assert SER.auto_hash_workers(cap=1) == 3
+
+
+def test_engine_workers_resolved_from_env(monkeypatch):
+    monkeypatch.setenv(SER.ENV_HASH_WORKERS, "5")
+    assert SER.ChunkHashEngine().workers == 5
+    assert SER.ChunkHashEngine(workers=2).workers == 2
+
+
+# ---------------------------------------------------------------------------
+# manager: fingerprint pre-filter + pre-dump save paths
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_prefilter_skips_clean_chunks_and_restores(rng, tmp_path):
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          fingerprint=True, hash_workers=2)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    p = m.save(2, tree2)
+    m.commit(2)
+    d = p["delta"]
+    assert d["chunks_fp_clean"] > 0
+    assert d["chunks_hashed"] + d["chunks_fp_clean"] == d["chunks_total"]
+    assert d["chunks_hashed"] <= 2           # only the dirtied chunk (+slack)
+    m.close()
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree2)
+
+
+def test_precommit_requires_delta_mode(rng, tmp_path):
+    m = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), replicas=1)
+    with pytest.raises(ValueError):
+        m.precommit(1, _tree(rng, n_leaves=1, elems=10))
+    m.close()
+
+
+def test_predump_then_save_skips_hash_and_write(rng, tmp_path):
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          hash_workers=2)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    info = m.precommit(2, tree2)
+    assert info["step"] == 2 and info["snapshot_s"] >= 0
+    p = m.save(2, tree2)            # consumes the pre-dump (waits the pool)
+    m.commit(2)
+    d = p["delta"]
+    assert d["predump_step"] == 2
+    assert d["chunks_hashed"] == 0           # everything pre-hashed
+    assert d["chunks_predumped"] >= 1        # dirty chunk pre-written
+    assert d["chunks_written"] == 0          # ...so save re-wrote nothing
+    m.close()
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree2)
+
+
+def test_predump_with_mutation_after_is_still_byte_exact(rng, tmp_path):
+    """CRIU's pre-dump contract: bytes dirtied AFTER the pre-dump are caught
+    by the live fingerprint comparison and re-hashed/re-written — the
+    committed state is the save-time tree, never the pre-dump snapshot."""
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          hash_workers=2)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    m.precommit(2, tree2)
+    tree3 = _mutate(tree2, ["l00", "l01"], elems=50)   # dirtied after predump
+    p = m.save(2, tree3)
+    m.commit(2)
+    assert p["delta"]["chunks_hashed"] >= 1
+    m.close()
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree3)
+
+
+def test_predump_orphan_chunks_are_swept(rng, tmp_path):
+    """A pre-written chunk whose content was re-dirtied before the save must
+    not leak in the dedup store: it is unreferenced by any manifest."""
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          hash_workers=1)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    m.precommit(2, tree2)
+    m.wait_predump()
+    # the predumped dirty chunk of tree2's l00
+    orphan = SER.chunk_leaf(tree2["l00"], CHUNK)[0][0]["hash"]
+    assert store.exists("shared", chunk_rel("ckpt", orphan))
+    tree3 = _mutate(tree2, ["l00"])          # re-dirty the same chunk
+    m.save(2, tree3)
+    m.commit(2)
+    assert not store.exists("shared", chunk_rel("ckpt", orphan))
+    m.close()
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree3)
+
+
+def test_predump_boundary_schedule():
+    from repro.train.step import predump_boundary
+
+    fires = [s for s in range(12) if predump_boundary(s, 5, lead=1)]
+    assert fires == [4, 9]                   # one step before 5, 10
+    fires = [s for s in range(12) if predump_boundary(s, 5, lead=2)]
+    assert fires == [3, 8]
+    # lead clamped below the interval; interval=1 never pre-dumps
+    assert [s for s in range(6) if predump_boundary(s, 2, lead=7)] == [1, 3, 5]
+    assert not any(predump_boundary(s, 1) for s in range(6))
+    assert not any(predump_boundary(s, 0) for s in range(6))

@@ -143,3 +143,37 @@ def test_checksum_detects_flip(rng):
     a = ops.checksum(words)
     flipped = words.at[1234].set(words[1234] ^ 1)
     assert int(a) != int(ops.checksum(flipped))
+
+
+def test_checksum_empty_input_is_zero():
+    empty = jnp.zeros((0,), jnp.uint32)
+    assert int(ops.checksum(empty)) == 0
+    assert int(ops.checksum(empty, impl="pallas_interpret")) == 0
+
+
+def test_checksum_rejects_non_pow2_block(rng):
+    from repro.kernels import checksum as ck
+
+    words = jnp.asarray(rng.integers(0, 2**32, size=64, dtype=np.uint32))
+    for bad in (0, -8, 1000):
+        with pytest.raises(ValueError):
+            ops.checksum(words, block=bad)
+        with pytest.raises(ValueError):
+            ck.checksum_pallas(words, block=bad)
+
+
+@pytest.mark.parametrize("n,chunk_words", [(8192, 1024), (5000, 512), (1, 8)])
+def test_chunk_fingerprints_pallas_vs_ref(rng, n, chunk_words):
+    words = jnp.asarray(rng.integers(0, 2**32, size=n, dtype=np.uint32))
+    a = ops.chunk_fingerprints(words, chunk_words=chunk_words, impl="ref")
+    b = ops.chunk_fingerprints(words, chunk_words=chunk_words,
+                               impl="pallas_interpret")
+    assert a.shape == (-(-n // chunk_words),)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_fingerprints_empty_and_pow2_guard(rng):
+    assert ops.chunk_fingerprints(jnp.zeros((0,), jnp.uint32),
+                                  chunk_words=64).shape == (0,)
+    with pytest.raises(ValueError):
+        ops.chunk_fingerprints(jnp.zeros((8,), jnp.uint32), chunk_words=48)
