@@ -236,6 +236,14 @@ class CheckpointManager:
         self.delta = delta
         self.rebase_every = rebase_every
         self.chunk_bytes = chunk_bytes or SER.DELTA_CHUNK_BYTES
+        # fingerprints (fingerprint=True and every precommit) view a chunk
+        # as a padded <u4 word stream, so an unaligned chunk size must fail
+        # HERE — not mid-save, and not on a pre-dump pool thread where the
+        # ValueError would only surface at the next wait()
+        if delta and (self.chunk_bytes < 4 or self.chunk_bytes % 4):
+            raise ValueError(
+                "delta chunk_bytes must be a positive multiple of 4 "
+                f"(fingerprint word stream), got {self.chunk_bytes}")
         self.keep_last = keep_last
         self.prefix = prefix
         self.shard_format = shard_format
@@ -469,7 +477,15 @@ class CheckpointManager:
                 fps=fps)
             hash_s = time.perf_counter() - t1
             t1 = time.perf_counter()
-            written: set = set()
+            # superseding an unconsumed pre-dump must not drop its write
+            # set: those chunks are referenced by no manifest, so only the
+            # consuming save's sweep can ever reclaim them.  Carrying them
+            # forward keeps them in sweep scope (and skips re-writing any
+            # this round re-produces).  Safe to read here: pre-dump tasks
+            # run serially on one pool and _consume_predump drains it
+            # before swapping.
+            prev = self._predump
+            written: set = set((prev or {}).get("written") or ())
             leaves = {}
             for _, name, _arr in mine:
                 entries, views, leaf_crc = hashed[name]
@@ -671,11 +687,35 @@ class CheckpointManager:
                 # referenced by NO manifest ever — gc() walks manifests, so
                 # they would leak forever.  Single-worker only: with
                 # concurrent workers a same-content chunk could legitimately
-                # belong to another worker's in-flight save.
+                # belong to another worker's in-flight save (known leak,
+                # see ROADMAP).  The spare set mirrors gc()'s contract — a
+                # chunk stays while ANY kept manifest references it: content
+                # can recur from an older retained step whose hash the
+                # parent manifest does not carry, and a pre-write of that
+                # hash lands on the very file the old step still resolves
+                # through.
                 final = {c["hash"] for e in entries for c in e["chunks"]}
-                for h in sorted(pre_written - final - parent_hashes):
-                    self.store.delete_file(self.tier,
-                                           chunk_rel(self.prefix, h))
+                cands = pre_written - final - parent_hashes
+                keep_hashes: Optional[set] = set()
+                parent_step = parent["step"] if parent else None
+                if cands:          # fully-consumed pre-dump: no reads at all
+                    try:
+                        all_steps = self.steps()
+                        kept = (all_steps[-self.keep_last:] if self.keep_last
+                                else all_steps)
+                        for s in kept:
+                            if s != parent_step:
+                                keep_hashes |= manifest_chunk_hashes(
+                                    self.read_manifest(s))
+                    except (FileNotFoundError, ValueError, KeyError, OSError):
+                        # can't prove a chunk unreferenced: leak it (bounded,
+                        # reclaimed by a later sweep) rather than tear a
+                        # restorable step
+                        keep_hashes = None
+                if keep_hashes is not None:
+                    for h in sorted(cands - keep_hashes):
+                        self.store.delete_file(self.tier,
+                                               chunk_rel(self.prefix, h))
             # the v3 index file is the format's on-disk artifact for tooling
             # and disaster recovery (a manifest can be rebuilt from index
             # files alone); the restore path reads the manifest, so one
@@ -685,19 +725,27 @@ class CheckpointManager:
                 SER.write_chunk_index_bytes(entries, meta={"step": step},
                                             chunk_bytes=self.chunk_bytes),
                 replicas=1)
+            # write_s is final BEFORE the wpart is serialized, so the phase
+            # timing actually reaches disk (the wpart put it excludes is a
+            # few KB of JSON)
+            part["delta"]["write_s"] = time.perf_counter() - t1
             self.store.put(
                 self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
                 json.dumps(part).encode(), replicas=self.replicas)
-            part["delta"]["write_s"] = time.perf_counter() - t1
 
+        # the step-visible pause attributable to this save call: snapshot +
+        # everything that ran synchronously here (in async mode the writes
+        # are off-thread, so stall covers fp/hash/diff only).  In async mode
+        # stall_s must be set BEFORE the handoff — the writer thread
+        # serializes ``part`` into the wpart, and a training-thread dict
+        # insert during that json.dumps can tear the write; post-submit cost
+        # on this thread is a queue append, so nothing visible is lost.
         if self._writer is not None:
+            part["delta"]["stall_s"] = snap_s + (time.perf_counter() - t_entry)
             self._writer.submit(do_write)
         else:
             do_write()
-        # the step-visible pause attributable to this save call: snapshot +
-        # everything that ran synchronously here (in async mode the writes
-        # are off-thread, so stall covers fp/hash/diff only)
-        part["delta"]["stall_s"] = snap_s + (time.perf_counter() - t_entry)
+            part["delta"]["stall_s"] = snap_s + (time.perf_counter() - t_entry)
         return part
 
     def wait_writes(self, timeout: Optional[float] = None) -> None:

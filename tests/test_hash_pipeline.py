@@ -291,6 +291,75 @@ def test_predump_orphan_chunks_are_swept(rng, tmp_path):
     _assert_trees_equal(got, tree3)
 
 
+def test_predump_sweep_spares_chunks_of_older_kept_manifests(rng, tmp_path):
+    """A pre-written chunk whose content recurs from an older RETAINED step
+    (hash absent from the parent manifest) must survive the orphan sweep:
+    the old step's manifest still resolves through that chunk file, and
+    deleting it would tear a restorable checkpoint."""
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          hash_workers=1, keep_last=3)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    m.save(2, tree2)
+    m.commit(2)
+    # pre-dump a state whose l00 chunk 0 REVERTS to step 1's content: not in
+    # the parent (step 2) manifest, so the pre-dump writes it — onto the
+    # very file step 1 still references
+    m.precommit(3, tree)
+    m.wait_predump()
+    shared = SER.chunk_leaf(tree["l00"], CHUNK)[0][0]["hash"]
+    assert store.exists("shared", chunk_rel("ckpt", shared))
+    tree3 = _mutate(tree2, ["l00"], elems=30)    # dirtied again before save
+    m.save(3, tree3)
+    m.commit(3)
+    assert store.exists("shared", chunk_rel("ckpt", shared))
+    got, _ = m.restore(tree, step=1)             # step 1 must still restore
+    _assert_trees_equal(got, tree)
+    got, _ = m.restore(tree)
+    _assert_trees_equal(got, tree3)
+    m.close()
+
+
+def test_second_precommit_merges_superseded_predump_writes(rng, tmp_path):
+    """Re-pre-dumping before the consuming save must not orphan the FIRST
+    pre-dump's chunk writes: no manifest references them, so only the
+    consuming save's sweep can reclaim them."""
+    tree = _tree(rng)
+    store = TieredStore(tmp_path / "ck", seed=0)
+    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
+                          hash_workers=1)
+    m.save(1, tree)
+    m.commit(1)
+    tree2 = _mutate(tree, ["l00"])
+    m.precommit(2, tree2)
+    m.wait_predump()
+    orphan1 = SER.chunk_leaf(tree2["l00"], CHUNK)[0][0]["hash"]
+    assert store.exists("shared", chunk_rel("ckpt", orphan1))
+    tree3 = _mutate(tree2, ["l00"])
+    m.precommit(2, tree3)                        # supersedes the first
+    m.wait_predump()
+    orphan2 = SER.chunk_leaf(tree3["l00"], CHUNK)[0][0]["hash"]
+    tree4 = _mutate(tree3, ["l00"])              # dirty once more: neither
+    m.save(2, tree4)                             # pre-written chunk is final
+    m.commit(2)
+    assert not store.exists("shared", chunk_rel("ckpt", orphan1))
+    assert not store.exists("shared", chunk_rel("ckpt", orphan2))
+    m.close()
+    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    _assert_trees_equal(got, tree4)
+
+
+def test_manager_rejects_unaligned_chunk_bytes_in_delta_mode(tmp_path):
+    store = TieredStore(tmp_path / "ck", seed=0)
+    with pytest.raises(ValueError, match="multiple of 4"):
+        CheckpointManager(store, replicas=1, delta=True, chunk_bytes=6)
+    # non-delta managers never fingerprint: unaligned sizes stay legal
+    CheckpointManager(store, replicas=1, chunk_bytes=6).close()
+
+
 def test_predump_boundary_schedule():
     from repro.train.step import predump_boundary
 
