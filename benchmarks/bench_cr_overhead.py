@@ -82,7 +82,7 @@ def run_restore_engine(payload_mb: int = 64, n_shards: int = 8,
     import os
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore
 
     if smoke:
@@ -97,15 +97,16 @@ def run_restore_engine(payload_mb: int = 64, n_shards: int = 8,
     out: dict = {"payload_mb": payload_bytes / 1e6, "n_shards": n_shards}
     with tempfile.TemporaryDirectory(dir=tmp_root) as d:
         store = TieredStore(Path(d), sim_io_factor=1.0, seed=0)
+        pol = CheckpointPolicy(replicas=1)
         for w in range(n_shards):
-            CheckpointManager(store, worker_id=w, num_workers=n_shards,
-                              replicas=1).save(1, tree)
-        CheckpointManager(store, num_workers=n_shards,
-                          replicas=1).commit(1, num_workers=n_shards)
+            CheckpointManager(store, pol, worker_id=w,
+                              num_workers=n_shards).save(1, tree)
+        CheckpointManager(store, pol,
+                          num_workers=n_shards).commit(1, num_workers=n_shards)
 
         curve: dict = {}
         for wk in workers_list:
-            m = CheckpointManager(store, restore_workers=wk)
+            m = CheckpointManager(store, CheckpointPolicy(restore_workers=wk))
             best = float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
@@ -120,12 +121,12 @@ def run_restore_engine(payload_mb: int = 64, n_shards: int = 8,
                                            / curve[hi]["wall_s"])
 
         # restart curve: cold (shared FS) vs promoted (node-local tier)
-        m = CheckpointManager(store, promote="on_restore")
+        m = CheckpointManager(store, CheckpointPolicy(promote="on_restore"))
         t0 = time.perf_counter()
         m.restore(tree)
         cold_s = time.perf_counter() - t0
         m.wait_promotions()
-        m2 = CheckpointManager(store, promote="on_restore")
+        m2 = CheckpointManager(store, CheckpointPolicy(promote="on_restore"))
         t0 = time.perf_counter()
         m2.restore(tree)
         promoted_s = time.perf_counter() - t0
@@ -297,7 +298,7 @@ def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8,
         smoke: bool = False):
     if smoke:
         steps, ckpt_every = 6, 2
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore
     from repro.configs.base import get_config, reduced
     from repro.core.virtualization import fetch_tree, place_tree
@@ -329,9 +330,8 @@ def run(results_dir: Path | None = None, steps: int = 40, ckpt_every: int = 8,
         state_mb = tree_bytes(state) / 1e6
         trace = []
         with tempfile.TemporaryDirectory() as d:
-            mgr = CheckpointManager(
-                TieredStore(Path(d)),
-                mode=("async" in mode and "async") or "sync")
+            mgr = CheckpointManager(TieredStore(Path(d)),
+                                    CheckpointPolicy(mode=("async" in mode and "async") or "sync"))
             t_start = time.perf_counter()
             step = 0
             restarted = False

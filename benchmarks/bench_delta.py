@@ -65,7 +65,7 @@ def _delta_save_detail(payload_mb: int, n_leaves: int = 8,
                        chunk_bytes: int = 256 << 10, steps: int = 4) -> dict:
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore
 
     rng = np.random.default_rng(0)
@@ -77,7 +77,7 @@ def _delta_save_detail(payload_mb: int, n_leaves: int = 8,
     with tempfile.TemporaryDirectory() as d:
         # full (non-delta) baseline: every step writes the whole shard
         store = TieredStore(Path(d) / "full", seed=0, sim_io_factor=SIM_IO)
-        m = CheckpointManager(store, replicas=1)
+        m = CheckpointManager(store, CheckpointPolicy(replicas=1))
         t0 = time.perf_counter()
         m.save(1, tree)
         m.commit(1)
@@ -89,9 +89,9 @@ def _delta_save_detail(payload_mb: int, n_leaves: int = 8,
         # chunks.  Fingerprint pre-filter + parallel hash engine on: the
         # blake2b pass inside the stall should collapse to the dirty chunks
         store = TieredStore(Path(d) / "delta", seed=0, sim_io_factor=SIM_IO)
-        m = CheckpointManager(store, replicas=1, delta=True,
-                              chunk_bytes=chunk_bytes, fingerprint=True,
-                              hash_workers=HASH_WORKERS)
+        m = CheckpointManager(store,
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                                               fingerprint=True, hash_workers=HASH_WORKERS))
         p = m.save(1, tree)
         m.commit(1)
         base_written = p["delta"]["bytes_written"]
@@ -170,7 +170,7 @@ def _delta_overlap_detail(payload_mb: int, n_leaves: int = 8,
     (``--ckpt-predump-lead``) exists precisely to buy that window."""
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore
 
     rng = np.random.default_rng(0)
@@ -181,9 +181,9 @@ def _delta_overlap_detail(payload_mb: int, n_leaves: int = 8,
     sync_walls, overlap_stalls, overlap_rows = [], [], []
     with tempfile.TemporaryDirectory() as d:
         store = TieredStore(Path(d) / "sync", seed=0, sim_io_factor=SIM_IO)
-        m = CheckpointManager(store, replicas=1, delta=True,
-                              chunk_bytes=chunk_bytes,
-                              hash_workers=HASH_WORKERS)
+        m = CheckpointManager(store,
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                                               hash_workers=HASH_WORKERS))
         m.save(1, tree)
         m.commit(1)
         cur = tree
@@ -200,9 +200,9 @@ def _delta_overlap_detail(payload_mb: int, n_leaves: int = 8,
 
         train_s = 1.2 * float(np.mean(sync_walls))
         store = TieredStore(Path(d) / "overlap", seed=0, sim_io_factor=SIM_IO)
-        m = CheckpointManager(store, replicas=1, delta=True,
-                              chunk_bytes=chunk_bytes,
-                              hash_workers=HASH_WORKERS)
+        m = CheckpointManager(store,
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                                               hash_workers=HASH_WORKERS))
         m.save(1, tree)
         m.commit(1)
         cur = tree
@@ -249,7 +249,7 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
     stale cache, delta chunks from the warm peer, ~zero shared bytes."""
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore, node_local_tier_roots
 
     rng = np.random.default_rng(0)
@@ -265,17 +265,17 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
                 root / "ck", sim_io_factor=sim, seed=0,
                 tier_roots=node_local_tier_roots(root / "nodes" / node))
 
-        w = CheckpointManager(store_for("peerA"), replicas=1, delta=True,
-                              chunk_bytes=chunk_bytes, promote="eager",
-                              node="peerA")
+        w = CheckpointManager(store_for("peerA"),
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                                               promote="eager"), node="peerA")
         w.save(1, tree)
         w.commit(1)
         w.wait_promotions()
 
         # nodeB warms its cache at step 1, then goes away (preempted)
-        b = CheckpointManager(store_for("nodeB"), replicas=1, delta=True,
-                              chunk_bytes=chunk_bytes, promote="on_restore",
-                              node="nodeB")
+        b = CheckpointManager(store_for("nodeB"),
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                                               promote="on_restore"), node="nodeB")
         b.restore(tree)
         b.wait_promotions()
         b.close()
@@ -290,10 +290,11 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
         delta_bytes = p["delta"]["bytes_written"]
 
         # requeued nodeB restores step 2 with peerA as a peer source
-        b2 = CheckpointManager(store_for("nodeB", sim=1.0), replicas=1,
-                               delta=True, chunk_bytes=chunk_bytes,
-                               promote="off", node="nodeB",
-                               peer_roots={"peerA": root / "nodes" / "peerA"})
+        b2 = CheckpointManager(
+            store_for("nodeB", sim=1.0),
+            CheckpointPolicy(replicas=1, delta=True,
+                             chunk_bytes=chunk_bytes, promote="off"),
+            node="nodeB", peer_roots={"peerA": root / "nodes" / "peerA"})
         t0 = time.perf_counter()
         b2.restore(tree)
         stale_s = time.perf_counter() - t0
@@ -301,8 +302,8 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
         b2.close()
 
         # contrast: a fully cold node pays the whole payload to shared
-        c = CheckpointManager(store_for("cold", sim=1.0), replicas=1,
-                              delta=True, chunk_bytes=chunk_bytes)
+        c = CheckpointManager(store_for("cold", sim=1.0),
+                              CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes))
         t0 = time.perf_counter()
         c.restore(tree)
         cold_s = time.perf_counter() - t0

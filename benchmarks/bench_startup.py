@@ -151,7 +151,7 @@ def _placement_requeue_detail(shard_mb: float, n_nodes: int = 2,
     paper's cold-container-cache effect)."""
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore, node_local_tier_roots
 
     rng = np.random.default_rng(0)
@@ -168,7 +168,7 @@ def _placement_requeue_detail(shard_mb: float, n_nodes: int = 2,
                     root / "ck", sim_io_factor=1.0, seed=0,
                     tier_roots=node_local_tier_roots(
                         root / "nodes" / f"node{node}"))
-                return CheckpointManager(store, replicas=1, promote="eager")
+                return CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager"))
 
             m = mgr(0)                 # initial commit from node0 (untimed)
             step = 1
@@ -230,7 +230,7 @@ def _peer_fetch_detail(shard_mb: float, n_shards: int = 32,
     import os
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore, node_local_tier_roots
 
     rng = np.random.default_rng(0)
@@ -248,15 +248,15 @@ def _peer_fetch_detail(shard_mb: float, n_shards: int = 32,
                 tier_roots=node_local_tier_roots(root / "nodes" / node))
 
         w = store_for("writer")                  # commit once (untimed)
+        pol = CheckpointPolicy(replicas=1)
         for i in range(n_shards):
-            CheckpointManager(w, worker_id=i, num_workers=n_shards,
-                              replicas=1).save(1, tree)
-        CheckpointManager(w, num_workers=n_shards,
-                          replicas=1).commit(1, num_workers=n_shards)
+            CheckpointManager(w, pol, worker_id=i,
+                              num_workers=n_shards).save(1, tree)
+        CheckpointManager(w, pol,
+                          num_workers=n_shards).commit(1, num_workers=n_shards)
 
         def warm(node: str) -> None:
-            m = CheckpointManager(store_for(node), replicas=1,
-                                  promote="eager")
+            m = CheckpointManager(store_for(node), CheckpointPolicy(replicas=1, promote="eager"))
             m.prefetch_latest()
             m.wait_promotions()
             m.close()
@@ -293,10 +293,9 @@ def _peer_fetch_detail(shard_mb: float, n_shards: int = 32,
                 return data
 
             store._pread, store.get = counting_pread, counting_get
-            m = CheckpointManager(store, replicas=1,
-                                  restore_workers=workers,
-                                  promote="off", node=node,
-                                  peer_roots=peer_roots)
+            m = CheckpointManager(store,
+                                  CheckpointPolicy(replicas=1, restore_workers=workers,
+                                                   promote="off"), node=node, peer_roots=peer_roots)
             t0 = time.perf_counter()
             m.restore(tree)
             dt = time.perf_counter() - t0
@@ -334,7 +333,7 @@ def _promoted_restore_detail(shard_mb: float, n_shards: int = 4) -> dict:
     restart is served entirely node-locally."""
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
     from repro.checkpoint.store import TieredStore
 
     rng = np.random.default_rng(0)
@@ -343,18 +342,19 @@ def _promoted_restore_detail(shard_mb: float, n_shards: int = 4) -> dict:
             for i in range(n_shards)}
     with tempfile.TemporaryDirectory() as d:
         store = TieredStore(Path(d), sim_io_factor=1.0, seed=0)
+        pol = CheckpointPolicy(replicas=1)
         for w in range(n_shards):
-            CheckpointManager(store, worker_id=w, num_workers=n_shards,
-                              replicas=1).save(1, tree)
-        CheckpointManager(store, num_workers=n_shards,
-                          replicas=1).commit(1, num_workers=n_shards)
+            CheckpointManager(store, pol, worker_id=w,
+                              num_workers=n_shards).save(1, tree)
+        CheckpointManager(store, pol,
+                          num_workers=n_shards).commit(1, num_workers=n_shards)
 
-        m = CheckpointManager(store, promote="on_restore")
+        m = CheckpointManager(store, CheckpointPolicy(promote="on_restore"))
         t0 = time.perf_counter()
         m.restore(tree)
         cold_s = time.perf_counter() - t0
         m.wait_promotions()
-        m2 = CheckpointManager(store, promote="on_restore")
+        m2 = CheckpointManager(store, CheckpointPolicy(promote="on_restore"))
         t0 = time.perf_counter()
         _, man = m2.restore(tree)
         promoted_s = time.perf_counter() - t0

@@ -1,0 +1,214 @@
+"""Serving-fleet weight push: delta distribution over the chunk fabric vs a
+naive full-shard broadcast.
+
+One artifact row:
+
+  weight_push    a trainer commits step 2 as a small delta and announces it
+                 on the registry push plane; N serving replicas (each warm
+                 at step 1 from their initial restore) sync via
+                 ``WeightSyncClient`` — unchanged chunks from their OWN
+                 node-local cache, the delta from the publisher's promoted
+                 cache (peer tier), shared-filesystem reads ~0.  The naive
+                 arm re-restores the FULL shard from the shared tier on
+                 every replica.  Propagation time covers poll+fetch+stage
+                 (off the request path); the request-visible stall is ONLY
+                 the double-buffer pointer swap, reported separately.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+# keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones)
+BENCH_KEYS = ("weight_push",)
+
+N_REPLICAS = 4
+SIM_IO = 1.0          # replicas read over the simulated interconnect/pfs
+
+
+def _mutate(tree: dict, frac_leaves: float, elems: int) -> dict:
+    """Same churn pattern as bench_delta: a fine-tune push touches a slice
+    of the first ``frac_leaves`` of the leaves."""
+    out = dict(tree)
+    names = sorted(out)
+    for name in names[:max(1, int(len(names) * frac_leaves))]:
+        a = out[name].copy()
+        a[:elems] += 1.0
+        out[name] = a
+    return out
+
+
+def _weight_push_detail(payload_mb: int, n_replicas: int = N_REPLICAS,
+                        n_leaves: int = 8,
+                        chunk_bytes: int = 256 << 10) -> dict:
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+    from repro.checkpoint.store import TieredStore, node_local_tier_roots
+    from repro.sched.cache_registry import CacheRegistry
+    from repro.serve.weight_sync import ParamHandle, WeightSyncClient
+
+    rng = np.random.default_rng(0)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+    payload_bytes = sum(a.nbytes for a in tree.values())
+
+    with tempfile.TemporaryDirectory() as d:
+        root = Path(d)
+        registry = CacheRegistry(root / "registry")
+
+        def store_for(node: str, sim: float = 0.0) -> TieredStore:
+            return TieredStore(
+                root / "ck", sim_io_factor=sim, seed=0,
+                tier_roots=node_local_tier_roots(root / "nodes" / node))
+
+        # publisher (the fine-tune trainer): eager promotion keeps its own
+        # node-local cache at the pushed step, and the registry entry from
+        # that promotion is what lets the fleet fetch the delta peer-to-peer
+        # instead of N times from the shared tier
+        pub = CheckpointManager(
+            store_for("publisher"),
+            CheckpointPolicy(replicas=1, delta=True, chunk_bytes=chunk_bytes,
+                             promote="eager"),
+            node="publisher", registry=registry)
+        pub.save(1, tree)
+        man1 = pub.commit(1)
+        pub.wait_promotions()
+        registry.announce_push(step=1, node="publisher",
+                               manifest_version=man1.get("manifest_version"))
+
+        # fleet start-up: every replica restores the announced step (its
+        # on_restore promotion warms the replica's own node-local cache)
+        fleet = []
+        for i in range(n_replicas):
+            name = f"r{i}"
+            mgr = CheckpointManager(
+                store_for(name, sim=SIM_IO),
+                CheckpointPolicy(replicas=1, delta=True,
+                                 chunk_bytes=chunk_bytes,
+                                 promote="on_restore"),
+                node=name, registry=registry)
+            host, man = mgr.restore(tree)
+            mgr.wait_promotions()
+            handle = ParamHandle(host, step=man["step"])
+            fleet.append((name, mgr, handle,
+                          WeightSyncClient(mgr, handle, tree,
+                                           registry=registry, replica=name)))
+
+        # the push: a small delta committed and announced
+        tree2 = _mutate(tree, 1.0 / n_leaves, chunk_bytes // 8)
+        p = pub.save(2, tree2)
+        man2 = pub.commit(2)
+        pub.wait_promotions()
+        registry.announce_push(step=2, node="publisher",
+                               manifest_version=man2.get("manifest_version"))
+        delta_bytes = p["delta"]["bytes_written"]
+
+        # fleet convergence: poll + fetch + stage per replica (off the
+        # request path), then one boundary swap (the request-visible part)
+        per_replica = []
+        t_fleet = time.perf_counter()
+        for name, mgr, handle, client in fleet:
+            t0 = time.perf_counter()
+            rec = client.sync_once()
+            fetch_s = time.perf_counter() - t0
+            handle.commit_pending()
+            per_replica.append({
+                "replica": name, "fetch_s": fetch_s,
+                "swap_stall_s": handle.last_swap_s,
+                "bytes_by_tier": rec["bytes_by_tier"],
+                "bytes_read": rec["bytes_read"],
+            })
+        propagation_s = time.perf_counter() - t_fleet
+        for name, mgr, handle, client in fleet:
+            assert handle.step == 2, f"{name} did not converge"
+            np.testing.assert_array_equal(handle.current["l00"], tree2["l00"])
+            mgr.close()
+        status = registry.replica_status()
+        pub.close()
+
+        # naive arm: no delta plane, no peers — every replica re-restores
+        # the FULL shard from the shared tier (the pre-fabric broadcast)
+        full_store = TieredStore(root / "full", seed=0)
+        w = CheckpointManager(full_store, CheckpointPolicy(replicas=1))
+        w.save(1, tree)
+        w.commit(1)
+        w.save(2, tree2)
+        w.commit(2)
+        w.close()
+        full_bytes = full_store.size(
+            "shared", "ckpt/step_0000000002/shard_w00000.bin")
+        naive_rows = []
+        t_fleet = time.perf_counter()
+        for i in range(n_replicas):
+            m = CheckpointManager(
+                TieredStore(root / "full", sim_io_factor=SIM_IO, seed=0,
+                            tier_roots=node_local_tier_roots(
+                                root / "nodes" / f"naive{i}")),
+                CheckpointPolicy(replicas=1))
+            t0 = time.perf_counter()
+            m.restore(tree, 2)
+            naive_rows.append({"replica": f"naive{i}",
+                               "fetch_s": time.perf_counter() - t0,
+                               "bytes_by_tier":
+                                   (m.last_restore_stats or {}).get(
+                                       "bytes_by_tier")})
+            m.close()
+        broadcast_s = time.perf_counter() - t_fleet
+
+    fleet_by_tier: dict = {}
+    for r in per_replica:
+        for t, n in (r["bytes_by_tier"] or {}).items():
+            fleet_by_tier[t] = fleet_by_tier.get(t, 0) + n
+    shared_read = fleet_by_tier.get("shared", 0)
+    return {
+        "payload_mb": payload_bytes / 1e6,
+        "chunk_bytes": chunk_bytes,
+        "n_replicas": n_replicas,
+        "delta_bytes_committed": delta_bytes,
+        "full_shard_bytes": full_bytes,
+        "propagation_s": propagation_s,
+        "broadcast_s": broadcast_s,
+        "speedup_vs_broadcast": broadcast_s / max(propagation_s, 1e-9),
+        "per_replica": per_replica,
+        "naive_per_replica": naive_rows,
+        "fleet_bytes_by_tier": fleet_by_tier,
+        "fleet_shared_read_bytes": shared_read,
+        # the acceptance ratios: fleet shared reads vs ONE delta, and vs
+        # the N-replica full broadcast it replaces
+        "shared_vs_delta_ratio": shared_read / max(delta_bytes, 1),
+        "shared_vs_naive_ratio": shared_read / max(n_replicas * full_bytes, 1),
+        "max_swap_stall_s": max(r["swap_stall_s"] for r in per_replica),
+        "mean_fetch_s": float(np.mean([r["fetch_s"] for r in per_replica])),
+        "replica_status": {k: {"step": v.get("step"), "lag": v.get("lag"),
+                               "phase": v.get("phase")}
+                           for k, v in status.items()},
+    }
+
+
+def run(results_dir: Path | None = None, smoke: bool = False):
+    from benchmarks.bench_startup import merge_bench_ckpt_io
+
+    payload_mb = 8 if smoke else 64
+    detail = _weight_push_detail(payload_mb)
+    merge_bench_ckpt_io({"weight_push": detail})
+    if results_dir:
+        results_dir.mkdir(parents=True, exist_ok=True)
+        (results_dir / "weight_push.json").write_text(
+            json.dumps({"weight_push": detail}, indent=1))
+    return [{
+        "name": "ckpt_weight_push",
+        "us_per_call": detail["propagation_s"] * 1e6,
+        "derived": (
+            f"replicas={detail['n_replicas']} "
+            f"prop={detail['propagation_s']*1e3:.1f}ms "
+            f"broadcast={detail['broadcast_s']*1e3:.1f}ms "
+            f"speedup={detail['speedup_vs_broadcast']:.1f}x "
+            f"shared={detail['fleet_shared_read_bytes']} "
+            f"delta={detail['delta_bytes_committed']} "
+            f"swap_stall={detail['max_swap_stall_s']*1e6:.0f}us"),
+    }]

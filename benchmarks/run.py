@@ -6,6 +6,7 @@
   bench_coordinator   §III-A: two-phase barrier latency vs worker count
   bench_kernels       kernel-layer + checkpoint-substrate throughput
   bench_delta         shard v3: delta save bytes + stale-node peer fetch
+  bench_weight_push   serving fleet: delta weight push vs full broadcast
 
 Each module declares the BENCH_ckpt_io.json keys it owns in ``BENCH_KEYS``;
 after a run the harness prunes artifact keys no module claims any more, so a
@@ -94,10 +95,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_coordinator, bench_cr_overhead, bench_delta,
-                            bench_kernels, bench_startup)
+                            bench_kernels, bench_startup, bench_weight_push)
 
     modules = (bench_kernels, bench_startup, bench_coordinator,
-               bench_cr_overhead, bench_delta)
+               bench_cr_overhead, bench_delta, bench_weight_push)
     # stamped FIRST so even a partially-crashed run is attributable, and the
     # modules' own merge_bench_ckpt_io calls ride on top of it
     bench_startup.merge_bench_ckpt_io(

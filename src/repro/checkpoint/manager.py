@@ -39,6 +39,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+import warnings
 import zlib
 from pathlib import Path
 from typing import Optional
@@ -47,11 +48,12 @@ import numpy as np
 
 from repro.checkpoint import serialization as SER
 from repro.checkpoint.async_writer import AsyncWriter, WorkPool
+from repro.checkpoint.policy import PROMOTE_POLICIES, CheckpointPolicy
 from repro.checkpoint.restore_engine import ParallelRestorer
 from repro.checkpoint.store import (TieredStore, chunk_refcounts, chunk_rel,
                                     manifest_chunk_hashes)
 
-PROMOTE_POLICIES = ("off", "on_restore", "eager")
+__all__ = ["CheckpointManager", "CheckpointPolicy", "PROMOTE_POLICIES"]
 
 # how far behind a stale peer's cached step may be before the chunk plane
 # stops considering it a source: chunk overlap decays with step distance, and
@@ -195,61 +197,59 @@ def validate_promoted_cache(store: TieredStore, *, tier: str = "shared",
 
 
 class CheckpointManager:
-    def __init__(self, store: TieredStore, *, tier: str = "shared",
-                 worker_id: int = 0, num_workers: int = 1, replicas: int = 2,
-                 mode: str = "sync", incremental: bool = False,
-                 delta: bool = False, rebase_every: int = 8,
-                 chunk_bytes: Optional[int] = None,
-                 keep_last: int = 3, prefix: str = "ckpt",
-                 shard_format: int = 2, restore_workers: int = 0,
-                 fingerprint: bool = False, hash_workers: int = 0,
-                 promote: str = "off", promote_tier: str = "local",
+    def __init__(self, store: TieredStore,
+                 policy: Optional[CheckpointPolicy] = None, *,
+                 worker_id: int = 0, num_workers: int = 1,
                  peer_roots: Optional[dict] = None,
-                 node: Optional[str] = None, registry=None):
-        assert mode in ("sync", "async")
-        assert shard_format in (1, 2)      # 1 = legacy writer (compat tests)
-        assert promote in PROMOTE_POLICIES
-        # delta (v3 chunk plane) and incremental (v1/v2 leaf reuse) are two
-        # answers to the same question; combining them would mix chunked and
-        # file-based leaves inside one manifest for no gain
-        assert not (delta and incremental), "delta and incremental are exclusive"
-        assert rebase_every >= 1
-        # the promote tier is a CACHE whose invalidation deletes files —
-        # pointing it at the primary tier would let a stale-cache cleanup
-        # destroy the committed checkpoints themselves
-        assert (
-            promote == "off" or promote_tier != tier
-        ), "promote_tier must differ from the primary checkpoint tier"
+                 node: Optional[str] = None, registry=None, **legacy):
+        """``CheckpointManager(store, CheckpointPolicy(...), worker_id=...)``.
+
+        The second argument carries POLICY (how checkpoints are written,
+        kept, promoted, restored — see ``checkpoint/policy.py``); the
+        keyword arguments carry IDENTITY (who this manager is inside the
+        cluster: worker/world ids, peer hints, registry handle).  The old
+        flat policy kwargs (``tier=``, ``delta=``, ``promote=``, …) still
+        work through a deprecation shim that builds the policy for you.
+        """
+        if legacy:
+            if policy is not None:
+                raise TypeError(
+                    "pass either a CheckpointPolicy or legacy policy "
+                    f"keywords, not both: {sorted(legacy)}")
+            unknown = set(legacy) - set(CheckpointPolicy.field_names())
+            if unknown:
+                raise TypeError(
+                    f"unknown CheckpointManager keyword(s): {sorted(unknown)}")
+            warnings.warn(
+                "CheckpointManager policy keywords "
+                f"({', '.join(sorted(legacy))}) are deprecated; pass a "
+                "CheckpointPolicy as the second positional argument instead",
+                DeprecationWarning, stacklevel=2)
+            policy = CheckpointPolicy(**legacy)
+        policy = policy if policy is not None else CheckpointPolicy()
+        self.policy = policy
         self.store = store
-        self.tier = tier
+        self.tier = policy.tier
         self.worker_id = worker_id
         self.num_workers = num_workers
-        self.replicas = replicas
-        self.mode = mode
-        self.incremental = incremental
+        self.replicas = policy.replicas
+        self.mode = policy.mode
+        self.incremental = policy.incremental
         # delta mode: saves go through the content-addressed chunk plane —
         # only chunks whose hash changed since the parent step are written,
         # and the manifest records the baseline+delta chain.  rebase_every
         # bounds the chain length (metadata hygiene: content addressing means
         # a "rebaseline" costs no extra payload writes, it only resets the
         # chain the manifest reports).
-        self.delta = delta
-        self.rebase_every = rebase_every
-        self.chunk_bytes = chunk_bytes or SER.DELTA_CHUNK_BYTES
-        # fingerprints (fingerprint=True and every precommit) view a chunk
-        # as a padded <u4 word stream, so an unaligned chunk size must fail
-        # HERE — not mid-save, and not on a pre-dump pool thread where the
-        # ValueError would only surface at the next wait()
-        if delta and (self.chunk_bytes < 4 or self.chunk_bytes % 4):
-            raise ValueError(
-                "delta chunk_bytes must be a positive multiple of 4 "
-                f"(fingerprint word stream), got {self.chunk_bytes}")
-        self.keep_last = keep_last
-        self.prefix = prefix
-        self.shard_format = shard_format
+        self.delta = policy.delta
+        self.rebase_every = policy.rebase_every
+        self.chunk_bytes = policy.chunk_bytes or SER.DELTA_CHUNK_BYTES
+        self.keep_last = policy.keep_last
+        self.prefix = policy.prefix
+        self.shard_format = policy.shard_format
         # restore_workers: 0 = auto-sized pool, 1 = serial (legacy loop, kept
         # as the benchmark baseline), N = pool of N readers
-        self.restore_workers = restore_workers
+        self.restore_workers = policy.restore_workers
         # fingerprint=True: delta saves stamp a 32-bit per-chunk fingerprint
         # into the manifest and use the parent step's fingerprints as a
         # dirty-chunk PRE-FILTER — fp-equal chunks skip blake2b entirely.
@@ -257,16 +257,16 @@ class CheckpointManager:
         # chunk) would be silently treated as clean; the default path keeps
         # the full-hash guarantee.  hash_workers sizes the parallel chunk
         # hash engine (0 = auto / $REPRO_HASH_WORKERS, 1 = serial).
-        self.fingerprint = fingerprint
-        self.hash_workers = hash_workers
+        self.fingerprint = policy.fingerprint
+        self.hash_workers = policy.hash_workers
         self._hash_engine: Optional[SER.ChunkHashEngine] = None
         # pre-dump (precommit) state: hashed/pre-written snapshot of a step,
         # produced on a background pool, consumed by the next _save_delta
         self._predump: Optional[dict] = None
         self._predump_pending = False
         self._predumper: Optional[WorkPool] = None
-        self.promote = promote
-        self.promote_tier = promote_tier
+        self.promote = policy.promote
+        self.promote_tier = policy.promote_tier
         # peer fabric: scheduler-provided warm-peer hint ({name: local_root})
         # plus an optional CacheRegistry for decentralized discovery; ``node``
         # is this manager's own cluster-node identity (what it publishes
@@ -275,13 +275,13 @@ class CheckpointManager:
                            for k, v in (peer_roots or {}).items()}
         self.node = node
         self.registry = registry
-        self._writer = AsyncWriter() if mode == "async" else None
+        self._writer = AsyncWriter() if self.mode == "async" else None
         # write-behind promotion: one copier, small bound — a restore returns
         # as soon as state is materialized; the tee into the node-local tier
         # trails it (and at most two promotions can be pending)
         self._promoter = (WorkPool(max_inflight=2, workers=1,
                                    name="ckpt-promote")
-                          if promote != "off" else None)
+                          if self.promote != "off" else None)
         self.promote_failures: list[str] = []
         self.promote_skipped = 0           # promotions dropped, pool was busy
         self.promote_cancelled = 0         # promotions aborted by GC mid-copy
@@ -295,6 +295,7 @@ class CheckpointManager:
         self._promo_inflight: dict[int, int] = {}
         self._promo_doomed: set[int] = set()
         self.last_restore_stats: Optional[dict] = None
+        self.last_orphan_sweep: Optional[dict] = None
         self._prev_manifest: Optional[dict] = None
 
     # ------------------------------------------------------------------
@@ -454,9 +455,12 @@ class CheckpointManager:
         AFTER the pre-dump are hashed and written inside the save stall.
 
         Pre-written chunks that the eventual save no longer references are
-        orphans no manifest will ever name: gc() cannot reap them (it only
-        walks manifests), so the consuming save sweeps them — see
-        ``_save_delta``.  Returns ``{"step", "snapshot_s"}``.
+        orphans no manifest will ever name: the manifest-walking part of
+        gc() cannot reap them, so the consuming save sweeps them directly
+        when it is the only writer (see ``_save_delta``), and the
+        coordinator's ``sweep_orphan_chunks`` pass reclaims them in
+        multi-worker runs (barriered on the in-flight intent markers this
+        pre-dump publishes).  Returns ``{"step", "snapshot_s"}``.
         """
         if not self.delta:
             raise ValueError("precommit requires delta mode")
@@ -468,6 +472,17 @@ class CheckpointManager:
         parent_hashes = manifest_chunk_hashes(parent) if parent else set()
 
         def do_predump():
+            # intent marker FIRST: the coordinator's orphan sweep
+            # (sweep_orphan_chunks) treats any fresh marker as "a writer may
+            # be mid-flight" and backs off, so chunks this pre-dump is about
+            # to write — referenced by no manifest yet — cannot be reaped
+            # from under it
+            marker_rel = self._inflight_rel("predump", step)
+            self.store.put(self.tier, marker_rel,
+                           json.dumps({"kind": "predump", "step": step,
+                                       "worker": self.worker_id,
+                                       "t": time.time()}).encode(),
+                           replicas=1)
             t1 = time.perf_counter()
             fps = {name: SER.fingerprint_chunks(
                        SER.as_byte_view(np.asarray(arr)), self.chunk_bytes)
@@ -486,6 +501,11 @@ class CheckpointManager:
             # before swapping.
             prev = self._predump
             written: set = set((prev or {}).get("written") or ())
+            # markers travel with the write set they protect: a superseded
+            # pre-dump's marker stays up until the save that consumes (and
+            # sweeps) the carried chunks finally lands
+            markers = list((prev or {}).get("markers") or ())
+            markers.append(marker_rel)
             leaves = {}
             for _, name, _arr in mine:
                 entries, views, leaf_crc = hashed[name]
@@ -503,7 +523,7 @@ class CheckpointManager:
                     written.add(h)
             self._predump = {
                 "step": step, "chunk_bytes": self.chunk_bytes,
-                "leaves": leaves, "written": written,
+                "leaves": leaves, "written": written, "markers": markers,
                 "hash_s": hash_s, "write_s": time.perf_counter() - t1,
             }
 
@@ -532,6 +552,11 @@ class CheckpointManager:
             self._predump_pending = False
         pre, self._predump = self._predump, None
         if pre is not None and pre.get("chunk_bytes") != self.chunk_bytes:
+            # invalidated pre-dump: its chunks become coordinator-sweep fodder
+            # the moment the intent markers come down (no save will ever
+            # reference or sweep them itself)
+            for rel in pre.get("markers") or ():
+                self.store.delete_file(self.tier, rel)
             return None
         return pre
 
@@ -565,6 +590,7 @@ class CheckpointManager:
         pre = self._consume_predump()
         pre_leaves = (pre or {}).get("leaves") or {}
         pre_written = (pre or {}).get("written") or set()
+        pre_markers = (pre or {}).get("markers") or []
         parent_leaves = {}
         if self.fingerprint and parent is not None:
             parent_leaves = {e["path"]: e for e in parent["leaves"]
@@ -668,6 +694,15 @@ class CheckpointManager:
             # pre-dump already wrote are skipped after an existence
             # re-check — a pre-dump chunk reaped since is rewritten (same
             # residual TOCTOU family the force=True note documents).
+            # intent marker before the first chunk write: fresh markers make
+            # the coordinator's sweep_orphan_chunks back off, so chunks of
+            # this not-yet-committed step are never mistaken for orphans
+            save_marker = self._inflight_rel("save", step)
+            self.store.put(self.tier, save_marker,
+                           json.dumps({"kind": "save", "step": step,
+                                       "worker": self.worker_id,
+                                       "t": time.time()}).encode(),
+                           replicas=1)
             t1 = time.perf_counter()
             written_b = written_c = predumped = 0
             for h, v in new_views.items():
@@ -687,8 +722,10 @@ class CheckpointManager:
                 # referenced by NO manifest ever — gc() walks manifests, so
                 # they would leak forever.  Single-worker only: with
                 # concurrent workers a same-content chunk could legitimately
-                # belong to another worker's in-flight save (known leak,
-                # see ROADMAP).  The spare set mirrors gc()'s contract — a
+                # belong to another worker's in-flight save; those orphans
+                # are reclaimed by the coordinator-side sweep_orphan_chunks
+                # pass instead (gc() runs it, barriered on the in-flight
+                # intent markers).  The spare set mirrors gc()'s contract — a
                 # chunk stays while ANY kept manifest references it: content
                 # can recur from an older retained step whose hash the
                 # parent manifest does not carry, and a pre-write of that
@@ -732,6 +769,16 @@ class CheckpointManager:
             self.store.put(
                 self.tier, f"{sdir}/wpart_{self.worker_id:05d}.json",
                 json.dumps(part).encode(), replicas=self.replicas)
+            # markers come down only AFTER the wpart is durable: from here on
+            # the sweep sees this save's chunks through the wpart's refs, so
+            # the handoff leaves no window where they are unprotected.  The
+            # consumed pre-dump's markers come down with it — surviving
+            # pre-written orphans are now sweepable by design (single-worker
+            # managers swept them above; multi-worker ones leave them to the
+            # coordinator's gc pass).
+            for rel in pre_markers:
+                self.store.delete_file(self.tier, rel)
+            self.store.delete_file(self.tier, save_marker)
 
         # the step-visible pause attributable to this save call: snapshot +
         # everything that ran synchronously here (in async mode the writes
@@ -887,8 +934,28 @@ class CheckpointManager:
         named, st = engine.restore(tier, by_file)
         return named, {"mode": "parallel", "tier": tier, **st.as_dict()}
 
-    def restore(self, template, step: Optional[int] = None):
-        """Returns (host_tree, manifest).
+    def restore(self, template, step: Optional[int] = None, *,
+                sources="auto", promote: Optional[bool] = None):
+        """Unified restore entry.  Returns (host_tree, manifest).
+
+        Dispatches on the MANIFEST (v1/v2 shard files vs v3 chunk plane),
+        not on which method the caller picked — the old ``restore_chunked``
+        and ``restore_from_peers`` names survive only as deprecated aliases
+        of this.  ``last_restore_stats`` is always populated with one schema
+        (see ``_finalize_stats``) whatever path served the bytes.
+
+        ``sources`` — ``"auto"`` (default) plans the full cascade: promoted
+        cache hit -> peer fabric -> own-stale-cache + primary tier.  An
+        explicit tier name or ordered list of tier names (e.g.
+        ``["local", "shared"]``) restores from exactly those, skipping
+        discovery — the serving-fleet follower uses this to pin its fetch
+        plan.
+
+        ``promote`` — ``None`` follows the manager's promote policy;
+        ``False`` forces a READ-ONLY restore: no promotion is scheduled and
+        a damaged promoted cache is missed, never invalidated (no marker
+        deletion).  Serving-fleet followers restore read-only mid-swap so a
+        concurrent decode replica never sees its cache torn down under it.
 
         Leaf-granular: for each shard file the manifest references, only the
         byte ranges of the referenced leaves are fetched, coalesced into
@@ -914,32 +981,104 @@ class CheckpointManager:
         if not all_steps:
             raise FileNotFoundError("no committed checkpoint found")
         step = all_steps[-1] if step is None else step
+        mutate = promote is not False
         named = manifest = stats = None
-        if self._promoter is not None:
-            got = self._restore_promoted(step)
-            if got is not None:
-                named, manifest, stats = got
-        if named is None and (self.peer_roots or self.registry is not None):
-            got = self._restore_from_peers(step)
-            if got is not None:
-                named, manifest, stats = got
-        if named is None:
+        if isinstance(sources, str) and sources != "auto":
+            sources = [sources]
+        if sources == "auto":
+            if self._promoter is not None or not mutate:
+                got = self._restore_promoted(step, mutate=mutate)
+                if got is not None:
+                    named, manifest, stats = got
+            if named is None and (self.peer_roots
+                                  or self.registry is not None):
+                got = self._restore_from_peers(step, mutate=mutate)
+                if got is not None:
+                    named, manifest, stats = got
+            if named is None:
+                manifest = self.read_manifest(step)
+                if (is_chunked_manifest(manifest)
+                        and self.promote_tier != self.tier):
+                    # the node's own — possibly STALE — promoted cache joins
+                    # the source list: content-addressed chunks stay valid
+                    # whatever step the cache marker names, so a requeued
+                    # warm-but-stale node reads unchanged chunks locally and
+                    # pays the primary tier only for the delta
+                    named, stats = self._restore_chunked(
+                        [self.promote_tier, self.tier], manifest)
+                else:
+                    named, stats = self._restore_files(self.tier, manifest)
+                if mutate:
+                    self._schedule_promotion(manifest)
+        else:
+            # pinned source plan: the manifest still comes from the primary
+            # tier (the commit marker lives there), payload bytes from
+            # exactly the tiers the caller listed, in order
+            sources = list(sources)
+            if not sources:
+                raise ValueError("sources must be 'auto' or a non-empty "
+                                 "tier list")
             manifest = self.read_manifest(step)
-            if is_chunked_manifest(manifest) and self.promote_tier != self.tier:
-                # the node's own — possibly STALE — promoted cache joins the
-                # source list: content-addressed chunks stay valid whatever
-                # step the cache marker names, so a requeued warm-but-stale
-                # node reads unchanged chunks locally and pays the primary
-                # tier only for the delta
-                named, stats = self._restore_chunked(
-                    [self.promote_tier, self.tier], manifest)
+            if is_chunked_manifest(manifest):
+                named, stats = self._restore_chunked(sources, manifest)
+            elif len(sources) == 1:
+                named, stats = self._restore_files(sources[0], manifest)
             else:
-                named, stats = self._restore_files(self.tier, manifest)
-            self._schedule_promotion(manifest)
+                engine = ParallelRestorer(self.store,
+                                          workers=self.restore_workers)
+                named, st = engine.restore_multi(sources,
+                                                 self._by_file(manifest))
+                stats = {"mode": "parallel", "tier": sources[-1],
+                         **st.as_dict()}
+            if mutate:
+                self._schedule_promotion(manifest)
         tree = SER.restore_tree(template, named)
         self._prev_manifest = manifest
-        self.last_restore_stats = stats
+        self.last_restore_stats = self._finalize_stats(stats, manifest)
         return tree, manifest
+
+    # every restore path lands stats in this shape; path-specific keys only
+    # ever ADD information (``promoted``/``peer`` stay falsy off-path)
+    _STAT_DEFAULTS = {
+        "mode": None, "tier": None, "workers": 1, "files": 0, "tasks": 0,
+        "bytes_read": 0, "bytes_by_tier": {}, "replica_fallbacks": 0,
+        "chunks": 0, "chunk_refs": 0, "sources": None,
+        "promoted": None, "peer": False, "peer_tiers": [], "delta": False,
+    }
+
+    def _finalize_stats(self, stats: dict, manifest: dict) -> dict:
+        """Normalize ``last_restore_stats`` to one schema whatever path
+        served the restore (serial shard loop, parallel engine, chunk
+        plane, promoted cache, peers): every key in ``_STAT_DEFAULTS`` is
+        present, plus ``step``/``manifest_version``."""
+        out = dict(self._STAT_DEFAULTS)
+        out["bytes_by_tier"] = {}
+        out["peer_tiers"] = []
+        out.update(stats)
+        if out["sources"] is None:
+            out["sources"] = [out["tier"]]
+        out["step"] = manifest.get("step")
+        out["manifest_version"] = manifest.get("manifest_version", 1)
+        return out
+
+    def restore_chunked(self, template, step: Optional[int] = None):
+        """Deprecated alias of the unified ``restore`` (which dispatches on
+        manifest version, so a chunked checkpoint routes through the chunk
+        plane without the caller picking a method)."""
+        warnings.warn(
+            "CheckpointManager.restore_chunked is deprecated; the unified "
+            "restore dispatches on manifest version",
+            DeprecationWarning, stacklevel=2)
+        return self.restore(template, step)
+
+    def restore_from_peers(self, template, step: Optional[int] = None):
+        """Deprecated alias of the unified ``restore`` (whose auto source
+        plan already prefers the peer fabric when peers are known)."""
+        warnings.warn(
+            "CheckpointManager.restore_from_peers is deprecated; the unified "
+            "restore plans peer sources automatically",
+            DeprecationWarning, stacklevel=2)
+        return self.restore(template, step)
 
     # -- peer cache fabric ---------------------------------------------
     def _peer_sources(self, step: int) -> tuple[list[str], list[str]]:
@@ -992,9 +1131,10 @@ class CheckpointManager:
                 stale.append((abs(cached - step), tier))
         return exact, [t for _, t in sorted(stale)]
 
-    def _restore_from_peers(self, step: int):
+    def _restore_from_peers(self, step: int, *, mutate: bool = True):
         """Multi-source restore of ``step`` from peers' promoted caches.
         Returns (named, manifest, stats) or None to fall through.
+        ``mutate=False`` suppresses the promotion tee (read-only follower).
 
         Full-shard (v1/v2) manifests keep the PR-4 fabric: only exact-step
         warm peers can serve, the manifest itself comes from a peer's
@@ -1041,8 +1181,9 @@ class CheckpointManager:
             except (SER.ChecksumError, OSError, ValueError, KeyError):
                 return None
             stats.update({"tier": "peer", "peer": True, "peer_tiers": peers})
-            self._schedule_promotion(manifest,
-                                     src_tiers=peers + [self.tier])
+            if mutate:
+                self._schedule_promotion(manifest,
+                                         src_tiers=peers + [self.tier])
             return named, manifest, stats
         if not peer_tiers:
             return None
@@ -1054,8 +1195,9 @@ class CheckpointManager:
             return None          # peers useless end to end: plain shared path
         stats = {"mode": "parallel", "tier": "peer", "peer": True,
                  "peer_tiers": peer_tiers, **st.as_dict()}
-        self._schedule_promotion(manifest,
-                                 src_tiers=peer_tiers + [self.tier])
+        if mutate:
+            self._schedule_promotion(manifest,
+                                     src_tiers=peer_tiers + [self.tier])
         return named, manifest, stats
 
     # -- shared -> local tier promotion --------------------------------
@@ -1118,14 +1260,16 @@ class CheckpointManager:
             self.promote_skipped += 1
             self._promo_unregister(step)
 
-    def _restore_promoted(self, step: int):
+    def _restore_promoted(self, step: int, *, mutate: bool = True):
         """Serve a restore entirely from the promoted tier when its cached
         step matches.  A stale marker (a newer step committed since the
         promotion — manifest-driven invalidation) just misses: the cached
         FILES are deliberately left in place so the follow-up promotion can
         reuse still-referenced incremental base shards and only copy the
         delta; ``_promote_now`` retires whatever the new manifest no longer
-        references."""
+        references.  ``mutate=False`` (read-only follower restore) treats a
+        damaged cache as a plain miss — it must never delete the marker of
+        a cache some OTHER consumer on this node may be serving from."""
         marker = self._read_marker()
         if marker is None or marker.get("step") != step:
             return None
@@ -1141,7 +1285,8 @@ class CheckpointManager:
         except (FileNotFoundError, ValueError, KeyError, OSError,
                 SER.ChecksumError):
             # damaged/evicted cache: drop it and fall back to the source tier
-            self.invalidate_promoted()
+            if mutate:
+                self.invalidate_promoted()
             return None
 
     def _promote_cancelled(self, step: int) -> bool:
@@ -1300,6 +1445,122 @@ class CheckpointManager:
         if self._promoter is not None:
             self._promoter.wait(timeout)
 
+    # -- multi-worker orphan-chunk sweep --------------------------------
+    def _inflight_rel(self, kind: str, step: int) -> str:
+        return (f"{self.prefix}/inflight/"
+                f"{kind}_{step:010d}_w{self.worker_id:05d}.json")
+
+    def _fresh_inflight(self, now: float, stale_s: float) -> list[str]:
+        """In-flight intent markers that are still live.  A marker older
+        than ``stale_s`` belongs to a writer that died mid-save (a live one
+        re-publishes per save/pre-dump); it is retired here so one crashed
+        worker cannot block orphan reclamation forever."""
+        fresh: list[str] = []
+        for rel in sorted(self.store.list_prefix(
+                self.tier, f"{self.prefix}/inflight")):
+            try:
+                t = float(json.loads(
+                    self.store.get(self.tier, rel).decode())["t"])
+            except (FileNotFoundError, ValueError, TypeError, KeyError,
+                    OSError):
+                t = None             # torn marker: age it out via mtime
+                try:
+                    t = self.store.mtime(self.tier, rel)
+                except (FileNotFoundError, OSError):
+                    continue
+            if now - t > stale_s:
+                self.store.delete_file(self.tier, rel)
+                continue
+            fresh.append(rel)
+        return fresh
+
+    def _uncommitted_chunk_refs(self, committed: set) -> set:
+        """Chunk hashes referenced by wparts of steps with NO manifest yet —
+        an in-flight commit's payload, which the sweep must treat exactly
+        like kept-manifest refs (the file plane's gc has the same rule:
+        never touch an uncommitted step dir)."""
+        out: set = set()
+        for rel in self.store.list_prefix(self.tier, self.prefix):
+            parts = Path(rel).parts
+            if (len(parts) < 2 or not parts[-2].startswith("step_")
+                    or not parts[-1].startswith("wpart_")):
+                continue
+            if int(parts[-2].split("_")[1]) in committed:
+                continue
+            try:
+                part = json.loads(self.store.get(self.tier, rel).decode())
+            except (FileNotFoundError, ValueError, OSError):
+                raise ValueError(f"unreadable in-flight wpart {rel}")
+            for e in part.get("leaves") or ():
+                out.update(c["hash"] for c in e.get("chunks") or ())
+        return out
+
+    def sweep_orphan_chunks(self, *,
+                            stale_marker_s: float = 900.0) -> dict:
+        """Coordinator-side reclamation of chunk files NO referent explains:
+        ``chunk_digests`` minus kept-manifest refs, minus uncommitted-wpart
+        refs, minus this manager's own pending pre-dump writes.  What
+        remains is multi-worker pre-dump fallout — chunks pre-written for a
+        step whose save no longer contains them — which the per-save sweep
+        deliberately leaves alone when other writers exist (see
+        ``_save_delta``).
+
+        Barriered against in-flight saves three ways: any FRESH intent
+        marker (``<prefix>/inflight/``, published by every delta save and
+        pre-dump before its first chunk write) defers the whole sweep;
+        markers are re-checked after candidate collection so a save that
+        started mid-sweep also defers it; and a candidate whose file mtime
+        is at/after the sweep's start is skipped — a writer that raced past
+        both marker checks re-touched it.  Crashed writers' markers age out
+        after ``stale_marker_s``.
+
+        Returns ``{"reaped": [hashes], "skipped": reason|None}`` (also
+        stored as ``last_orphan_sweep``)."""
+        t0 = time.time()
+        info: dict = {"reaped": [], "skipped": None}
+        self.last_orphan_sweep = info
+        if self._predump_pending:
+            # own pre-dump still materializing on the pool: its write set is
+            # unknown here, and its marker may not be on disk yet
+            info["skipped"] = "own pre-dump pending"
+            return info
+        if self._fresh_inflight(t0, stale_marker_s):
+            info["skipped"] = "in-flight saves"
+            return info
+        digests = self.store.chunk_digests(self.tier, self.prefix)
+        if not digests:
+            return info
+        try:
+            steps = self.steps()
+            kept = steps[-self.keep_last:] if self.keep_last else steps
+            keep: set = set()
+            for s in kept:
+                keep |= manifest_chunk_hashes(self.read_manifest(s))
+            keep |= self._uncommitted_chunk_refs(set(steps))
+        except (FileNotFoundError, ValueError, KeyError, OSError):
+            # can't PROVE a chunk unreferenced: leak it (bounded, the next
+            # sweep retries) rather than tear a restorable step
+            info["skipped"] = "unreadable manifest or wpart"
+            return info
+        if self._predump is not None:
+            keep |= set(self._predump.get("written") or ())
+        cands = sorted(digests - keep)
+        if not cands:
+            return info
+        if self._fresh_inflight(time.time(), stale_marker_s):
+            info["skipped"] = "in-flight saves"
+            return info
+        for h in cands:
+            rel = chunk_rel(self.prefix, h)
+            try:
+                if self.store.mtime(self.tier, rel) >= t0:
+                    continue          # (re)written since the sweep started
+            except (FileNotFoundError, OSError):
+                continue
+            self.store.delete_file(self.tier, rel)
+            info["reaped"].append(h)
+        return info
+
     # ------------------------------------------------------------------
     def gc(self) -> None:
         """Old manifests are always removed (a checkpoint 'exists' iff its
@@ -1380,6 +1641,12 @@ class CheckpointManager:
         live = set(chunk_refcounts(kept_manifests))
         for h in sorted(set(chunk_refcounts(retired_manifests)) - live):
             self.store.delete_file(self.tier, chunk_rel(self.prefix, h))
+        if self.delta and self.num_workers > 1:
+            # multi-worker pre-dump fallout is invisible to the manifest
+            # walk above (orphans are referenced by no manifest at all);
+            # the coordinator — the only caller of gc(), via commit() —
+            # reclaims it here, barriered on the in-flight intent markers
+            self.sweep_orphan_chunks()
 
     def close(self) -> None:
         try:

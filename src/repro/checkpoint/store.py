@@ -576,6 +576,18 @@ class TieredStore:
                 continue
         raise FileNotFoundError(f"{tier}:{rel}")
 
+    def mtime(self, tier: str, rel: str) -> float:
+        """Modification time of the first replica that has the file (the
+        orphan sweep's last-line race guard: a chunk re-touched after the
+        sweep started is a writer's, not an orphan)."""
+        for nd in self._node_dirs(tier):
+            p = nd / rel
+            try:
+                return p.stat().st_mtime
+            except OSError:
+                continue
+        raise FileNotFoundError(f"{tier}:{rel}")
+
     def get_range(self, tier: str, rel: str, offset: int, nbytes: int) -> bytes:
         """Ranged read with replica fallback on ``OSError``/short read (a
         truncated replica must not surface as silently-shorter data)."""

@@ -1,5 +1,6 @@
-"""Serving driver with pause/migrate/resume (the paper's C/R applied to
-inference state).
+"""Serving driver: pause/migrate/resume, plus serving-fleet weight-follow
+(the paper's C/R applied to inference state, and the chunk fabric applied to
+weight distribution).
 
   python -m repro.launch.serve --arch llama3.2-1b --reduced --batch 4 \
       --prompt-len 12 --gen 24 --snapshot-at 8 --ckpt-dir /tmp/serve
@@ -8,6 +9,16 @@ Prefills a batch of synthetic prompts, generates; if --snapshot-at is set,
 checkpoints the engine (KV caches + cursors) at that token, rebuilds a fresh
 engine, restores, and finishes — printing whether the continuation matched an
 unmigrated reference (it must, bit-for-bit).
+
+Fleet mode (``--follow``): the checkpoint prefix holds PARAMETER checkpoints
+pushed by a trainer (``CheckpointManager`` + ``registry.announce_push``).
+This replica restores the latest push read-only, serves batches, and between
+batches polls the push plane, fetches newer weights through the chunk
+fabric, and swaps them in at generation boundaries (never mid-decode) with
+staleness bounded by ``--max-lag-steps``:
+
+  python -m repro.launch.serve --arch llama3.2-1b --reduced --follow \
+      --ckpt-dir /tmp/weights --replica r0 --max-lag-steps 2 --batches 4
 """
 from __future__ import annotations
 
@@ -19,12 +30,60 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import TieredStore
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.sched.cache_registry import REGISTRY_DIRNAME, CacheRegistry
 from repro.serve.engine import Engine
+from repro.serve.weight_sync import ParamHandle, WeightSyncClient
+
+
+def follow(args) -> int:
+    """Serving-fleet follower: restore the latest pushed weights read-only,
+    then serve batches while tracking the push plane."""
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    mesh = make_host_mesh()
+    store = TieredStore(Path(args.ckpt_dir))
+    registry = CacheRegistry(Path(args.ckpt_dir) / REGISTRY_DIRNAME)
+    mgr = CheckpointManager(
+        store,
+        CheckpointPolicy(delta=args.delta, restore_workers=args.restore_workers),
+        node=args.replica, registry=registry)
+    template = jax.tree_util.tree_map(
+        np.asarray, M.init_params(cfg, jax.random.PRNGKey(args.seed)))
+    steps = mgr.steps()
+    if not steps:
+        print("no committed weight push found; start the publisher first",
+              file=sys.stderr)
+        return 1
+    to_dev = (lambda t: jax.tree_util.tree_map(jnp.asarray, t))
+    host, manifest = mgr.restore(template, promote=False)
+    handle = ParamHandle(to_dev(host), step=manifest["step"])
+    eng = Engine(cfg, mesh, handle, batch=args.batch, max_seq=args.max_seq)
+    client = WeightSyncClient(mgr, handle, template, registry=registry,
+                              replica=args.replica,
+                              max_lag_steps=args.max_lag_steps,
+                              to_native=to_dev)
+    rng = np.random.default_rng(args.seed)
+    shape = ((args.batch, args.prompt_len, cfg.num_codebooks)
+             if cfg.num_codebooks else (args.batch, args.prompt_len))
+    print(f"replica {args.replica}: serving step {manifest['step']}")
+    for b in range(args.batches):
+        client.sync_once()                   # fetch off the request path
+        client.ensure_fresh()                # staleness gate (--max-lag-steps)
+        prompts = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, shape), jnp.int32)}
+        eng.prefill(prompts)                 # boundary: staged push swaps in
+        eng.generate(args.gen)
+        print(f"batch {b}: served step {handle.step}, "
+              f"lag {client.lag()}, swaps {handle.swap_count}, "
+              f"swap_stall {handle.last_swap_s * 1e6:.0f}us")
+    mgr.close()
+    return 0
 
 
 def main(argv=None) -> int:
@@ -38,7 +97,22 @@ def main(argv=None) -> int:
     ap.add_argument("--snapshot-at", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_serve")
     ap.add_argument("--seed", type=int, default=0)
+    # fleet follower mode
+    ap.add_argument("--follow", action="store_true",
+                    help="serve as a weight-sync follower of --ckpt-dir")
+    ap.add_argument("--replica", default="r0",
+                    help="this replica's name in the registry fleet view")
+    ap.add_argument("--max-lag-steps", type=int, default=None,
+                    help="staleness bound: force a swap (or fail the "
+                         "replica) past this many steps behind the push")
+    ap.add_argument("--batches", type=int, default=4,
+                    help="--follow: request batches to serve before exit")
+    ap.add_argument("--delta", action="store_true", default=True,
+                    help="--follow: expect delta (chunked) weight pushes")
+    ap.add_argument("--restore-workers", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.follow:
+        return follow(args)
 
     cfg = get_config(args.arch)
     if args.reduced:

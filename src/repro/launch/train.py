@@ -26,7 +26,7 @@ from pathlib import Path
 
 import jax
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import TieredStore, node_local_tier_roots
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.core.cr_manager import CRManager
@@ -159,15 +159,19 @@ def main(argv=None) -> int:
                  for n, r in (prior.get("peer_roots") or {}).items()}
     registry = CacheRegistry(
         Path(args.ckpt_dir) / REGISTRY_DIRNAME)
-    ckpt = CheckpointManager(
-        store, worker_id=args.worker_id, num_workers=args.num_workers,
-        replicas=args.ckpt_replicas, mode=args.ckpt_mode,
-        incremental=args.ckpt_incremental,
-        delta=args.ckpt_delta, rebase_every=args.ckpt_rebase_every,
-        restore_workers=args.restore_workers,
-        fingerprint=args.ckpt_fingerprint, hash_workers=args.hash_workers,
-        promote=args.ckpt_promote, promote_tier=args.ckpt_promote_tier,
-        peer_roots=peers, node=node, registry=registry)
+    policy = CheckpointPolicy(replicas=args.ckpt_replicas,
+                              mode=args.ckpt_mode,
+                              incremental=args.ckpt_incremental,
+                              delta=args.ckpt_delta,
+                              rebase_every=args.ckpt_rebase_every,
+                              restore_workers=args.restore_workers,
+                              fingerprint=args.ckpt_fingerprint,
+                              hash_workers=args.hash_workers,
+                              promote=args.ckpt_promote,
+                              promote_tier=args.ckpt_promote_tier)
+    ckpt = CheckpointManager(store, policy, worker_id=args.worker_id,
+                             num_workers=args.num_workers, peer_roots=peers,
+                             node=node, registry=registry)
 
     if args.coordinator:
         host, port = args.coordinator.rsplit(":", 1)

@@ -143,3 +143,98 @@ class CacheRegistry:
                  if e["step"] != step and n not in ex
                  and (max_lag is None or abs(e["step"] - step) <= max_lag)]
         return {n: e for _, n, e in sorted(cands)}
+
+    # -- weight-push plane (serving fleet) ------------------------------
+    # The publisher (a fine-tune/RLHF trainer) announces each committed
+    # step; serving replicas poll the announcement to learn that a newer
+    # step exists WITHOUT listing the checkpoint prefix (one tiny JSON read
+    # per poll, whatever the fleet size), and publish their own sync state
+    # back so operators/schedulers can see fleet-wide lag in one listing.
+    # Same durability story as the cache entries: atomic writes, advisory
+    # reads — a replica that trusts a torn announcement merely polls again.
+
+    def _push_path(self) -> Path:
+        return self.root / "PUSH.json"
+
+    def announce_push(self, *, step: int, node: Optional[str] = None,
+                      manifest_version: Optional[int] = None,
+                      meta: Optional[dict] = None) -> dict:
+        """Publisher-side: advertise that ``step`` is committed and ready
+        for the fleet to pull (called after ``CheckpointManager.commit``
+        — the commit marker, not this announcement, is what makes the step
+        restorable; the announcement only saves followers the listing)."""
+        ann = {"step": int(step), "announced_at": time.time()}
+        if node:
+            ann["node"] = node
+        if manifest_version is not None:
+            ann["manifest_version"] = int(manifest_version)
+        if meta:
+            ann["meta"] = meta
+        self.root.mkdir(parents=True, exist_ok=True)
+        p = self._push_path()
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_text(json.dumps(ann))
+        tmp.rename(p)
+        return ann
+
+    def latest_push(self) -> Optional[dict]:
+        """Subscriber-side poll: the newest announcement, or None (absent
+        or torn — the follower keeps serving its current weights)."""
+        try:
+            ann = json.loads(self._push_path().read_text())
+        except (FileNotFoundError, ValueError, OSError):
+            return None
+        if isinstance(ann, dict) and isinstance(ann.get("step"), int):
+            return ann
+        return None
+
+    def _replica_path(self, replica: str) -> Path:
+        return self.root / "replicas" / f"{replica}.json"
+
+    def publish_replica(self, replica: str, *, step: Optional[int],
+                        target_step: Optional[int] = None,
+                        phase: str = "serving",
+                        stats: Optional[dict] = None) -> dict:
+        """Replica-side: record this serving replica's sync state (current
+        ``step``, the ``target_step`` it is converging to, a ``phase`` like
+        ``serving``/``fetching``/``swapping``/``stalled``, and the last
+        sync's fetch/swap stats).  One file per replica, atomic."""
+        entry = {
+            "replica": replica,
+            "step": step,
+            "phase": phase,
+            "updated_at": time.time(),
+        }
+        if target_step is not None:
+            entry["target_step"] = int(target_step)
+        if stats:
+            entry["stats"] = stats
+        p = self._replica_path(replica)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_name(p.name + ".tmp")
+        tmp.write_text(json.dumps(entry))
+        tmp.rename(p)
+        return entry
+
+    def replica_status(self) -> dict[str, dict]:
+        """Fleet view: every parseable replica entry, keyed by replica name,
+        each annotated with ``lag`` (latest announced step minus the
+        replica's step; None when either side is unknown)."""
+        out: dict[str, dict] = {}
+        rdir = self.root / "replicas"
+        if not rdir.is_dir():
+            return out
+        ann = self.latest_push()
+        latest = ann["step"] if ann else None
+        for p in sorted(rdir.glob("*.json")):
+            try:
+                e = json.loads(p.read_text())
+            except (ValueError, OSError):
+                continue
+            if not (isinstance(e, dict) and e.get("replica")):
+                continue
+            e["lag"] = (latest - e["step"]
+                        if latest is not None and isinstance(e.get("step"), int)
+                        else None)
+            out[e["replica"]] = e
+        return out

@@ -20,6 +20,7 @@ from repro.models import model as M
 from repro.models.layers import use_shard_resolver
 from repro.parallel.context import use_mesh_context
 from repro.parallel.mesh_rules import Rules
+from repro.serve.weight_sync import ParamHandle
 
 tree_map = jax.tree_util.tree_map
 
@@ -88,7 +89,13 @@ class Engine:
                  max_seq: int, impl: Optional[str] = None):
         self.cfg = cfg
         self.mesh = mesh
-        self.params = params
+        # swap-safe weights: the engine serves ``param_handle.current`` and
+        # commits a staged update (weight_sync's double buffer) only at
+        # generation boundaries — a decode loop can never see a torn tree.
+        # Passing a ParamHandle shares it with a WeightSyncClient; passing a
+        # bare tree keeps the old single-tree behavior.
+        self.param_handle = (params if isinstance(params, ParamHandle)
+                             else ParamHandle(params))
         self.batch = batch
         self.max_seq = max_seq
         self.decode, *_ = make_decode_step(
@@ -98,8 +105,20 @@ class Engine:
         self.cache = None
         self.last_tokens = None
 
+    @property
+    def params(self):
+        """The tree decode is currently serving (read-only view)."""
+        return self.param_handle.current
+
+    def maybe_swap(self) -> bool:
+        """Generation-boundary swap point: adopt a staged weight update, if
+        any.  Called automatically at the entry of ``prefill``/``generate``;
+        exposed so a serving loop can also swap between batches."""
+        return self.param_handle.commit_pending()
+
     def prefill(self, prompts: dict):
-        logits, cache = self.prefill_fn(self.params, prompts)
+        self.maybe_swap()
+        logits, cache = self.prefill_fn(self.param_handle.current, prompts)
         self.cache = cache
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if self.cfg.num_codebooks and nxt.ndim == 1:
@@ -107,12 +126,19 @@ class Engine:
         self.last_tokens = nxt
         return nxt
 
-    def generate(self, n: int):
+    def generate(self, n: int, on_token=None):
+        self.maybe_swap()
+        # captured ONCE: a weight push staged mid-loop (e.g. from an
+        # on_token callback or a sync thread) waits for the next boundary —
+        # all n tokens of this call come from one coherent tree
+        params = self.param_handle.current
         out = []
         for _ in range(n):
             self.cache, self.last_tokens, _ = self.decode(
-                self.params, self.cache, self.last_tokens)
+                params, self.cache, self.last_tokens)
             out.append(np.asarray(self.last_tokens))
+            if on_token is not None:
+                on_token(out[-1])
         return np.stack(out, axis=1)
 
     # --- C/R surface ---------------------------------------------------------

@@ -1,0 +1,250 @@
+"""Serving-fleet weight distribution on the checkpoint chunk fabric.
+
+The paper's C/R machinery moves TRAINING state between jobs; a production
+inference fleet needs the same bytes moved the other way — a fine-tune/RLHF
+trainer commits step N+1 as a delta checkpoint, and every serving replica
+must converge to it without dropping requests.  This module is that
+consumer:
+
+* ``ParamHandle`` double-buffers the parameter tree: decode always reads one
+  coherent tree, a newer one is STAGED off to the side, and the swap is a
+  pointer flip at a generation boundary — the only request-visible cost.
+* ``WeightSyncClient`` subscribes to the ``CacheRegistry`` push plane
+  (``announce_push``/``latest_push``), fetches a newer step through the
+  unified ``CheckpointManager.restore`` as a READ-ONLY follower
+  (``promote=False`` — never invalidates or promotes cache markers some
+  other replica on the node may be serving from), stages it, and publishes
+  per-replica sync state (step, lag, bytes by tier, swap stall) back
+  through the registry.
+
+Because the fetch rides the chunk plane's own-cache -> exact-peer ->
+stale-peer -> shared resolution, a warm-but-stale replica pulls only the
+chunks the new step changed — fleet-wide shared-tier traffic is ~delta
+size, not N x full model size (see benchmarks/bench_weight_push.py).
+
+Deliberately jax-free: trees are whatever the caller serves (the engine
+passes device arrays through ``to_native``), so the unit tests drive the
+whole protocol on numpy.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class StaleReplicaError(RuntimeError):
+    """A replica exceeded its staleness bound and could not close the gap."""
+
+
+class ParamHandle:
+    """Double-buffered parameter tree.
+
+    ``current`` is what decode reads; ``stage()`` parks a newer tree without
+    touching it; ``commit_pending()`` flips the pointer.  The flip is the
+    ONLY mutation ``current`` ever sees, so a generation loop that captures
+    ``current`` once can never observe a torn update — the swap lands at
+    the next capture point (the engine calls ``commit_pending()`` exactly
+    at generation boundaries).
+    """
+
+    def __init__(self, tree, step: Optional[int] = None):
+        self._lock = threading.Lock()
+        self._current = tree
+        self._step = step
+        self._pending: Optional[tuple] = None      # (tree, step)
+        self.swap_count = 0
+        self.last_swap_s = 0.0                     # request-visible stall
+
+    @property
+    def current(self):
+        with self._lock:
+            return self._current
+
+    @property
+    def step(self) -> Optional[int]:
+        with self._lock:
+            return self._step
+
+    @property
+    def pending_step(self) -> Optional[int]:
+        with self._lock:
+            return self._pending[1] if self._pending is not None else None
+
+    @property
+    def newest_step(self) -> Optional[int]:
+        """The step this handle has BYTES for (staged counts — it is one
+        pointer flip away), which is what staleness is measured against."""
+        with self._lock:
+            return self._pending[1] if self._pending is not None else self._step
+
+    def stage(self, tree, step: Optional[int]) -> None:
+        """Park a newer tree; a later stage before the swap supersedes it
+        (the fleet converges to the NEWEST push, intermediate ones are
+        skippable by design — bounded staleness, not a replay log)."""
+        with self._lock:
+            self._pending = (tree, step)
+
+    def commit_pending(self) -> bool:
+        """Flip to the staged tree, if any.  Returns True when a swap
+        happened.  ``last_swap_s`` times exactly this flip — the fetch that
+        produced the staged tree ran off the request path."""
+        with self._lock:
+            if self._pending is None:
+                return False
+            t0 = time.perf_counter()
+            self._current, self._step = self._pending
+            self._pending = None
+            self.swap_count += 1
+            self.last_swap_s = time.perf_counter() - t0
+            return True
+
+
+class WeightSyncClient:
+    """One serving replica's subscription to the weight-push plane.
+
+    ``manager`` is a READ-ONLY follower ``CheckpointManager`` (typically
+    ``promote="off"``; every restore here passes ``promote=False`` anyway);
+    ``handle`` is the engine's ``ParamHandle``; ``template`` a same-shape
+    host tree for ``restore``.  ``sources`` pins the fetch plan
+    (``"auto"`` plans own-cache -> peers -> shared).  ``to_native``
+    converts the restored host tree into whatever the engine serves
+    (device placement) BEFORE it is staged, so the boundary swap stays a
+    pointer flip.
+    """
+
+    def __init__(self, manager, handle: ParamHandle, template, *,
+                 registry=None, replica: Optional[str] = None,
+                 max_lag_steps: Optional[int] = None, sources="auto",
+                 to_native: Optional[Callable] = None):
+        self.manager = manager
+        self.handle = handle
+        self.template = template
+        self.registry = registry if registry is not None else manager.registry
+        self.replica = replica or manager.node or "replica"
+        self.max_lag_steps = max_lag_steps
+        self.sources = sources
+        self.to_native = to_native
+        self.history: list[dict] = []          # one record per applied sync
+
+    # -- push-plane polling --------------------------------------------
+    def published_step(self) -> Optional[int]:
+        """Newest step the publisher advertised.  One tiny registry read
+        per poll; falls back to listing committed manifests only when no
+        announcement exists (cold registry / out-of-band publisher)."""
+        if self.registry is not None:
+            ann = self.registry.latest_push()
+            if ann is not None:
+                return ann["step"]
+        steps = self.manager.steps()
+        return steps[-1] if steps else None
+
+    def lag(self) -> Optional[int]:
+        """Published step minus the newest step this replica has bytes for
+        (staged-but-unswapped counts; None when either side is unknown)."""
+        target = self.published_step()
+        have = self.handle.newest_step
+        if target is None or have is None:
+            return None
+        return max(0, target - have)
+
+    # -- sync ----------------------------------------------------------
+    def sync_once(self) -> Optional[dict]:
+        """Poll; if a newer step is published, fetch its delta and stage it.
+        Returns the sync record (also appended to ``history``) or None when
+        already current.  The fetch never blocks decode — the engine keeps
+        serving ``handle.current`` until its next boundary swap."""
+        target = self.published_step()
+        have = self.handle.newest_step
+        if target is None or (have is not None and target <= have):
+            self._publish_status(phase="serving")
+            return None
+        self._publish_status(phase="fetching", target_step=target)
+        t0 = time.perf_counter()
+        try:
+            tree, manifest = self.manager.restore(
+                self.template, target, sources=self.sources, promote=False)
+        except FileNotFoundError:
+            # announced but not (yet) visible — a paused or failed publisher
+            # mid-push.  Keep serving the current weights; ensure_fresh()'s
+            # staleness bound decides when that stops being acceptable.
+            self._publish_status(phase="serving")
+            return None
+        fetch_s = time.perf_counter() - t0
+        if self.to_native is not None:
+            tree = self.to_native(tree)
+        self.handle.stage(tree, target)
+        stats = self.manager.last_restore_stats or {}
+        rec = {
+            "step": target,
+            "from_step": have,
+            "fetch_s": fetch_s,
+            "bytes_read": stats.get("bytes_read", 0),
+            "bytes_by_tier": dict(stats.get("bytes_by_tier") or {}),
+            "chunks": stats.get("chunks", 0),
+            "delta": stats.get("delta", False),
+            "manifest_version": manifest.get("manifest_version", 1),
+        }
+        self.history.append(rec)
+        self._publish_status(phase="staged", target_step=target, stats=rec)
+        return rec
+
+    def ensure_fresh(self) -> int:
+        """Staleness gate for the serving loop: when the bound is exceeded,
+        sync and force a swap AT THIS BOUNDARY before another request is
+        decoded; raise ``StaleReplicaError`` only if even that cannot close
+        the gap (torn fabric — serving stale beyond the bound is worse than
+        failing the replica out of rotation).  Returns the lag after the
+        gate.  With no bound configured this never blocks or raises."""
+        lag = self.lag()
+        if (self.max_lag_steps is None or lag is None
+                or lag <= self.max_lag_steps):
+            return lag or 0
+        self.sync_once()
+        self.handle.commit_pending()
+        lag = self.lag() or 0
+        if lag > self.max_lag_steps:
+            self._publish_status(phase="stalled")
+            raise StaleReplicaError(
+                f"replica {self.replica} is {lag} steps behind the "
+                f"published weights (bound {self.max_lag_steps})")
+        return lag
+
+    # -- registry status ------------------------------------------------
+    def _publish_status(self, *, phase: str,
+                        target_step: Optional[int] = None,
+                        stats: Optional[dict] = None) -> None:
+        if self.registry is None:
+            return
+        try:
+            self.registry.publish_replica(
+                self.replica, step=self.handle.step,
+                target_step=target_step, phase=phase, stats=stats)
+        except OSError:
+            pass        # advisory, like every registry write: an unwritable
+            #             inventory must never take the replica down
+
+    # -- follower loop (launch/serve.py --follow) ----------------------
+    def follow(self, *, poll_s: float = 0.5,
+               stop: Optional[threading.Event] = None,
+               on_sync: Optional[Callable[[dict], None]] = None,
+               max_polls: Optional[int] = None) -> int:
+        """Poll/fetch/stage until ``stop`` is set (or ``max_polls`` polls
+        ran).  Swaps are still the ENGINE's business at its generation
+        boundaries; this loop only keeps the staged side fresh.  Returns
+        the number of syncs applied."""
+        n = polls = 0
+        while not (stop is not None and stop.is_set()):
+            rec = self.sync_once()
+            if rec is not None:
+                n += 1
+                if on_sync is not None:
+                    on_sync(rec)
+            polls += 1
+            if max_polls is not None and polls >= max_polls:
+                break
+            if stop is not None:
+                stop.wait(poll_s)
+            else:
+                time.sleep(poll_s)
+        return n

@@ -26,7 +26,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 import faults
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import (TieredStore, is_peer_tier,
                                     node_local_tier_roots)
 from repro.core.requeue import RequeueFile, WalltimeTracker, detect_node
@@ -99,7 +99,7 @@ def main(argv=None) -> int:
         peers = parse_peer_roots(os.environ.get(ENV_PEER_ROOTS))
     elif args.peer_discovery == "registry":
         registry = CacheRegistry(Path(args.ckpt_dir) / REGISTRY_DIRNAME)
-    m = CheckpointManager(store, replicas=args.replicas, promote=args.promote,
+    m = CheckpointManager(store, CheckpointPolicy(replicas=args.replicas, promote=args.promote),
                           peer_roots=peers, node=node, registry=registry)
 
     if args.mode == "kill-mid-promotion" and attempt == args.kill_on_attempt:

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import TieredStore
 
 
@@ -44,7 +44,7 @@ def test_shard_crc_detects_corruption(rng):
 
 def test_manager_commit_is_atomic(tmp_path, rng):
     store = TieredStore(tmp_path)
-    m = CheckpointManager(store, keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(keep_last=10))
     tree = _tree(rng)
     m.save(5, tree)
     # no manifest yet -> restore fails (two-phase: WRITTEN but not committed)
@@ -73,7 +73,7 @@ def test_manager_multiworker_parts(tmp_path, rng):
 
 def test_incremental_reuses_unchanged(tmp_path, rng):
     store = TieredStore(tmp_path)
-    m = CheckpointManager(store, incremental=True, keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=10))
     tree = _tree(rng)
     m.save(1, tree)
     m.commit(1)
@@ -93,7 +93,7 @@ def test_incremental_reuses_unchanged(tmp_path, rng):
 def test_replica_fallback_on_corruption(tmp_path, rng):
     store = TieredStore(tmp_path)
     # shared tier has 8 node dirs; write 2 replicas
-    m = CheckpointManager(store, replicas=2)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=2))
     tree = _tree(rng)
     m.save(3, tree)
     m.commit(3)
@@ -109,7 +109,7 @@ def test_replica_fallback_on_corruption(tmp_path, rng):
 
 def test_gc_keeps_incremental_bases(tmp_path, rng):
     store = TieredStore(tmp_path)
-    m = CheckpointManager(store, incremental=True, keep_last=2)
+    m = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=2))
     tree = _tree(rng)
     for s in range(1, 6):
         t = dict(tree)

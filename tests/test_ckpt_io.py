@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import TieredStore
 
 
@@ -95,7 +95,7 @@ def test_v1_checkpoint_restores_through_new_manager(tmp_path, rng):
     """A checkpoint written via the legacy v1 path (seed byte layout) restores
     through the new ranged-read manager."""
     store = TieredStore(tmp_path)
-    m1 = CheckpointManager(store, shard_format=1)
+    m1 = CheckpointManager(store, CheckpointPolicy(shard_format=1))
     tree = _tree(rng)
     m1.save(3, tree)
     m1.commit(3)
@@ -150,8 +150,8 @@ def test_crc_computed_once_per_leaf(tmp_path, rng, monkeypatch, incremental):
     writer (plain mode) or pre-computed as the diff key and trusted by the
     writer (incremental mode) — never both."""
     store = TieredStore(tmp_path)
-    m = CheckpointManager(store, replicas=2, incremental=incremental,
-                          keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=2, incremental=incremental, keep_last=10))
     tree = _tree(rng)
     n_leaves = len(SER.flatten_with_names(tree))
     if incremental:
@@ -289,7 +289,7 @@ def test_get_falls_back_on_oserror(tmp_path, monkeypatch):
 
 def test_single_leaf_restore_reads_fewer_bytes(tmp_path, rng):
     store = CountingStore(tmp_path)
-    m = CheckpointManager(store, replicas=1)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1))
     tree = _tree(rng)
     m.save(1, tree)
     m.commit(1)
@@ -307,7 +307,7 @@ def test_incremental_restore_skips_stale_base_leaves(tmp_path, rng):
     an old base shard must not re-read the base wholesale — the superseded
     (stale) byte ranges in the base are never fetched."""
     store = CountingStore(tmp_path)
-    m = CheckpointManager(store, incremental=True, keep_last=10, replicas=1)
+    m = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=10, replicas=1))
     tree = _tree(rng)
     tree["big"] = rng.standard_normal((256, 1024)).astype(np.float32)  # 1 MB
     m.save(1, tree)
@@ -364,15 +364,15 @@ def test_gc_cleans_parts_from_different_worker_count(tmp_path, rng):
     tree = _tree(rng)
     # step 1 written by THREE workers
     for w in range(3):
-        mw = CheckpointManager(store, worker_id=w, num_workers=3,
-                               incremental=True, keep_last=2)
+        mw = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=2), worker_id=w,
+                               num_workers=3)
         mw.save(1, tree)
-    m3 = CheckpointManager(store, worker_id=0, num_workers=3,
-                           incremental=True, keep_last=2)
+    m3 = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=2), worker_id=0,
+                           num_workers=3)
     m3.commit(1, num_workers=3)
     # elastic restart: ONE worker continues incrementally, reusing step-1 files
-    m1 = CheckpointManager(store, worker_id=0, num_workers=1,
-                           incremental=True, keep_last=2)
+    m1 = CheckpointManager(store, CheckpointPolicy(incremental=True, keep_last=2), worker_id=0,
+                           num_workers=1)
     m1.restore(tree)
     for s in (2, 3, 4):
         t = dict(tree)
@@ -400,7 +400,7 @@ def test_gc_cleans_parts_from_different_worker_count(tmp_path, rng):
 
 def test_async_pool_save_commit_restore(tmp_path, rng):
     store = TieredStore(tmp_path)
-    m = CheckpointManager(store, mode="async", keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(mode="async", keep_last=10))
     tree = _tree(rng)
     for s in (1, 2, 3):
         t = dict(tree)

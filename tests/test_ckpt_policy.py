@@ -1,0 +1,174 @@
+"""CheckpointPolicy: validation, the legacy-kwarg deprecation shim, and the
+unified restore entry (deprecated aliases + one stats schema for every path).
+
+The tier-1 run treats the shim's DeprecationWarnings as ERRORS (pyproject
+``filterwarnings``); the shim tests below opt in via ``pytest.warns``, which
+is exactly the contract: new code never sees the warning, code exercising the
+old surface must acknowledge it.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+from repro.checkpoint.policy import PROMOTE_POLICIES
+from repro.checkpoint.store import TieredStore
+from repro.checkpoint import serialization as SER
+
+CHUNK = 1 << 16
+
+
+def _tree(rng, n_leaves=4, elems=50_000):
+    return {f"l{i}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _assert_trees_equal(got, want):
+    flat_g = dict(SER.flatten_with_names(got))
+    flat_w = dict(SER.flatten_with_names(want))
+    assert set(flat_g) == set(flat_w)
+    for k in flat_w:
+        np.testing.assert_array_equal(flat_g[k], flat_w[k])
+
+
+# ---------------------------------------------------------------------------
+# validation: an invalid combination fails at construction, with a message
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kw,msg", [
+    ({"mode": "turbo"}, "mode must be"),
+    ({"shard_format": 9}, "shard_format must be"),
+    ({"promote": "always"}, "promote must be"),
+    ({"delta": True, "incremental": True}, "exclusive"),
+    ({"rebase_every": 0}, "rebase_every"),
+    ({"promote": "eager", "promote_tier": "shared"}, "must differ"),
+    ({"delta": True, "chunk_bytes": 6}, "multiple of 4"),
+    ({"delta": True, "chunk_bytes": 0}, "multiple of 4"),
+])
+def test_policy_validation_errors(kw, msg):
+    with pytest.raises(ValueError, match=msg):
+        CheckpointPolicy(**kw)
+
+
+def test_policy_unaligned_chunk_bytes_ok_without_delta():
+    # the word-stream constraint is the delta plane's; a non-delta manager
+    # never fingerprints, so the same value must NOT fail there
+    CheckpointPolicy(chunk_bytes=6)
+
+
+def test_policy_is_frozen_and_promote_policies_exported():
+    pol = CheckpointPolicy()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.tier = "local"  # type: ignore[misc]
+    assert pol.promote in PROMOTE_POLICIES
+    assert set(CheckpointPolicy.field_names()) >= {
+        "tier", "replicas", "prefix", "mode", "shard_format", "incremental",
+        "delta", "chunk_bytes", "rebase_every", "fingerprint", "hash_workers",
+        "keep_last", "restore_workers", "promote", "promote_tier"}
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: old flat kwargs behave exactly like the policy object
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_equal_policy_object(tmp_path, rng):
+    tree = _tree(rng)
+    with pytest.warns(DeprecationWarning, match="CheckpointPolicy"):
+        old = CheckpointManager(TieredStore(tmp_path / "a", seed=0),
+                                replicas=1, delta=True, chunk_bytes=CHUNK,
+                                keep_last=5)
+    new = CheckpointManager(
+        TieredStore(tmp_path / "b", seed=0),
+        CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                         keep_last=5))
+    # the shim builds the SAME policy value...
+    assert old.policy == new.policy
+    for f in CheckpointPolicy.field_names():
+        if f == "chunk_bytes":
+            continue            # manager resolves None -> DELTA_CHUNK_BYTES
+        assert getattr(old, f) == getattr(new, f), f
+    # ...and the same behavior: identical manifests for identical input
+    for m in (old, new):
+        m.save(1, tree)
+        man = m.commit(1)
+        assert man["manifest_version"] == 2         # chunked (delta) plane
+        out, _ = m.restore(tree)
+        _assert_trees_equal(out, tree)
+        m.close()
+
+
+def test_legacy_kwargs_plus_policy_is_an_error(tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    with pytest.raises(TypeError, match="not both"):
+        CheckpointManager(store, CheckpointPolicy(), replicas=1)
+
+
+def test_unknown_kwarg_is_an_error_not_a_warning(tmp_path):
+    store = TieredStore(tmp_path, seed=0)
+    with pytest.raises(TypeError, match="unknown"):
+        CheckpointManager(store, replicaz=1)
+
+
+# ---------------------------------------------------------------------------
+# unified restore: one entry point, one stats schema, deprecated aliases
+# ---------------------------------------------------------------------------
+
+# every restore path must populate last_restore_stats with AT LEAST these
+STAT_KEYS = {"mode", "tier", "workers", "files", "bytes_read", "bytes_by_tier",
+             "replica_fallbacks", "chunks", "chunk_refs", "sources",
+             "promoted", "peer", "peer_tiers", "delta", "step",
+             "manifest_version"}
+
+
+def _committed(tmp_path, rng, **pol):
+    store = TieredStore(tmp_path, seed=0)
+    tree = _tree(rng)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, **pol))
+    m.save(1, tree)
+    m.commit(1)
+    return store, tree, m
+
+
+@pytest.mark.parametrize("pol", [
+    {},                                            # v2 file plane, serial
+    {"restore_workers": 4},                        # v2 file plane, parallel
+    {"delta": True, "chunk_bytes": CHUNK},         # v3 chunk plane
+])
+def test_restore_stats_schema_is_uniform(tmp_path, rng, pol):
+    _, tree, m = _committed(tmp_path, rng, **pol)
+    out, man = m.restore(tree)
+    _assert_trees_equal(out, tree)
+    stats = m.last_restore_stats
+    assert STAT_KEYS <= set(stats), STAT_KEYS - set(stats)
+    assert stats["step"] == man["step"] == 1
+    assert isinstance(stats["sources"], list) and stats["sources"]
+    assert stats["manifest_version"] == man.get("manifest_version", 1)
+    assert stats["delta"] == bool(pol.get("delta"))
+    m.close()
+
+
+def test_restore_explicit_sources(tmp_path, rng):
+    _, tree, m = _committed(tmp_path, rng, delta=True, chunk_bytes=CHUNK)
+    out, _ = m.restore(tree, sources="shared")      # string = one source
+    _assert_trees_equal(out, tree)
+    assert m.last_restore_stats["sources"] == ["shared"]
+    out, _ = m.restore(tree, sources=["shared"])    # list form, same thing
+    _assert_trees_equal(out, tree)
+    with pytest.raises(ValueError):
+        m.restore(tree, sources=[])
+    m.close()
+
+
+def test_deprecated_restore_aliases_still_work(tmp_path, rng):
+    _, tree, m = _committed(tmp_path, rng, delta=True, chunk_bytes=CHUNK)
+    want, want_man = m.restore(tree)
+    with pytest.warns(DeprecationWarning, match="unified restore"):
+        out, man = m.restore_chunked(tree)
+    _assert_trees_equal(out, want)
+    assert man["step"] == want_man["step"]
+    with pytest.warns(DeprecationWarning, match="unified restore"):
+        out2, man2 = m.restore_from_peers(tree)
+    _assert_trees_equal(out2, want)
+    assert man2["step"] == want_man["step"]
+    m.close()

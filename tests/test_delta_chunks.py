@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import (CheckpointManager, is_chunked_manifest,
+from repro.checkpoint.manager import (CheckpointManager, CheckpointPolicy, is_chunked_manifest,
                                       manifest_payload_map)
 from repro.checkpoint.restore_engine import (ENV_RESTORE_WORKERS,
                                              ParallelRestorer, auto_workers)
@@ -116,12 +116,12 @@ def test_v3_index_rejected_by_payload_readers(rng):
 def test_delta_save_writes_only_changed_chunks(rng, tmp_path):
     tree = _tree(rng)
     full_store = TieredStore(tmp_path / "full", seed=0)
-    CheckpointManager(full_store, replicas=1).save(1, tree)
+    CheckpointManager(full_store, CheckpointPolicy(replicas=1)).save(1, tree)
     full_bytes = full_store.size(
         "shared", "ckpt/step_0000000001/shard_w00000.bin")
 
     store = TieredStore(tmp_path / "delta", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     p1 = m.save(1, tree)
     man1 = m.commit(1)
     assert man1["manifest_version"] == 2
@@ -138,7 +138,7 @@ def test_delta_save_writes_only_changed_chunks(rng, tmp_path):
     assert 0 < written < 0.2 * full_bytes
     assert p2["delta"]["chunks_written"] <= 2   # one touched chunk (+ slack)
 
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree2)
     m.close()
 
@@ -151,15 +151,15 @@ def test_delta_restore_byte_identical_to_full_shard_restore(rng, tmp_path):
     tree2 = _mutate(tree, ["l01", "l03"])
     d_store = TieredStore(tmp_path / "d", seed=0)
     f_store = TieredStore(tmp_path / "f", seed=0)
-    dm = CheckpointManager(d_store, replicas=1, delta=True, chunk_bytes=CHUNK)
-    fm = CheckpointManager(f_store, replicas=1)
+    dm = CheckpointManager(d_store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
+    fm = CheckpointManager(f_store, CheckpointPolicy(replicas=1))
     for step, t in ((1, tree), (2, tree2)):
         dm.save(step, t)
         dm.commit(step)
         fm.save(step, t)
         fm.commit(step)
-    got_d, man_d = CheckpointManager(d_store, replicas=1).restore(tree)
-    got_f, man_f = CheckpointManager(f_store, replicas=1).restore(tree)
+    got_d, man_d = CheckpointManager(d_store, CheckpointPolicy(replicas=1)).restore(tree)
+    got_f, man_f = CheckpointManager(f_store, CheckpointPolicy(replicas=1)).restore(tree)
     assert man_d["step"] == man_f["step"] == 2
     for k in tree:
         a, b = np.asarray(got_d[k]), np.asarray(got_f[k])
@@ -170,8 +170,9 @@ def test_delta_restore_byte_identical_to_full_shard_restore(rng, tmp_path):
 
 def test_delta_chain_rebaselines_at_limit(rng, tmp_path):
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          rebase_every=3, keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, rebase_every=3,
+        keep_last=10))
     tree = _tree(rng, n_leaves=2)
     chains = []
     for step in range(1, 6):
@@ -188,10 +189,10 @@ def test_delta_worker_baseline_tracks_committed_frontier(rng, tmp_path):
     at whatever it last restored — else per-step deltas grow with total
     drift and can reference retired chunks."""
     store = TieredStore(tmp_path, seed=0)
-    worker = CheckpointManager(store, replicas=1, delta=True,
-                               chunk_bytes=CHUNK)
-    committer = CheckpointManager(store, replicas=1, delta=True,
-                                  chunk_bytes=CHUNK, keep_last=2)
+    worker = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
+    committer = CheckpointManager(store,
+                                  CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                                                   keep_last=2))
     tree = _tree(rng)
     worker.save(1, tree)
     committer.commit(1)
@@ -202,7 +203,7 @@ def test_delta_worker_baseline_tracks_committed_frontier(rng, tmp_path):
         # one mutated chunk per step — against the frontier, not step 1
         assert p["delta"]["parent_step"] == step - 1, p["delta"]
         assert p["delta"]["chunks_new"] == 1, p["delta"]
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree)
     worker.close()
     committer.close()
@@ -213,20 +214,20 @@ def test_v1_v2_and_nondelta_saves_still_restore(rng, tmp_path):
     full-shard checkpoints (v1 or v2) from the same store."""
     tree = _tree(rng, n_leaves=2)
     store = TieredStore(tmp_path, seed=0)
-    CheckpointManager(store, replicas=1, shard_format=1).save(1, tree)
-    CheckpointManager(store, replicas=1, shard_format=1).commit(1)
-    got1, _ = CheckpointManager(store, replicas=1).restore(tree, step=1)
+    CheckpointManager(store, CheckpointPolicy(replicas=1, shard_format=1)).save(1, tree)
+    CheckpointManager(store, CheckpointPolicy(replicas=1, shard_format=1)).commit(1)
+    got1, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree, step=1)
     _assert_trees_equal(got1, tree)
 
     tree2 = _mutate(tree, ["l00"])
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          keep_last=10)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK, keep_last=10))
     m.save(2, tree2)
     man2 = m.commit(2)
     assert is_chunked_manifest(man2)
-    got1, _ = CheckpointManager(store, replicas=1).restore(tree, step=1)
+    got1, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree, step=1)
     _assert_trees_equal(got1, tree)
-    got2, _ = CheckpointManager(store, replicas=1).restore(tree, step=2)
+    got2, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree, step=2)
     _assert_trees_equal(got2, tree2)
     m.close()
 
@@ -239,14 +240,16 @@ def test_multi_worker_delta_dedups_across_workers(rng, tmp_path):
         40_000).astype(np.float32)}
     store = TieredStore(tmp_path, seed=0)
     for w in range(2):
-        CheckpointManager(store, worker_id=w, num_workers=2, replicas=1,
-                          delta=True, chunk_bytes=CHUNK).save(1, tree)
-    man = CheckpointManager(store, num_workers=2, replicas=1,
-                            delta=True).commit(1, num_workers=2)
+        CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True,
+                                           chunk_bytes=CHUNK),
+                          worker_id=w, num_workers=2).save(1, tree)
+    man = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True),
+                            num_workers=2).commit(1, num_workers=2)
     hashes = manifest_chunk_hashes(man)
     # identical leaves -> identical chunk lists -> dedup'd on disk
     assert len(store.chunk_digests("shared", "ckpt")) == len(hashes)
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree)
 
 
@@ -261,11 +264,11 @@ def test_delta_roundtrips_zero_size_and_scalar_leaves(rng, tmp_path):
         "normal": rng.standard_normal(10_000).astype(np.float32),
     }
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     m.save(1, tree)
     man = m.commit(1)
     assert is_chunked_manifest(man)
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     for k, a in tree.items():
         b = got[k]
         assert np.asarray(b).dtype == np.asarray(a).dtype, k
@@ -280,8 +283,8 @@ def test_delta_roundtrips_zero_size_and_scalar_leaves(rng, tmp_path):
 
 def test_gc_reaps_only_dead_chunks(rng, tmp_path):
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          keep_last=1)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK, keep_last=1))
     tree = _tree(rng)
     m.save(1, tree)
     man1 = m.commit(1)
@@ -294,7 +297,7 @@ def test_gc_reaps_only_dead_chunks(rng, tmp_path):
     assert present == h2                     # live chunks exactly
     assert h1 - h2                           # something WAS reaped
     assert chunk_refcounts([man2]) == {h: 1 for h in h2}
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree2)
     m.close()
 
@@ -304,8 +307,8 @@ def test_gc_never_reaps_chunks_of_uncommitted_save(rng, tmp_path):
     must match: chunks already written for a step whose manifest is not yet
     committed survive a concurrent gc, and the commit then restores."""
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          keep_last=1)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK, keep_last=1))
     tree = _tree(rng, n_leaves=2)
     m.save(1, tree)
     m.commit(1)
@@ -314,11 +317,11 @@ def test_gc_never_reaps_chunks_of_uncommitted_save(rng, tmp_path):
     m.commit(2)
     # a worker has saved step 3 (new chunks on disk) but NOT committed yet
     tree3 = _mutate(tree2, ["l01"], elems=300)
-    w = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    w = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     w.save(3, tree3)
     m.gc()                                   # interleaved gc
     man3 = w.commit(3)
-    got, man = CheckpointManager(store, replicas=1).restore(tree)
+    got, man = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     assert man["step"] == man3["step"] == 3
     _assert_trees_equal(got, tree3)
     m.close()
@@ -340,12 +343,13 @@ def test_gc_race_property_save_gc_restore_peer_fetch(rng, tmp_path):
                                tier_roots=node_local_tier_roots(
                                    root / "nodes" / node))
 
-        writer = CheckpointManager(store_for("writer"), replicas=1,
-                                   delta=True, chunk_bytes=CHUNK,
-                                   keep_last=2, rebase_every=3,
-                                   promote="eager", node="writer")
+        writer = CheckpointManager(
+            store_for("writer"),
+            CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                             keep_last=2, rebase_every=3, promote="eager"),
+            node="writer")
         full_store = TieredStore(root / "full", seed=0)
-        full = CheckpointManager(full_store, replicas=1, keep_last=2)
+        full = CheckpointManager(full_store, CheckpointPolicy(replicas=1, keep_last=2))
         tree = _tree(prng, n_leaves=3)
         for step in range(1, 7):
             touched = [f"l{i:02d}" for i in range(3)
@@ -361,18 +365,20 @@ def test_gc_race_property_save_gc_restore_peer_fetch(rng, tmp_path):
             present = writer.store.chunk_digests("shared", "ckpt")
             assert live <= present, f"live chunk reaped at step {step}"
             # (b) chunked restore == full-shard restore, byte for byte
-            got_d, _ = CheckpointManager(store_for("writer"),
-                                         replicas=1).restore(tree)
-            got_f, _ = CheckpointManager(full_store, replicas=1).restore(tree)
+            got_d, _ = CheckpointManager(
+                store_for("writer"),
+                CheckpointPolicy(replicas=1)).restore(tree)
+            got_f, _ = CheckpointManager(
+                full_store, CheckpointPolicy(replicas=1)).restore(tree)
             for k in tree:
                 assert (np.asarray(got_d[k]).tobytes()
                         == np.asarray(got_f[k]).tobytes()), (seed, step, k)
             # peer fetch from the writer's warm cache, every other step
             if step % 2 == 0:
                 writer.wait_promotions()
-                cold = CheckpointManager(
-                    store_for(f"cold{step}"), replicas=1, node=f"cold{step}",
-                    peer_roots={"writer": root / "nodes" / "writer"})
+                cold = CheckpointManager(store_for(f"cold{step}"), CheckpointPolicy(replicas=1),
+                                         node=f"cold{step}",
+                                         peer_roots={"writer": root / "nodes" / "writer"})
                 got_p, man_p = cold.restore(tree)
                 assert man_p["step"] == man["step"]
                 for k in tree:
@@ -397,13 +403,13 @@ def test_warm_but_stale_node_fetches_only_delta(rng, tmp_path):
                                tmp_path / "nodes" / node))
 
     tree = _tree(rng)
-    w = CheckpointManager(store_for("writer"), replicas=1, delta=True,
-                          chunk_bytes=CHUNK)
+    w = CheckpointManager(store_for("writer"),
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     w.save(1, tree)
     w.commit(1)
     # nodeB warms at step 1
-    b = CheckpointManager(store_for("nodeB"), replicas=1,
-                          promote="on_restore", node="nodeB")
+    b = CheckpointManager(store_for("nodeB"), CheckpointPolicy(replicas=1, promote="on_restore"),
+                          node="nodeB")
     b.restore(tree)
     b.wait_promotions()
     b.close()
@@ -416,8 +422,8 @@ def test_warm_but_stale_node_fetches_only_delta(rng, tmp_path):
     total_bytes = sum(a.nbytes for a in tree.values())
     assert delta_bytes < 0.2 * total_bytes
 
-    b2 = CheckpointManager(store_for("nodeB"), replicas=1,
-                           promote="on_restore", node="nodeB")
+    b2 = CheckpointManager(store_for("nodeB"), CheckpointPolicy(replicas=1, promote="on_restore"),
+                           node="nodeB")
     got, man = b2.restore(tree)
     st = b2.last_restore_stats
     _assert_trees_equal(got, tree2)
@@ -439,8 +445,9 @@ def test_stale_peer_serves_delta_chunks(rng, tmp_path):
                                tmp_path / "nodes" / node))
 
     tree = _tree(rng)
-    w = CheckpointManager(store_for("writer"), replicas=1, delta=True,
-                          chunk_bytes=CHUNK, promote="eager", node="writer")
+    w = CheckpointManager(store_for("writer"),
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                                           promote="eager"), node="writer")
     w.save(1, tree)
     w.commit(1)
     w.wait_promotions()          # writer's cache warm at step 1
@@ -448,14 +455,14 @@ def test_stale_peer_serves_delta_chunks(rng, tmp_path):
     # a DIFFERENT manager (no promotion) commits step 2, so the writer's
     # cache goes stale at step 1
     tree2 = _mutate(tree, ["l00"])
-    w2 = CheckpointManager(store_for("writer2"), replicas=1, delta=True,
-                           chunk_bytes=CHUNK)
+    w2 = CheckpointManager(store_for("writer2"),
+                           CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     p = w2.save(2, tree2)
     w2.commit(2)
     w2.close()
     delta_bytes = p["delta"]["bytes_written"]
 
-    cold = CheckpointManager(store_for("cold"), replicas=1, node="cold",
+    cold = CheckpointManager(store_for("cold"), CheckpointPolicy(replicas=1), node="cold",
                              peer_roots={"writer": tmp_path / "nodes" / "writer"})
     got, man = cold.restore(tree)
     st = cold.last_restore_stats
@@ -484,9 +491,9 @@ def test_stale_peer_sources_ordered_by_lag_and_bounded(tmp_path):
     write_marker("near", target - 1)
     write_marker("exact", target)
     write_marker("ancient", target - STALE_PEER_MAX_LAG - 5)
-    m = CheckpointManager(
-        TieredStore(tmp_path / "ck", seed=0), replicas=1, node="me",
-        peer_roots={n: tmp_path / "nodes" / n
+    m = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), CheckpointPolicy(replicas=1),
+                          node="me",
+                          peer_roots={n: tmp_path / "nodes" / n
                     for n in ("far", "near", "exact", "ancient")})
     exact, stale = m._peer_sources(target)
     assert exact == ["peer:exact"]
@@ -515,8 +522,9 @@ def test_promoted_cache_validates_chunked_manifest(rng, tmp_path):
     commit."""
     store = TieredStore(tmp_path / "ck", seed=0,
                         tier_roots=node_local_tier_roots(tmp_path / "node"))
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          promote="eager", node="n0")
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                                           promote="eager"), node="n0")
     tree = _tree(rng, n_leaves=2)
     man = None
     m.save(1, tree)
@@ -527,8 +535,8 @@ def test_promoted_cache_validates_chunked_manifest(rng, tmp_path):
     assert inv["files"] == len(manifest_payload_map(man, "ckpt"))
     # a newer commit (elsewhere) makes the inventory stale, not broken
     tree2 = _mutate(tree, ["l00"])
-    w2 = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), replicas=1,
-                           delta=True, chunk_bytes=CHUNK)
+    w2 = CheckpointManager(TieredStore(tmp_path / "ck", seed=0),
+                           CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     w2.save(2, tree2)
     w2.commit(2)
     w2.close()
@@ -631,7 +639,7 @@ def test_restore_chunked_dedups_sources_and_chunk_refs(rng, tmp_path):
     base = rng.standard_normal(30_000).astype(np.float32)
     tree = {"a": base, "b": base.copy()}
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK))
     m.save(1, tree)
     man = m.commit(1)
     eng = ParallelRestorer(store)

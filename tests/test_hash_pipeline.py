@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import TieredStore, chunk_rel
 
 CHUNK = 1 << 16
@@ -201,8 +201,9 @@ def test_engine_workers_resolved_from_env(monkeypatch):
 def test_fingerprint_prefilter_skips_clean_chunks_and_restores(rng, tmp_path):
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          fingerprint=True, hash_workers=2)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, delta=True, chunk_bytes=CHUNK,
+                                           fingerprint=True, hash_workers=2))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -213,12 +214,12 @@ def test_fingerprint_prefilter_skips_clean_chunks_and_restores(rng, tmp_path):
     assert d["chunks_hashed"] + d["chunks_fp_clean"] == d["chunks_total"]
     assert d["chunks_hashed"] <= 2           # only the dirtied chunk (+slack)
     m.close()
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree2)
 
 
 def test_precommit_requires_delta_mode(rng, tmp_path):
-    m = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), replicas=1)
+    m = CheckpointManager(TieredStore(tmp_path / "ck", seed=0), CheckpointPolicy(replicas=1))
     with pytest.raises(ValueError):
         m.precommit(1, _tree(rng, n_leaves=1, elems=10))
     m.close()
@@ -227,8 +228,8 @@ def test_precommit_requires_delta_mode(rng, tmp_path):
 def test_predump_then_save_skips_hash_and_write(rng, tmp_path):
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          hash_workers=2)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, hash_workers=2))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -242,7 +243,7 @@ def test_predump_then_save_skips_hash_and_write(rng, tmp_path):
     assert d["chunks_predumped"] >= 1        # dirty chunk pre-written
     assert d["chunks_written"] == 0          # ...so save re-wrote nothing
     m.close()
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree2)
 
 
@@ -252,8 +253,8 @@ def test_predump_with_mutation_after_is_still_byte_exact(rng, tmp_path):
     committed state is the save-time tree, never the pre-dump snapshot."""
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          hash_workers=2)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, hash_workers=2))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -263,7 +264,7 @@ def test_predump_with_mutation_after_is_still_byte_exact(rng, tmp_path):
     m.commit(2)
     assert p["delta"]["chunks_hashed"] >= 1
     m.close()
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree3)
 
 
@@ -272,8 +273,8 @@ def test_predump_orphan_chunks_are_swept(rng, tmp_path):
     not leak in the dedup store: it is unreferenced by any manifest."""
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          hash_workers=1)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, hash_workers=1))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -287,7 +288,7 @@ def test_predump_orphan_chunks_are_swept(rng, tmp_path):
     m.commit(2)
     assert not store.exists("shared", chunk_rel("ckpt", orphan))
     m.close()
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree3)
 
 
@@ -298,8 +299,9 @@ def test_predump_sweep_spares_chunks_of_older_kept_manifests(rng, tmp_path):
     deleting it would tear a restorable checkpoint."""
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          hash_workers=1, keep_last=3)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, hash_workers=1,
+        keep_last=3))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -329,8 +331,8 @@ def test_second_precommit_merges_superseded_predump_writes(rng, tmp_path):
     consuming save's sweep can reclaim them."""
     tree = _tree(rng)
     store = TieredStore(tmp_path / "ck", seed=0)
-    m = CheckpointManager(store, replicas=1, delta=True, chunk_bytes=CHUNK,
-                          hash_workers=1)
+    m = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, hash_workers=1))
     m.save(1, tree)
     m.commit(1)
     tree2 = _mutate(tree, ["l00"])
@@ -348,16 +350,16 @@ def test_second_precommit_merges_superseded_predump_writes(rng, tmp_path):
     assert not store.exists("shared", chunk_rel("ckpt", orphan1))
     assert not store.exists("shared", chunk_rel("ckpt", orphan2))
     m.close()
-    got, _ = CheckpointManager(store, replicas=1).restore(tree)
+    got, _ = CheckpointManager(store, CheckpointPolicy(replicas=1)).restore(tree)
     _assert_trees_equal(got, tree4)
 
 
 def test_manager_rejects_unaligned_chunk_bytes_in_delta_mode(tmp_path):
     store = TieredStore(tmp_path / "ck", seed=0)
     with pytest.raises(ValueError, match="multiple of 4"):
-        CheckpointManager(store, replicas=1, delta=True, chunk_bytes=6)
+        CheckpointManager(store, CheckpointPolicy(replicas=1, delta=True, chunk_bytes=6))
     # non-delta managers never fingerprint: unaligned sizes stay legal
-    CheckpointManager(store, replicas=1, chunk_bytes=6).close()
+    CheckpointManager(store, CheckpointPolicy(replicas=1, chunk_bytes=6)).close()
 
 
 def test_predump_boundary_schedule():

@@ -1,0 +1,208 @@
+"""Multi-worker pre-dump orphan reclamation (``sweep_orphan_chunks``).
+
+A pre-dump writes chunks BEFORE any manifest names them; when the consuming
+save no longer references some of them (the data moved on), the per-save
+sweep only reclaims them in single-writer runs — with other workers alive it
+cannot tell "my orphan" from "your in-flight chunk".  The coordinator sweep
+closes that gap: digests minus every kept-manifest/uncommitted-wpart
+reference, barriered on the in-flight intent markers every delta save and
+pre-dump publishes.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+from repro.checkpoint.store import (TieredStore, chunk_rel,
+                                    manifest_chunk_hashes)
+
+CHUNK = 1 << 16
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _tree(rng, n_leaves=4, elems=70_000):
+    return {f"l{i}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _mutate(tree, delta):
+    out = {}
+    for k, a in tree.items():
+        a = a.copy()
+        a[:200] += delta
+        out[k] = a
+    return out
+
+
+def _assert_trees_equal(got, want):
+    flat_g = dict(SER.flatten_with_names(got))
+    flat_w = dict(SER.flatten_with_names(want))
+    assert set(flat_g) == set(flat_w)
+    for k in flat_w:
+        np.testing.assert_array_equal(flat_g[k], flat_w[k])
+
+
+def _pol(**kw):
+    base = dict(replicas=1, delta=True, chunk_bytes=CHUNK, keep_last=3)
+    base.update(kw)
+    return CheckpointPolicy(**base)
+
+
+def _workers(store, n):
+    return [CheckpointManager(store, _pol(), worker_id=w, num_workers=n)
+            for w in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the gap itself: a 2-worker pre-dump whose data moved on leaks chunks that
+# no manifest will ever name, and the commit-time coordinator sweep reaps
+# them without touching anything restorable
+# ---------------------------------------------------------------------------
+
+def test_multi_worker_predump_orphans_reclaimed_at_commit(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    w0, w1 = _workers(store, 2)
+    tree1 = _tree(rng)
+    for w in (w0, w1):
+        w.save(1, tree1)
+    w0.commit(1, num_workers=2)
+
+    # pre-dump against a snapshot that the final save then DIVERGES from:
+    # every pre-written chunk for the mutated regions becomes an orphan
+    tree_pre = _mutate(tree1, 0.5)
+    tree2 = _mutate(tree1, 1.0)
+    w0.precommit(2, tree_pre)
+    w0.wait_predump()
+    for w in (w0, w1):
+        w.save(2, tree2)
+    w0.commit(2, num_workers=2)        # gc() runs the coordinator sweep
+
+    sweep = w0.last_orphan_sweep
+    assert sweep is not None and sweep["skipped"] is None
+    assert sweep["reaped"], "pre-dump orphans were not reclaimed"
+
+    # post-condition: on-disk chunks == exactly the kept manifests' refs
+    keep = (manifest_chunk_hashes(w0.read_manifest(1))
+            | manifest_chunk_hashes(w0.read_manifest(2)))
+    assert store.chunk_digests("shared", "ckpt") == keep
+    # nothing restorable was torn
+    out2, _ = w0.restore(tree2, 2)
+    _assert_trees_equal(out2, tree2)
+    out1, _ = w0.restore(tree1, 1)
+    _assert_trees_equal(out1, tree1)
+    for w in (w0, w1):
+        w.close()
+
+
+def test_single_writer_needs_no_coordinator_sweep(tmp_path, rng):
+    # with one writer the consuming save already reclaims its own pre-dump
+    # fallout; the coordinator sweep then finds a clean floor
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, _pol())
+    tree1 = _tree(rng)
+    m.save(1, tree1)
+    m.commit(1)
+    m.precommit(2, _mutate(tree1, 0.5))
+    m.wait_predump()
+    m.save(2, _mutate(tree1, 1.0))
+    m.commit(2)
+    sweep = m.sweep_orphan_chunks()
+    assert sweep["skipped"] is None and sweep["reaped"] == []
+    m.close()
+
+
+# ---------------------------------------------------------------------------
+# barriers: fresh in-flight markers defer the sweep; stale ones age out;
+# uncommitted wparts (an in-flight commit's payload) are never candidates
+# ---------------------------------------------------------------------------
+
+def _orphan(store, prefix="ckpt"):
+    """Plant a chunk file no manifest references."""
+    h = "ab" * 16
+    store.put("shared", chunk_rel(prefix, h), b"orphaned payload")
+    return h
+
+
+def _marker(store, t, prefix="ckpt", step=5, worker=1):
+    rel = f"{prefix}/inflight/delta_{step:010d}_w{worker:05d}.json"
+    store.put("shared", rel, json.dumps(
+        {"kind": "delta", "step": step, "worker": worker, "t": t}).encode())
+    return rel
+
+
+def test_fresh_marker_defers_sweep_stale_marker_ages_out(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, _pol(), num_workers=2)
+    h = _orphan(store)
+    rel = _marker(store, time.time())
+
+    sweep = m.sweep_orphan_chunks()
+    assert sweep["skipped"] == "in-flight saves"
+    assert h in store.chunk_digests("shared", "ckpt")
+
+    # same marker, but its writer died 2 sweeps ago: aged out and reaped
+    store.put("shared", rel, json.dumps(
+        {"kind": "delta", "step": 5, "worker": 1,
+         "t": time.time() - 10_000}).encode())
+    sweep = m.sweep_orphan_chunks(stale_marker_s=900.0)
+    assert sweep["skipped"] is None
+    assert h in sweep["reaped"]
+    assert h not in store.chunk_digests("shared", "ckpt")
+    assert rel not in store.list_prefix("shared", "ckpt/inflight")
+    m.close()
+
+
+def test_torn_marker_defers_until_its_mtime_ages(tmp_path, rng):
+    # a marker torn mid-write has no parseable timestamp; its file mtime
+    # (fresh here) still counts as "a writer may be alive" and defers
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, _pol(), num_workers=2)
+    h = _orphan(store)
+    store.put("shared", "ckpt/inflight/delta_0000000005_w00001.json",
+              b"{torn")
+    sweep = m.sweep_orphan_chunks()
+    assert sweep["skipped"] == "in-flight saves"
+    assert h in store.chunk_digests("shared", "ckpt")
+    m.close()
+
+
+def test_uncommitted_wpart_chunks_are_protected(tmp_path, rng):
+    # worker 1 saved step 2 (wpart on disk) but the coordinator has not
+    # committed yet: those chunks belong to an in-flight commit, not to any
+    # manifest — the sweep must treat them like kept refs
+    store = TieredStore(tmp_path, seed=0)
+    w0, w1 = _workers(store, 2)
+    tree1 = _tree(rng)
+    for w in (w0, w1):
+        w.save(1, tree1)
+    w0.commit(1, num_workers=2)
+
+    tree2 = _mutate(tree1, 1.0)
+    w1.save(2, tree2)                  # no commit: manifest-less wpart
+    sweep = w0.sweep_orphan_chunks()
+    assert sweep["skipped"] is None and sweep["reaped"] == []
+
+    w0.save(2, tree2)
+    w0.commit(2, num_workers=2)        # the in-flight commit completes
+    out, _ = w0.restore(tree2, 2)
+    _assert_trees_equal(out, tree2)
+    for w in (w0, w1):
+        w.close()
+
+
+def test_unreadable_wpart_leaks_rather_than_tears(tmp_path, rng):
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, _pol(), num_workers=2)
+    h = _orphan(store)
+    store.put("shared", "ckpt/step_0000000007/wpart_w00001.json", b"{torn")
+    sweep = m.sweep_orphan_chunks()
+    assert sweep["skipped"] == "unreadable manifest or wpart"
+    assert h in store.chunk_digests("shared", "ckpt")
+    m.close()

@@ -11,7 +11,7 @@ import pytest
 
 import faults
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.store import (TieredStore, is_peer_tier,
                                     node_local_tier_roots)
 from repro.sched.cache_registry import (CacheRegistry, format_peer_roots,
@@ -49,11 +49,12 @@ def _assert_trees_equal(got, want):
 
 def _commit_shared(ck, tree, step=1, n_shards=4):
     store = TieredStore(Path(ck), seed=0)
+    pol = CheckpointPolicy(replicas=1)
     for w in range(n_shards):
-        CheckpointManager(store, worker_id=w, num_workers=n_shards,
-                          replicas=1).save(step, tree)
-    CheckpointManager(store, num_workers=n_shards,
-                      replicas=1).commit(step, num_workers=n_shards)
+        CheckpointManager(store, pol, worker_id=w,
+                          num_workers=n_shards).save(step, tree)
+    CheckpointManager(store, pol,
+                      num_workers=n_shards).commit(step, num_workers=n_shards)
 
 
 def _warm_peer(ck, peer_root, node, registry=None):
@@ -61,8 +62,8 @@ def _warm_peer(ck, peer_root, node, registry=None):
     the peer whose cache the cold node will read."""
     store = TieredStore(Path(ck), seed=0,
                         tier_roots=node_local_tier_roots(peer_root))
-    m = CheckpointManager(store, replicas=1, promote="eager",
-                          node=node, registry=registry)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager"), node=node,
+                          registry=registry)
     m.prefetch_latest()
     m.wait_promotions()
     assert not m.promote_failures
@@ -73,8 +74,8 @@ def _cold_manager(ck, cold_root, peer_roots=None, registry=None,
                   promote="on_restore", **kw):
     store = CountingStore(Path(ck), seed=0,
                           tier_roots=node_local_tier_roots(cold_root))
-    m = CheckpointManager(store, replicas=1, promote=promote, node="cold",
-                          peer_roots=peer_roots, registry=registry, **kw)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote=promote, **kw),
+                          node="cold", peer_roots=peer_roots, registry=registry)
     return store, m
 
 
@@ -278,8 +279,8 @@ def test_stale_peer_inventory_is_never_served(tmp_path, rng):
     # (c) invalidation withdraws the cluster-visible claim
     store_a = TieredStore(tmp_path / "ck", seed=0,
                           tier_roots=node_local_tier_roots(tmp_path / "peerA"))
-    ma = CheckpointManager(store_a, replicas=1, promote="eager",
-                           node="peerA", registry=reg)
+    ma = CheckpointManager(store_a, CheckpointPolicy(replicas=1, promote="eager"), node="peerA",
+                           registry=reg)
     ma.invalidate_promoted()
     assert "peerA" not in reg.entries()
     ma.close()

@@ -13,7 +13,7 @@ import pytest
 
 import faults
 from placement_jobs import REQUEUE_EXIT, expected_sum, make_tree, state_sum
-from repro.checkpoint.manager import CheckpointManager, validate_promoted_cache
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy, validate_promoted_cache
 from repro.checkpoint.store import TieredStore
 from repro.core.requeue import RequeueFile, WalltimeTracker
 from repro.sched.placement import (SCORE_HINT, SCORE_WARM, CacheAffinity,
@@ -206,7 +206,7 @@ def test_stale_marker_is_never_served(tmp_path):
 
     def hook(rec):
         if rec.requeues == 1:
-            ext = CheckpointManager(TieredStore(Path(ckpt)), replicas=1)
+            ext = CheckpointManager(TieredStore(Path(ckpt)), CheckpointPolicy(replicas=1))
             ext.save(5, ext_tree)
             ext.commit(5)
             injected.append(5)
@@ -233,7 +233,7 @@ def _warm_node0(sim: SlurmSim, ckpt: Path) -> None:
     """Promote a committed step into node0's local tier, in-process."""
     store = TieredStore(Path(ckpt),
                         tier_roots={"local": sim.node("node0").local_root})
-    m = CheckpointManager(store, replicas=1, promote="eager")
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager"))
     m.save(0, make_tree())
     m.commit(0)
     m.wait_promotions()
@@ -313,7 +313,7 @@ def test_bounded_wait_expires_fabric_off_reads_shared(tmp_path):
 
 def test_cache_inventory_validation_states(tmp_path, rng):
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, promote="eager", keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager", keep_last=10))
     tree = {"w": rng.standard_normal((256,)).astype(np.float32),
             "b": rng.standard_normal((64,)).astype(np.float32)}
     m.save(1, tree)
@@ -324,7 +324,7 @@ def test_cache_inventory_validation_states(tmp_path, rng):
     assert inv["reason"] == "warm" and inv["files"] >= 1
 
     # newer commit without promotion -> stale
-    m_off = CheckpointManager(store, replicas=1, promote="off", keep_last=10)
+    m_off = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="off", keep_last=10))
     m_off.save(2, tree)
     m_off.commit(2)
     inv = validate_promoted_cache(store)

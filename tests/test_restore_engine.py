@@ -13,7 +13,7 @@ import pytest
 
 import faults
 from repro.checkpoint import serialization as SER
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
 from repro.checkpoint.restore_engine import ParallelRestorer, auto_workers
 from repro.checkpoint.store import DEFAULT_TIERS, TieredStore
 
@@ -29,11 +29,12 @@ def _tree(rng, big_kb: int = 64):
 
 
 def _save_multi_worker(store, tree, step, num_workers, **kw):
+    pol = CheckpointPolicy(**kw)
     for w in range(num_workers):
-        mw = CheckpointManager(store, worker_id=w, num_workers=num_workers,
-                               **kw)
+        mw = CheckpointManager(store, pol, worker_id=w,
+                               num_workers=num_workers)
         mw.save(step, tree)
-    m0 = CheckpointManager(store, worker_id=0, num_workers=num_workers, **kw)
+    m0 = CheckpointManager(store, pol, worker_id=0, num_workers=num_workers)
     m0.commit(step, num_workers=num_workers)
     return m0
 
@@ -61,9 +62,9 @@ def test_parallel_restore_equals_serial(tmp_path, rng):
     tree = _tree(rng)
     _save_multi_worker(store, tree, 5, num_workers=3, replicas=2)
 
-    serial = CheckpointManager(store, restore_workers=1)
+    serial = CheckpointManager(store, CheckpointPolicy(restore_workers=1))
     out_s, man_s = serial.restore(tree)
-    parallel = CheckpointManager(store, restore_workers=4)
+    parallel = CheckpointManager(store, CheckpointPolicy(restore_workers=4))
     out_p, man_p = parallel.restore(tree)
 
     assert man_s["step"] == man_p["step"] == 5
@@ -78,7 +79,7 @@ def test_parallel_restore_splits_large_shards(tmp_path, rng):
     leaf boundaries), and the reassembled tree is still exact."""
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng, big_kb=256)
-    m = CheckpointManager(store, replicas=1)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1))
     m.save(1, tree)
     man = m.commit(1)
 
@@ -96,8 +97,9 @@ def test_parallel_restore_incremental_manifest(tmp_path, rng):
     """An incremental manifest spanning a base and a delta shard restores
     correctly through the parallel engine."""
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, incremental=True, keep_last=10, replicas=1,
-                          restore_workers=4)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(incremental=True, keep_last=10, replicas=1,
+                                           restore_workers=4))
     tree = _tree(rng)
     m.save(1, tree)
     m.commit(1)
@@ -107,7 +109,7 @@ def test_parallel_restore_incremental_manifest(tmp_path, rng):
     man2 = m.commit(2)
     assert any(e.get("reused") for e in man2["leaves"])
 
-    m2 = CheckpointManager(store, restore_workers=4)
+    m2 = CheckpointManager(store, CheckpointPolicy(restore_workers=4))
     out, man = m2.restore(tree, step=2)
     _assert_trees_equal(out, tree2)
 
@@ -136,7 +138,7 @@ def test_parallel_range_read_falls_back_on_oserror(tmp_path, rng):
                            and n > 4096),
         error=OSError("simulated torn replica page"))
     with injector:
-        m = CheckpointManager(store, restore_workers=4)
+        m = CheckpointManager(store, CheckpointPolicy(restore_workers=4))
         out, _ = m.restore(tree)
     _assert_trees_equal(out, tree)
     assert injector.fired > 0
@@ -146,13 +148,13 @@ def test_parallel_range_read_falls_back_on_oserror(tmp_path, rng):
 def test_parallel_restore_raises_when_no_replica_intact(tmp_path, rng):
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=2)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=2))
     m.save(1, tree)
     m.commit(1)
     with faults.PreadFaults(store, lambda p, off, n: n > 4096,
                             error=OSError("all replicas torn")):
         with pytest.raises(SER.ChecksumError, match="no intact replica"):
-            CheckpointManager(store, restore_workers=4).restore(tree)
+            CheckpointManager(store, CheckpointPolicy(restore_workers=4)).restore(tree)
 
 
 def test_chaos_mid_range_corruption_replica_fallback(tmp_path, rng):
@@ -163,7 +165,7 @@ def test_chaos_mid_range_corruption_replica_fallback(tmp_path, rng):
     must be byte-identical."""
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng, big_kb=256)
-    m = CheckpointManager(store, replicas=2)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=2))
     m.save(1, tree)
     man = m.commit(1)
 
@@ -171,7 +173,7 @@ def test_chaos_mid_range_corruption_replica_fallback(tmp_path, rng):
     bad = faults.replica_file(store, "shared", shard_rel, idx=0)
     faults.flip_byte(bad)          # mid-file: payload territory for v2 shards
 
-    eng = CheckpointManager(store, restore_workers=4)
+    eng = CheckpointManager(store, CheckpointPolicy(restore_workers=4))
     out, _ = eng.restore(tree)
     _assert_trees_equal(out, tree)
     assert eng.last_restore_stats["replica_fallbacks"] > 0
@@ -184,7 +186,7 @@ def test_chaos_mid_range_corruption_replica_fallback(tmp_path, rng):
 def test_on_restore_promotion_second_restore_zero_shared_bytes(tmp_path, rng):
     store = TierCountingStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="on_restore"))
     m.save(4, tree)
     m.commit(4)
 
@@ -195,7 +197,7 @@ def test_on_restore_promotion_second_restore_zero_shared_bytes(tmp_path, rng):
     assert not m.promote_failures
 
     store.reset()
-    m2 = CheckpointManager(store, promote="on_restore")
+    m2 = CheckpointManager(store, CheckpointPolicy(promote="on_restore"))
     out2, man = m2.restore(tree)
     assert man["step"] == 4
     assert store.read_by_tier.get("shared", 0) == 0, store.read_by_tier
@@ -211,7 +213,7 @@ def test_promotion_is_crc_verified_and_failure_is_soft(tmp_path, rng):
     no marker, and never raises into the training thread."""
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="on_restore"))
     m.save(1, tree)
     man = m.commit(1)
     # corrupt the only shared replica's payload AFTER commit: the copy lands
@@ -229,8 +231,7 @@ def test_promotion_is_crc_verified_and_failure_is_soft(tmp_path, rng):
 def test_promoted_cache_invalidated_when_newer_step_commits(tmp_path, rng):
     store = TierCountingStore(tmp_path, seed=0)
     tree1 = _tree(rng)
-    m = CheckpointManager(store, replicas=1, promote="on_restore",
-                          keep_last=5)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="on_restore", keep_last=5))
     m.save(1, tree1)
     m.commit(1)
     m.restore(tree1)
@@ -260,7 +261,7 @@ def test_promoted_cache_invalidated_when_newer_step_commits(tmp_path, rng):
 def test_eager_promotion_on_commit(tmp_path, rng):
     store = TierCountingStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=1, promote="eager")
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager"))
     m.save(2, tree)
     m.commit(2)
     m.wait_promotions()
@@ -268,7 +269,7 @@ def test_eager_promotion_on_commit(tmp_path, rng):
     assert m._read_marker()["step"] == 2
 
     store.reset()
-    m2 = CheckpointManager(store, promote="eager")
+    m2 = CheckpointManager(store, CheckpointPolicy(promote="eager"))
     out, man = m2.restore(tree)
     assert man["step"] == 2
     assert store.read_by_tier.get("shared", 0) == 0, store.read_by_tier
@@ -280,7 +281,7 @@ def test_eager_promotion_on_commit(tmp_path, rng):
 def test_damaged_promoted_cache_falls_back_to_shared(tmp_path, rng):
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=1, promote="on_restore")
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="on_restore"))
     m.save(1, tree)
     m.commit(1)
     m.restore(tree)
@@ -308,8 +309,9 @@ def test_incremental_promotion_does_not_recopy_base_shard(tmp_path, rng):
         return real_copy(self, src_tier, rel, dst_tier, **kw)
 
     store.copy_file = counting_copy.__get__(store)
-    m = CheckpointManager(store, replicas=1, incremental=True,
-                          promote="eager", keep_last=10)
+    m = CheckpointManager(store,
+                          CheckpointPolicy(replicas=1, incremental=True, promote="eager",
+                                           keep_last=10))
     tree = _tree(rng)
     m.save(1, tree)
     m.commit(1)
@@ -330,7 +332,7 @@ def test_incremental_promotion_does_not_recopy_base_shard(tmp_path, rng):
     assert base_rel not in second_copies, second_copies
     # and the promoted cache still restores the new step intact, node-locally
     store2 = TierCountingStore(tmp_path, seed=0)
-    m2 = CheckpointManager(store2, promote="on_restore")
+    m2 = CheckpointManager(store2, CheckpointPolicy(promote="on_restore"))
     out, man = m2.restore(tree)
     assert man["step"] == 2
     assert store2.read_by_tier.get("shared", 0) == 0, store2.read_by_tier
@@ -343,8 +345,7 @@ def test_restoring_older_step_keeps_newer_promoted_cache(tmp_path, rng):
     """An explicit rollback restore of an older step must not evict the
     promoted cache of the newer (still committed) step."""
     store = TieredStore(tmp_path, seed=0)
-    m = CheckpointManager(store, replicas=1, promote="on_restore",
-                          keep_last=10)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="on_restore", keep_last=10))
     tree1 = _tree(rng)
     m.save(1, tree1)
     m.commit(1)
@@ -413,15 +414,15 @@ def test_gc_cancels_inflight_promotion_for_deleted_step(tmp_path, rng):
 
     store.copy_file = slow_copy.__get__(store)
     for w in range(2):                 # two shard files: copy 1 lands, then
-        CheckpointManager(store, worker_id=w, num_workers=2,   # cancel fires
-                          replicas=1).save(1, tree)
-    m = CheckpointManager(store, num_workers=2, replicas=1,
-                          promote="eager", keep_last=1)
+        CheckpointManager(store, CheckpointPolicy(replicas=1), worker_id=w,
+                          num_workers=2).save(1, tree)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager", keep_last=1),
+                          num_workers=2)
     m.commit(1, num_workers=2)         # schedules promotion; copier blocks
     assert started.wait(10)
     for w in range(2):
-        CheckpointManager(store, worker_id=w, num_workers=2,
-                          replicas=1).save(2, tree)
+        CheckpointManager(store, CheckpointPolicy(replicas=1), worker_id=w,
+                          num_workers=2).save(2, tree)
     m.commit(2, num_workers=2)         # gc deletes step 1 mid-promotion
     gate.set()
     m.wait_promotions()
@@ -450,7 +451,7 @@ def test_gc_cancels_queued_promotion_too(tmp_path, rng):
         return out
 
     store.copy_file = slow_copy.__get__(store)
-    m = CheckpointManager(store, replicas=1, promote="eager", keep_last=1)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1, promote="eager", keep_last=1))
     m.save(1, tree)
     m.commit(1)                        # promo(1) executing (blocked in copy)
     assert started.wait(10)
@@ -488,7 +489,7 @@ def test_auto_workers_env_override_and_tier_cap(tmp_path, rng, monkeypatch):
 
     store = TieredStore(tmp_path, seed=0)
     tree = _tree(rng)
-    m = CheckpointManager(store, replicas=1)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=1))
     m.save(1, tree)
     m.commit(1)
     eng = CheckpointManager(store)             # shared tier: concurrency 8
@@ -571,10 +572,10 @@ def test_parallel_restore_faster_than_serial_under_latency(tmp_path, rng):
     _save_multi_worker(store, tree, 1, num_workers=8, replicas=1)
 
     t0 = time.perf_counter()
-    out_s, _ = CheckpointManager(store, restore_workers=1).restore(tree)
+    out_s, _ = CheckpointManager(store, CheckpointPolicy(restore_workers=1)).restore(tree)
     serial_s = time.perf_counter() - t0
     t0 = time.perf_counter()
-    out_p, _ = CheckpointManager(store, restore_workers=8).restore(tree)
+    out_p, _ = CheckpointManager(store, CheckpointPolicy(restore_workers=8)).restore(tree)
     parallel_s = time.perf_counter() - t0
 
     _assert_trees_equal(out_p, out_s)

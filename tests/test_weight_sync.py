@@ -1,0 +1,357 @@
+"""Serving-fleet weight distribution: ParamHandle double-buffering,
+WeightSyncClient delta fetches over the chunk fabric, the registry push
+plane, and the --max-lag-steps staleness gate.
+
+Everything except the engine boundary test drives numpy trees — the sync
+protocol is deliberately jax-free.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+from repro.checkpoint.store import (TieredStore, is_peer_tier,
+                                    node_local_tier_roots)
+from repro.sched.cache_registry import CacheRegistry
+from repro.serve.weight_sync import (ParamHandle, StaleReplicaError,
+                                     WeightSyncClient)
+
+CHUNK = 1 << 16
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _tree(rng, n_leaves=4, elems=70_000):
+    return {f"l{i}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _mutate(tree, names, delta=1.0, elems=100):
+    out = dict(tree)
+    for k in names:
+        a = out[k].copy()
+        a[:elems] += delta
+        out[k] = a
+    return out
+
+
+def _assert_trees_equal(got, want):
+    flat_g = dict(SER.flatten_with_names(got))
+    flat_w = dict(SER.flatten_with_names(want))
+    assert set(flat_g) == set(flat_w)
+    for k in flat_w:
+        np.testing.assert_array_equal(flat_g[k], flat_w[k])
+
+
+def _pol(**kw):
+    base = dict(replicas=1, delta=True, chunk_bytes=CHUNK)
+    base.update(kw)
+    return CheckpointPolicy(**base)
+
+
+class Fabric:
+    """One shared checkpoint root + registry; publisher eager-promotes so
+    the fleet can fetch deltas peer-to-peer (the bench topology)."""
+
+    def __init__(self, root):
+        self.root = root
+        self.registry = CacheRegistry(root / "registry")
+
+    def store_for(self, node):
+        return TieredStore(
+            self.root / "ck", seed=0,
+            tier_roots=node_local_tier_roots(self.root / "nodes" / node))
+
+    def publisher(self):
+        return CheckpointManager(self.store_for("pub"),
+                                 _pol(promote="eager"),
+                                 node="pub", registry=self.registry)
+
+    def replica_manager(self, name):
+        return CheckpointManager(self.store_for(name),
+                                 _pol(promote="on_restore"),
+                                 node=name, registry=self.registry)
+
+    def push(self, pub, step, tree):
+        pub.save(step, tree)
+        man = pub.commit(step)
+        pub.wait_promotions()
+        self.registry.announce_push(
+            step=step, node="pub",
+            manifest_version=man.get("manifest_version"))
+        return man
+
+
+# ---------------------------------------------------------------------------
+# ParamHandle: the double buffer itself
+# ---------------------------------------------------------------------------
+
+def test_param_handle_stage_supersede_and_flip(rng):
+    t1, t2, t3 = ({"w": rng.standard_normal(8)} for _ in range(3))
+    h = ParamHandle(t1, step=1)
+    cur = h.current
+    assert h.step == 1 and h.pending_step is None and h.newest_step == 1
+    assert not h.commit_pending()                  # nothing staged: no-op
+
+    h.stage(t2, 2)
+    assert h.current is cur, "staging must not touch the served tree"
+    assert h.step == 1 and h.pending_step == 2 and h.newest_step == 2
+
+    h.stage(t3, 3)                                 # newer push supersedes
+    assert h.pending_step == 3
+    assert h.commit_pending()
+    assert h.current is t3 and h.step == 3 and h.pending_step is None
+    assert h.swap_count == 1
+    assert not h.commit_pending()                  # drained
+
+
+# ---------------------------------------------------------------------------
+# the headline: a warm-but-stale follower fetches EXACTLY the delta, with
+# zero shared-tier bytes, and never promotes/invalidates anything
+# ---------------------------------------------------------------------------
+
+def test_stale_follower_fetches_delta_with_zero_shared_bytes(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+
+    mgr = fab.replica_manager("r0")
+    host, man = mgr.restore(tree1)                 # warm-up: promotes step 1
+    mgr.wait_promotions()
+    assert man["step"] == 1
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1,
+                              registry=fab.registry, replica="r0")
+    assert client.lag() == 0 and client.sync_once() is None
+
+    # the push: one leaf changes -> one delta chunk set
+    tree2 = _mutate(tree1, ["l0"])
+    save_stats = pub.save(2, tree2)
+    man2 = pub.commit(2)
+    pub.wait_promotions()
+    fab.registry.announce_push(step=2, node="pub")
+    delta_bytes = save_stats["delta"]["bytes_written"]
+
+    rec = client.sync_once()
+    assert rec is not None and rec["step"] == 2 and rec["from_step"] == 1
+    by_tier = rec["bytes_by_tier"]
+    assert by_tier.get("shared", 0) == 0, by_tier  # fabric, not the pfs
+    peer_bytes = sum(v for t, v in by_tier.items() if is_peer_tier(t))
+    assert 0 < peer_bytes <= 2 * delta_bytes, (peer_bytes, delta_bytes)
+    assert by_tier.get("local", 0) > 0             # unchanged chunks: own cache
+    assert rec["delta"] and rec["manifest_version"] == 2
+
+    # decode-visible state is untouched until the boundary swap
+    assert handle.step == 1 and handle.pending_step == 2
+    _assert_trees_equal(handle.current, tree1)
+    assert handle.commit_pending()
+    _assert_trees_equal(handle.current, tree2)
+    assert handle.step == man2["step"] == 2
+
+    # READ-ONLY follower: the fetch must not have promoted step 2 into (or
+    # invalidated) the node cache another process may be serving from
+    marker = json.loads(
+        (fab.root / "nodes" / "r0" / "local" / "node0" / "ckpt"
+         / "PROMOTED.json").read_text())
+    assert marker["step"] == 1
+    mgr.close()
+    pub.close()
+
+
+def test_second_sync_is_idempotent_and_history_records(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1,
+                              registry=fab.registry, replica="r0")
+
+    tree2 = _mutate(tree1, ["l1"])
+    fab.push(pub, 2, tree2)
+    assert client.sync_once() is not None
+    # staged counts as "have": a second poll before the swap must not refetch
+    assert client.lag() == 0 and client.sync_once() is None
+    assert len(client.history) == 1
+    handle.commit_pending()
+    _assert_trees_equal(handle.current, tree2)
+    mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# the registry push plane
+# ---------------------------------------------------------------------------
+
+def test_push_plane_announce_latest_and_replica_status(tmp_path):
+    reg = CacheRegistry(tmp_path / "registry")
+    assert reg.latest_push() is None
+    reg.announce_push(step=3, node="pub", manifest_version=2)
+    reg.announce_push(step=5, node="pub")
+    ann = reg.latest_push()
+    assert ann["step"] == 5 and ann["node"] == "pub"
+
+    reg.publish_replica("r0", step=5, phase="serving")
+    reg.publish_replica("r1", step=3, target_step=5, phase="fetching")
+    status = reg.replica_status()
+    assert status["r0"]["lag"] == 0
+    assert status["r1"]["lag"] == 2 and status["r1"]["phase"] == "fetching"
+
+
+def test_torn_push_announcement_reads_as_absent(tmp_path):
+    reg = CacheRegistry(tmp_path / "registry")
+    reg.announce_push(step=1, node="pub")
+    (tmp_path / "registry" / "PUSH.json").write_text("{torn")
+    assert reg.latest_push() is None               # advisory plane: no crash
+
+
+# ---------------------------------------------------------------------------
+# staleness gate (--max-lag-steps)
+# ---------------------------------------------------------------------------
+
+def test_max_lag_gate_forces_swap_when_exceeded(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", max_lag_steps=1)
+
+    # within the bound: the gate is a no-op (no fetch, no swap)
+    tree2 = _mutate(tree1, ["l0"])
+    fab.push(pub, 2, tree2)
+    assert client.lag() == 1
+    assert client.ensure_fresh() == 1 and handle.step == 1
+
+    # past the bound: the gate fetches AND swaps at this boundary
+    tree3 = _mutate(tree2, ["l1"])
+    fab.push(pub, 3, tree3)
+    assert client.lag() == 2
+    assert client.ensure_fresh() == 0
+    assert handle.step == 3
+    _assert_trees_equal(handle.current, tree3)
+    mgr.close()
+    pub.close()
+
+
+def test_max_lag_gate_fails_replica_under_paused_publisher(tmp_path, rng):
+    # the publisher ANNOUNCED a step it never committed (crashed mid-push):
+    # the replica keeps serving within the bound, and fails out of rotation
+    # — rather than serving unboundedly stale weights — once past it
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", max_lag_steps=2)
+
+    fab.registry.announce_push(step=9, node="pub")  # never committed
+    assert client.sync_once() is None               # keeps serving step 1
+    assert handle.step == 1
+    with pytest.raises(StaleReplicaError, match="behind"):
+        client.ensure_fresh()
+    assert fab.registry.replica_status()["r0"]["phase"] == "stalled"
+
+    # no bound configured -> the same situation never raises
+    client.max_lag_steps = None
+    assert client.ensure_fresh() == 8
+    mgr.close()
+    pub.close()
+
+
+def test_follow_loop_applies_pushes(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1,
+                              registry=fab.registry, replica="r0")
+    tree2 = _mutate(tree1, ["l2"])
+    fab.push(pub, 2, tree2)
+    seen = []
+    n = client.follow(poll_s=0.01, max_polls=3, on_sync=seen.append)
+    assert n == 1 and [r["step"] for r in seen] == [2]
+    assert handle.pending_step == 2                # swap stays engine-owned
+    mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# engine boundary: a push staged MID-DECODE never tears the loop — all n
+# tokens come from one tree, and the swap lands at the next boundary
+# ---------------------------------------------------------------------------
+
+def test_engine_swap_never_tears_mid_decode(rng):
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config, reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import model as M
+    from repro.serve.engine import Engine
+
+    cfg = reduced(get_config("llama3.2-1b")).replace(num_layers=2)
+    mesh = make_host_mesh()
+    batch, prompt, max_seq = 2, 8, 32
+    p1 = M.init_params(cfg, jax.random.PRNGKey(0))
+    p2 = M.init_params(cfg, jax.random.PRNGKey(1))
+    shape = ((batch, prompt, cfg.num_codebooks) if cfg.num_codebooks
+             else (batch, prompt))
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, shape), jnp.int32)}
+
+    # reference: uninterrupted generation on p1
+    ref = Engine(cfg, mesh, p1, batch=batch, max_seq=max_seq)
+    ref.prefill(prompts)
+    ref_tokens = ref.generate(8)
+
+    # follower engine: p2 lands mid-loop via on_token (the sync thread's
+    # stage), and MUST NOT affect the remaining tokens of this call
+    handle = ParamHandle(p1, step=1)
+    eng = Engine(cfg, mesh, handle, batch=batch, max_seq=max_seq)
+    eng.prefill(prompts)
+
+    def stage_midway(tok, _calls=[]):
+        _calls.append(tok)
+        if len(_calls) == 2:
+            handle.stage(p2, 2)
+
+    first = eng.generate(4, on_token=stage_midway)
+    np.testing.assert_array_equal(first, ref_tokens[:, :4])
+    assert handle.step == 1 and handle.pending_step == 2
+
+    # host-roundtrip the cache so the donated device buffers are not shared
+    # between the two continuations
+    snap_host = jax.tree_util.tree_map(np.asarray, eng.snapshot())
+
+    # continuation AFTER the boundary: byte-identical to an engine that was
+    # born on p2 and restored at the same point
+    rest = eng.generate(4)             # maybe_swap() flips to p2 here
+    assert handle.step == 2 and handle.swap_count == 1
+
+    eng2 = Engine(cfg, mesh, p2, batch=batch, max_seq=max_seq)
+    eng2.restore(jax.tree_util.tree_map(jnp.asarray, snap_host))
+    rest_ref = eng2.generate(4)
+    np.testing.assert_array_equal(rest, rest_ref)
