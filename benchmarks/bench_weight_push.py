@@ -1,7 +1,7 @@
 """Serving-fleet weight push: delta distribution over the chunk fabric vs a
 naive full-shard broadcast.
 
-One artifact row:
+Two artifact rows:
 
   weight_push    a trainer commits step 2 as a small delta and announces it
                  on the registry push plane; N serving replicas (each warm
@@ -13,17 +13,37 @@ One artifact row:
                  every replica.  Propagation time covers poll+fetch+stage
                  (off the request path); the request-visible stall is ONLY
                  the double-buffer pointer swap, reported separately.
+                 Single-process (the PR-7 topology: replicas iterated
+                 inline, publisher promoted cache as the peer source).
+
+  weight_push_fleet
+                 the PR-8 topology: every replica is a REAL OS process
+                 (tests/fleet_harness.py), the publisher commits to the
+                 shared tier only (``promote="off"``), and replicas
+                 propagate deltas to each other via follower-cache
+                 advertisements.  The headline scaling claim: shared-tier
+                 bytes per push stay ~1x the delta as the fleet grows
+                 (exactly one seed replica pays the shared fetch; everyone
+                 else goes replica-to-replica), with the device upload
+                 pipelined against the next fetch.  A paused-publisher
+                 phase shows the fleet DRAINING (no StaleReplicaError
+                 mid-generation) and re-admitting after catch-up.
 """
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
+_TESTS = Path(__file__).resolve().parents[1] / "tests"
+if str(_TESTS) not in sys.path:
+    sys.path.insert(0, str(_TESTS))
+
 # keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones)
-BENCH_KEYS = ("weight_push",)
+BENCH_KEYS = ("weight_push", "weight_push_fleet")
 
 N_REPLICAS = 4
 SIM_IO = 1.0          # replicas read over the simulated interconnect/pfs
@@ -190,16 +210,178 @@ def _weight_push_detail(payload_mb: int, n_replicas: int = N_REPLICAS,
     }
 
 
+def _wait_fleet_step(registry, names, step, timeout_s=60.0) -> None:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        status = registry.replica_status()
+        if all(n in status and (status[n].get("step") or 0) >= step
+               for n in names):
+            return
+        time.sleep(0.02)
+    raise TimeoutError(f"fleet never reached step {step}: "
+                       f"{registry.replica_status()}")
+
+
+def _wait_fleet_phase(registry, names, phase, timeout_s=60.0) -> None:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        status = registry.replica_status()
+        if all(n in status and status[n].get("phase") == phase
+               for n in names):
+            return
+        time.sleep(0.02)
+    raise TimeoutError(f"fleet never reached phase {phase}: "
+                       f"{registry.replica_status()}")
+
+
+def _fleet_arm(root: Path, fleet_size: int, tree: dict, *,
+               chunk_bytes: int, churn_elems: int) -> dict:
+    """One fleet size: real follower processes, two paced delta pushes.
+    Replica r0 is the ungated seed; everyone else gates each fetch on a
+    peer follower-cache advertisement, so the measured shared bytes are
+    the steady-state fabric, not a start-up race."""
+    import fleet_harness as fh
+
+    pub = fh.FleetPublisher(root, chunk_bytes=chunk_bytes)
+    pub.push(1, tree)
+    names = [f"r{i}" for i in range(fleet_size)]
+    cfgs = [fh.replica_config(root, n, batches=1, final_step=3,
+                              gate_on_peers=(n != "r0"),
+                              pipeline_uploads=True, gen_s=0.002)
+            for n in names]
+    procs = [(c, fh.spawn_replica(c)) for c in cfgs]
+
+    push_meta: dict[int, dict] = {}
+    for step, leaf_frac in ((2, 0.25), (3, 0.25)):
+        _wait_fleet_step(pub.registry, names, step - 1)
+        tree = _mutate(tree, leaf_frac, churn_elems)
+        push_meta[step] = pub.push(step, tree)
+    results = fh.wait_fleet(procs, timeout_s=180.0)
+    pub.close()
+    for name, res in results.items():
+        if "error" in res:
+            raise RuntimeError(f"fleet replica {name} failed: "
+                               f"{res['error']}\n{res.get('stderr', '')}")
+
+    delta_bytes = [push_meta[s]["save_stats"]["delta"]["bytes_written"]
+                   for s in (2, 3)]
+    by_tier: dict = {}
+    shared_push_bytes = 0
+    prop: list[float] = []
+    for res in results.values():
+        for rec in res["syncs"]:
+            if rec["step"] not in push_meta:
+                continue        # the start-up fetch of step 1 is excluded
+            for t, n in rec["bytes_by_tier"].items():
+                by_tier[t] = by_tier.get(t, 0) + n
+            shared_push_bytes += rec["bytes_by_tier"].get("shared", 0)
+            prop.append(rec["completed_at"]
+                        - push_meta[rec["step"]]["announced_at"])
+    peer_bytes = sum(v for t, v in by_tier.items() if t.startswith("peer:"))
+    mean_delta = float(np.mean(delta_bytes))
+    return {
+        "fleet_size": fleet_size,
+        "pushes": len(push_meta),
+        "delta_bytes_per_push": mean_delta,
+        "shared_bytes_per_push": shared_push_bytes / len(push_meta),
+        "shared_vs_delta_ratio": (shared_push_bytes / len(push_meta))
+                                 / max(mean_delta, 1),
+        "replica_to_replica_bytes": peer_bytes,
+        "bytes_by_tier": by_tier,
+        "p50_propagation_s": float(np.percentile(prop, 50)),
+        "p99_propagation_s": float(np.percentile(prop, 99)),
+        "digests_converged": len({r["digest"]
+                                  for r in results.values()}) == 1,
+    }
+
+
+def _drain_arm(root: Path, tree: dict, *, chunk_bytes: int) -> dict:
+    """Paused-publisher phase: announce an uncommitted step, watch every
+    replica drain (refuse admissions, keep running), commit, watch them
+    re-admit and converge."""
+    import fleet_harness as fh
+
+    pub = fh.FleetPublisher(root, chunk_bytes=chunk_bytes)
+    pub.push(1, tree)
+    names = ["d0", "d1"]
+    cfgs = [fh.replica_config(root, n, batches=2, final_step=9,
+                              max_lag_steps=2, gen_s=0.002)
+            for n in names]
+    procs = [(c, fh.spawn_replica(c)) for c in cfgs]
+    _wait_fleet_step(pub.registry, names, 1)
+    pub.announce_uncommitted(9)
+    _wait_fleet_phase(pub.registry, names, "draining")
+    tree = _mutate(tree, 1.0, chunk_bytes // 8)
+    pub.push(9, tree)
+    results = fh.wait_fleet(procs, timeout_s=120.0)
+    pub.close()
+    for name, res in results.items():
+        if "error" in res:
+            raise RuntimeError(f"drain replica {name} failed: "
+                               f"{res['error']}\n{res.get('stderr', '')}")
+    return {
+        "fleet_size": len(names),
+        "drained_replicas": sum(1 for r in results.values()
+                                if r["drain_count"] > 0),
+        "readmitted_replicas": sum(1 for r in results.values()
+                                   if r["readmit_count"] > 0),
+        "converged_step": max(r["final_step"] for r in results.values()),
+    }
+
+
+def _weight_push_fleet_detail(payload_mb: int, sizes: tuple[int, ...],
+                              n_leaves: int = 8,
+                              chunk_bytes: int = 128 << 10) -> dict:
+    import tempfile
+
+    rng = np.random.default_rng(1)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+    churn_elems = chunk_bytes // 8
+
+    scaling = []
+    for size in sizes:
+        with tempfile.TemporaryDirectory() as d:
+            scaling.append(_fleet_arm(Path(d), size, tree,
+                                      chunk_bytes=chunk_bytes,
+                                      churn_elems=churn_elems))
+    with tempfile.TemporaryDirectory() as d:
+        drain = _drain_arm(Path(d), tree, chunk_bytes=chunk_bytes)
+
+    top = scaling[-1]
+    return {
+        "payload_mb": sum(a.nbytes for a in tree.values()) / 1e6,
+        "chunk_bytes": chunk_bytes,
+        # headline keys (CI schema gate): the LARGEST fleet's shared bytes
+        # per push — flat at ~1x delta whatever the size — plus the drain
+        # phase outcome
+        "fleet_size": top["fleet_size"],
+        "shared_bytes_per_push": top["shared_bytes_per_push"],
+        "shared_vs_delta_ratio": top["shared_vs_delta_ratio"],
+        "p99_propagation_s": top["p99_propagation_s"],
+        "bytes_by_tier": top["bytes_by_tier"],
+        "drained_replicas": drain["drained_replicas"],
+        "readmitted_replicas": drain["readmitted_replicas"],
+        "scaling": scaling,
+        "drain": drain,
+    }
+
+
 def run(results_dir: Path | None = None, smoke: bool = False):
     from benchmarks.bench_startup import merge_bench_ckpt_io
 
     payload_mb = 8 if smoke else 64
     detail = _weight_push_detail(payload_mb)
-    merge_bench_ckpt_io({"weight_push": detail})
+    fleet = _weight_push_fleet_detail(4 if smoke else 16,
+                                      (1, 8) if smoke else (1, 4, 8, 16))
+    merge_bench_ckpt_io({"weight_push": detail,
+                         "weight_push_fleet": fleet})
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "weight_push.json").write_text(
-            json.dumps({"weight_push": detail}, indent=1))
+            json.dumps({"weight_push": detail,
+                        "weight_push_fleet": fleet}, indent=1))
     return [{
         "name": "ckpt_weight_push",
         "us_per_call": detail["propagation_s"] * 1e6,
@@ -211,4 +393,14 @@ def run(results_dir: Path | None = None, smoke: bool = False):
             f"shared={detail['fleet_shared_read_bytes']} "
             f"delta={detail['delta_bytes_committed']} "
             f"swap_stall={detail['max_swap_stall_s']*1e6:.0f}us"),
+    }, {
+        "name": "ckpt_weight_push_fleet",
+        "us_per_call": fleet["p99_propagation_s"] * 1e6,
+        "derived": (
+            f"fleet={fleet['fleet_size']}proc "
+            f"shared/push={fleet['shared_bytes_per_push']:.0f}B "
+            f"(~{fleet['shared_vs_delta_ratio']:.2f}x delta) "
+            f"p99_prop={fleet['p99_propagation_s']*1e3:.0f}ms "
+            f"drained={fleet['drained_replicas']} "
+            f"readmitted={fleet['readmitted_replicas']}"),
     }]

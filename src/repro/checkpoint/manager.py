@@ -884,16 +884,19 @@ class CheckpointManager:
                 by_file.setdefault(e["file"], []).append(e)   # chunk plane
         return by_file
 
-    def _restore_chunked(self, sources: list[str], manifest: dict):
+    def _restore_chunked(self, sources: list[str], manifest: dict,
+                         tee=None):
         """Chunk-plane restore against an ordered source list (stale local
         cache first, then peers, then the primary tier): every chunk resolves
         independently down the list, so a warm-but-stale node reads its
-        unchanged chunks locally and fetches only the missing delta."""
+        unchanged chunks locally and fetches only the missing delta.
+        ``tee`` (see ``ParallelRestorer.restore_chunked``) observes each
+        verified chunk — the follower-cache write-behind hangs off it."""
         leaves = manifest["leaves"]
         chunked = [e for e in leaves if "chunks" in e]
         engine = ParallelRestorer(self.store, workers=self.restore_workers)
         named, st = engine.restore_chunked(sources, chunked,
-                                           prefix=self.prefix)
+                                           prefix=self.prefix, tee=tee)
         stats = {"mode": "chunked", "tier": sources[-1], "delta": True,
                  **st.as_dict()}
         by_file = self._by_file(manifest)
@@ -935,7 +938,8 @@ class CheckpointManager:
         return named, {"mode": "parallel", "tier": tier, **st.as_dict()}
 
     def restore(self, template, step: Optional[int] = None, *,
-                sources="auto", promote: Optional[bool] = None):
+                sources="auto", promote: Optional[bool] = None,
+                follower_cache: bool = False):
         """Unified restore entry.  Returns (host_tree, manifest).
 
         Dispatches on the MANIFEST (v1/v2 shard files vs v3 chunk plane),
@@ -976,6 +980,17 @@ class CheckpointManager:
         restore is planned multi-source — local cache, warm peers round-robin,
         then shared — and the promotion tee copies from the peer too, so one
         cold restart warms this node without touching the shared tier at all.
+
+        ``follower_cache=True`` (serving-fleet followers) parks every chunk
+        this restore fetched remotely into ``promote_tier`` as content-
+        addressed files — NO promotion marker is written, so the read-only
+        contract of ``promote=False`` holds — and, when a registry + node
+        name are configured, advertises the synced step as a follower-cache
+        entry (``CacheRegistry.publish_follower``).  Replica N+1 of the
+        fleet then pulls the delta from replica N instead of the shared
+        tier.  Only chunked (v3) manifests advertise; tee failures (disk
+        full on the local tier, ...) suppress the advertisement but never
+        fail the restore.
         """
         all_steps = self.steps()
         if not all_steps:
@@ -983,6 +998,10 @@ class CheckpointManager:
         step = all_steps[-1] if step is None else step
         mutate = promote is not False
         named = manifest = stats = None
+        follower = tee = None
+        if follower_cache:
+            follower = {"teed": 0, "failures": 0}
+            tee = self._follower_tee(follower)
         if isinstance(sources, str) and sources != "auto":
             sources = [sources]
         if sources == "auto":
@@ -992,7 +1011,7 @@ class CheckpointManager:
                     named, manifest, stats = got
             if named is None and (self.peer_roots
                                   or self.registry is not None):
-                got = self._restore_from_peers(step, mutate=mutate)
+                got = self._restore_from_peers(step, mutate=mutate, tee=tee)
                 if got is not None:
                     named, manifest, stats = got
             if named is None:
@@ -1005,7 +1024,7 @@ class CheckpointManager:
                     # warm-but-stale node reads unchanged chunks locally and
                     # pays the primary tier only for the delta
                     named, stats = self._restore_chunked(
-                        [self.promote_tier, self.tier], manifest)
+                        [self.promote_tier, self.tier], manifest, tee=tee)
                 else:
                     named, stats = self._restore_files(self.tier, manifest)
                 if mutate:
@@ -1020,7 +1039,8 @@ class CheckpointManager:
                                  "tier list")
             manifest = self.read_manifest(step)
             if is_chunked_manifest(manifest):
-                named, stats = self._restore_chunked(sources, manifest)
+                named, stats = self._restore_chunked(sources, manifest,
+                                                     tee=tee)
             elif len(sources) == 1:
                 named, stats = self._restore_files(sources[0], manifest)
             else:
@@ -1035,6 +1055,10 @@ class CheckpointManager:
         tree = SER.restore_tree(template, named)
         self._prev_manifest = manifest
         self.last_restore_stats = self._finalize_stats(stats, manifest)
+        if follower is not None:
+            self.last_restore_stats["chunks_teed"] = follower["teed"]
+            self.last_restore_stats["follower_advertised"] = (
+                self._advertise_follower(manifest, follower))
         return tree, manifest
 
     # every restore path lands stats in this shape; path-specific keys only
@@ -1044,6 +1068,7 @@ class CheckpointManager:
         "bytes_read": 0, "bytes_by_tier": {}, "replica_fallbacks": 0,
         "chunks": 0, "chunk_refs": 0, "sources": None,
         "promoted": None, "peer": False, "peer_tiers": [], "delta": False,
+        "chunks_teed": 0, "follower_advertised": False,
     }
 
     def _finalize_stats(self, stats: dict, manifest: dict) -> dict:
@@ -1096,24 +1121,42 @@ class CheckpointManager:
         use); ``stale`` peers hold a parseable cache of some other step —
         useless for shard files, but a chunk-plane restore resolves per
         content hash, so a stale peer still serves every chunk the target
-        step shares with its cached one."""
-        cands: dict[str, tuple[Path, str]] = {}
+        step shares with its cached one.
+
+        FOLLOWER-cache entries (a serving replica that synced ``step`` and
+        advertised its chunk inventory — see ``CacheRegistry
+        .publish_follower``) fold into the ``stale`` bucket at their
+        advertised lag, exact-step followers first: they own no marker to
+        re-read (the node's ``PROMOTED.json`` belongs to whatever promoted
+        the node last), so the entry's step is taken on trust — chunk-only
+        and CRC-pinned, a lying follower costs a per-chunk fallback, never
+        wrong bytes.  They never join ``exact``: no marker, no manifest, no
+        shard files."""
+        cands: dict[str, tuple[Path, str, Optional[int]]] = {}
         for name, root in sorted(self.peer_roots.items()):
             if self.node is not None and name == self.node:
                 continue
-            cands[name] = (Path(root), self.promote_tier)
+            cands[name] = (Path(root), self.promote_tier, None)
         if self.registry is not None:
             entries = dict(self.registry.warm_peers(step,
                                                     exclude=(self.node,)))
-            entries.update(self.registry.near_peers(
-                step, exclude=(self.node,), max_lag=STALE_PEER_MAX_LAG))
+            for name, e in self.registry.near_peers(
+                    step, exclude=(self.node,),
+                    max_lag=STALE_PEER_MAX_LAG).items():
+                entries.setdefault(name, e)
             for name, e in entries.items():
+                trusted_lag = (abs(int(e["step"]) - step)
+                               if e.get("kind") == "follower" else None)
                 cands.setdefault(
-                    name, (Path(e["local_root"]), e.get("tier", "local")))
+                    name, (Path(e["local_root"]), e.get("tier", "local"),
+                           trusted_lag))
         exact: list[str] = []
         stale: list[tuple[int, str]] = []
-        for name, (root, via) in cands.items():
+        for name, (root, via, follower_lag) in cands.items():
             tier = self.store.add_peer(name, root, via_tier=via)
+            if follower_lag is not None:
+                stale.append((follower_lag, tier))
+                continue
             try:
                 marker = json.loads(
                     self.store.get(tier, self._marker_rel()).decode())
@@ -1131,7 +1174,8 @@ class CheckpointManager:
                 stale.append((abs(cached - step), tier))
         return exact, [t for _, t in sorted(stale)]
 
-    def _restore_from_peers(self, step: int, *, mutate: bool = True):
+    def _restore_from_peers(self, step: int, *, mutate: bool = True,
+                            tee=None):
         """Multi-source restore of ``step`` from peers' promoted caches.
         Returns (named, manifest, stats) or None to fall through.
         ``mutate=False`` suppresses the promotion tee (read-only follower).
@@ -1177,7 +1221,8 @@ class CheckpointManager:
                 return None           # plain stale-local + primary path
             sources = [self.promote_tier] + peers + [self.tier]
             try:
-                named, stats = self._restore_chunked(sources, manifest)
+                named, stats = self._restore_chunked(sources, manifest,
+                                                     tee=tee)
             except (SER.ChecksumError, OSError, ValueError, KeyError):
                 return None
             stats.update({"tier": "peer", "peer": True, "peer_tiers": peers})
@@ -1200,6 +1245,56 @@ class CheckpointManager:
                                      src_tiers=peer_tiers + [self.tier])
         return named, manifest, stats
 
+    # -- follower cache (serving-fleet replica-to-replica) -------------
+    def _follower_tee(self, state: dict):
+        """Write-behind for the serving fleet: park every chunk the restore
+        fetched from a NON-local source in this node's promote tier as a
+        plain content-addressed file.  The promotion MARKER is never
+        written — the follower does not own ``PROMOTED.json`` — so the
+        ``promote=False`` read-only contract holds; what the tee builds is
+        exactly the inventory ``publish_follower`` advertises.  Runs on the
+        restore worker threads; per-chunk failures are counted (they
+        suppress the advertisement), never raised — the cache is advisory
+        and the restore result is already CRC-verified."""
+        lock = threading.Lock()
+
+        def tee(rel: str, data: bytes, src_tier: str) -> None:
+            if src_tier == self.promote_tier:
+                return          # already local: nothing to park
+            try:
+                if not self.store.exists(self.promote_tier, rel):
+                    self.store.put(self.promote_tier, rel, bytes(data),
+                                   replicas=1)
+                with lock:
+                    state["teed"] += 1
+            except OSError:
+                with lock:
+                    state["failures"] += 1
+
+        return tee
+
+    def _advertise_follower(self, manifest: dict, state: dict) -> bool:
+        """Publish this node's follower-cache entry for the step just
+        restored (chunk plane only — the entry is chunk-only by contract).
+        Advisory: any failure leaves the fleet on the shared tier, never
+        fails the restore."""
+        if (self.registry is None or not self.node
+                or not is_chunked_manifest(manifest)
+                or state["failures"]):
+            return False
+        local_root = self.store.tier_roots.get(self.promote_tier,
+                                               self.store.root)
+        delta = manifest.get("delta") or {}
+        try:
+            self.registry.publish_follower(
+                self.node, step=int(manifest["step"]),
+                local_root=local_root, tier=self.promote_tier,
+                baseline_step=delta.get("baseline"),
+                chunk_count=len(manifest_chunk_hashes(manifest)))
+            return True
+        except (OSError, ValueError, KeyError):
+            return False
+
     # -- shared -> local tier promotion --------------------------------
     def _marker_rel(self) -> str:
         return f"{self.prefix}/PROMOTED.json"
@@ -1219,6 +1314,7 @@ class CheckpointManager:
         if self.registry is not None and self.node:
             try:
                 self.registry.withdraw(self.node)
+                self.registry.withdraw_follower(self.node)
             except OSError:
                 pass    # advisory inventory: a failed withdraw must never
                         # kill the restore/gc path that is invalidating

@@ -234,7 +234,7 @@ class ParallelRestorer:
         return self._run(list(sources), by_file)
 
     def restore_chunked(self, sources: list[str], leaves: list[dict], *,
-                        prefix: str):
+                        prefix: str, tee=None):
         """Restore content-addressed (v3) leaves against an ordered source
         list.  Returns ``({leaf_path: np.ndarray}, RestoreStats)``.
 
@@ -247,6 +247,13 @@ class ParallelRestorer:
         source, issued largest-first, with peers rotated round-robin per task.
         Per-chunk CRCs AND the whole-leaf CRC are pinned from the manifest,
         so the result is byte-identical to a full-shard restore or it fails.
+
+        ``tee(rel, data, src_tier)``, if given, is invoked once per unique
+        chunk AFTER its CRC verified, from the worker threads (callers
+        bring their own synchronization).  The serving-fleet follower uses
+        it to park remotely-fetched delta chunks in its node-local tier —
+        the write-behind that makes replica-to-replica propagation possible
+        without ever touching the node's promotion marker.
         """
         srcs = list(dict.fromkeys(sources))         # dedup, order-preserving
         workers = self._effective_workers(srcs)
@@ -303,7 +310,7 @@ class ParallelRestorer:
                        reverse=True)                    # LPT order
             stats.tasks = len(tasks)
             futures = [pool.submit(self._exec_chunk_task, srcs, j, ws,
-                                   buffers)
+                                   buffers, prefix, tee)
                        for j, ws in enumerate(tasks)]
             for fut in futures:
                 by_tier, fallbacks = fut.result()
@@ -315,7 +322,8 @@ class ParallelRestorer:
         return self._finish_chunked(leaves, buffers, stats)
 
     def _exec_chunk_task(self, srcs: list[str], index: int,
-                         ws: list[_ChunkWork], buffers: dict):
+                         ws: list[_ChunkWork], buffers: dict,
+                         prefix: str = "", tee=None):
         """Fetch one batch of chunks, each with independent fallback down its
         own source chain, and scatter the verified bytes into the leaf
         buffers (disjoint regions, so no locking)."""
@@ -340,6 +348,8 @@ class ParallelRestorer:
                     f"no intact source for chunk {w.digest}: {errs}")
             fallbacks += i
             by_tier[tier] = by_tier.get(tier, 0) + len(raw)
+            if tee is not None:
+                tee(chunk_rel(prefix, w.digest), raw, tier)
             for leaf_path, off in w.users:
                 memoryview(buffers[leaf_path])[off:off + w.nbytes] = raw
         return by_tier, fallbacks

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 from pathlib import Path
 
 import jax
@@ -31,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
-from repro.checkpoint.store import TieredStore
+from repro.checkpoint.store import TieredStore, node_local_tier_roots
 from repro.configs.base import get_config, reduced as reduce_cfg
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
@@ -42,12 +43,25 @@ from repro.serve.weight_sync import ParamHandle, WeightSyncClient
 
 def follow(args) -> int:
     """Serving-fleet follower: restore the latest pushed weights read-only,
-    then serve batches while tracking the push plane."""
+    then serve batches while tracking the push plane.
+
+    Fleet citizenship (PR 8): the follower advertises its fetched chunk
+    inventory to the registry (follower cache), so the next replica pulls
+    the delta from THIS process instead of the shared tier; a replica past
+    ``--max-lag-steps`` DRAINS (refuses new batches, keeps polling, shows
+    ``draining`` fleet-wide) and re-admits once it catches up, unless
+    ``--on-stale raise`` asks for the fail-out-of-rotation behavior.
+    ``--local-root`` mounts the node-local tiers under a private directory
+    so many replicas of one host stay isolated (and peer-fetchable);
+    ``--pipeline-uploads`` overlaps the device upload of push N with the
+    fetch of push N+1."""
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     mesh = make_host_mesh()
-    store = TieredStore(Path(args.ckpt_dir))
+    tier_roots = (node_local_tier_roots(Path(args.local_root))
+                  if args.local_root else None)
+    store = TieredStore(Path(args.ckpt_dir), tier_roots=tier_roots)
     registry = CacheRegistry(Path(args.ckpt_dir) / REGISTRY_DIRNAME)
     mgr = CheckpointManager(
         store,
@@ -61,20 +75,38 @@ def follow(args) -> int:
               file=sys.stderr)
         return 1
     to_dev = (lambda t: jax.tree_util.tree_map(jnp.asarray, t))
-    host, manifest = mgr.restore(template, promote=False)
+    host, manifest = mgr.restore(template, promote=False,
+                                 follower_cache=True)
     handle = ParamHandle(to_dev(host), step=manifest["step"])
-    eng = Engine(cfg, mesh, handle, batch=args.batch, max_seq=args.max_seq)
     client = WeightSyncClient(mgr, handle, template, registry=registry,
                               replica=args.replica,
                               max_lag_steps=args.max_lag_steps,
-                              to_native=to_dev)
+                              to_native=to_dev, on_stale=args.on_stale,
+                              pipeline_uploads=args.pipeline_uploads)
+    eng = Engine(cfg, mesh, handle, batch=args.batch, max_seq=args.max_seq,
+                 sync_client=client)
     rng = np.random.default_rng(args.seed)
     shape = ((args.batch, args.prompt_len, cfg.num_codebooks)
              if cfg.num_codebooks else (args.batch, args.prompt_len))
     print(f"replica {args.replica}: serving step {manifest['step']}")
     for b in range(args.batches):
         client.sync_once()                   # fetch off the request path
-        client.ensure_fresh()                # staleness gate (--max-lag-steps)
+        if not eng.admit():                  # staleness gate: DRAIN, not die
+            print(f"replica {args.replica}: draining at lag {client.lag()}",
+                  file=sys.stderr)
+            deadline = time.monotonic() + args.drain_timeout_s
+            while not eng.admit():
+                if time.monotonic() >= deadline:
+                    print(f"replica {args.replica}: drain timed out after "
+                          f"{args.drain_timeout_s:.0f}s at lag "
+                          f"{client.lag()}", file=sys.stderr)
+                    client.close()
+                    mgr.close()
+                    return 1
+                time.sleep(args.poll_s)
+                client.sync_once()
+            print(f"replica {args.replica}: re-admitted at step "
+                  f"{handle.step}")
         prompts = {"tokens": jnp.asarray(
             rng.integers(0, cfg.vocab_size, shape), jnp.int32)}
         eng.prefill(prompts)                 # boundary: staged push swaps in
@@ -82,6 +114,7 @@ def follow(args) -> int:
         print(f"batch {b}: served step {handle.step}, "
               f"lag {client.lag()}, swaps {handle.swap_count}, "
               f"swap_stall {handle.last_swap_s * 1e6:.0f}us")
+    client.close()
     mgr.close()
     return 0
 
@@ -103,8 +136,24 @@ def main(argv=None) -> int:
     ap.add_argument("--replica", default="r0",
                     help="this replica's name in the registry fleet view")
     ap.add_argument("--max-lag-steps", type=int, default=None,
-                    help="staleness bound: force a swap (or fail the "
-                         "replica) past this many steps behind the push")
+                    help="staleness bound: force a swap (then drain or "
+                         "fail) past this many steps behind the push")
+    ap.add_argument("--on-stale", choices=("drain", "raise"),
+                    default="drain",
+                    help="--follow: past --max-lag-steps, drain and "
+                         "re-admit (default) or fail out of rotation")
+    ap.add_argument("--drain-timeout-s", type=float, default=60.0,
+                    help="--follow: give up on a drain that never "
+                         "re-admits after this long")
+    ap.add_argument("--poll-s", type=float, default=0.1,
+                    help="--follow: push-plane poll interval while "
+                         "draining")
+    ap.add_argument("--pipeline-uploads", action="store_true",
+                    help="--follow: overlap device upload of push N with "
+                         "the fetch of push N+1")
+    ap.add_argument("--local-root", default=None,
+                    help="--follow: private node-local tier root for this "
+                         "replica (isolates + peer-exposes its cache)")
     ap.add_argument("--batches", type=int, default=4,
                     help="--follow: request batches to serve before exit")
     ap.add_argument("--delta", action="store_true", default=True,

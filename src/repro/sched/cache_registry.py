@@ -30,12 +30,15 @@ whatever the registry holds.
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import time
 from pathlib import Path
 from typing import Iterable, Optional
 
 ENV_PEER_ROOTS = "REPRO_PEER_ROOTS"
 REGISTRY_DIRNAME = "peer_registry"
+FOLLOWER_DIRNAME = "followers"
 
 
 def format_peer_roots(peers: dict) -> str:
@@ -64,6 +67,30 @@ class CacheRegistry:
     def _path(self, node: str) -> Path:
         return self.root / f"{node}.json"
 
+    def _atomic_write(self, p: Path, obj: dict) -> None:
+        """Atomic JSON publish with a UNIQUE tmp name.  A fixed
+        ``<name>.json.tmp`` path would let two concurrent writers of the
+        same key (a requeued publisher racing its predecessor, two threads
+        of one process) interleave write/rename: one renames the other's
+        half-written tmp, publishing a file that parses as JSON but mixes
+        two entries — exactly the torn-in-content state atomicity is meant
+        to rule out.  ``mkstemp`` in the target's own directory keeps the
+        rename same-filesystem (hence atomic), and each writer renames only
+        bytes it wrote in full."""
+        p.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=p.name + ".", suffix=".tmp",
+                                   dir=p.parent)
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(json.dumps(obj))
+            os.replace(tmp, p)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
     def publish(self, node: str, *, step: int, files: Iterable[str],
                 local_root, tier: str = "local",
                 baseline_step: Optional[int] = None,
@@ -90,16 +117,76 @@ class CacheRegistry:
             entry["baseline_step"] = int(baseline_step)
         if chunk_count is not None:
             entry["chunk_count"] = int(chunk_count)
-        self.root.mkdir(parents=True, exist_ok=True)
-        p = self._path(node)
-        tmp = p.with_name(p.name + ".tmp")
-        tmp.write_text(json.dumps(entry))
-        tmp.rename(p)
+        self._atomic_write(self._path(node), entry)
         return entry
 
     def withdraw(self, node: str) -> None:
         """Drop ``node``'s entry (its cache was invalidated or GC'd)."""
         self._path(node).unlink(missing_ok=True)
+
+    # -- follower caches (serving fleet, replica-to-replica) -------------
+    # A serving replica that finishes a weight sync holds every chunk of
+    # the synced step in its node-local tier (its own stale promoted cache
+    # plus the delta the fetch teed in) WITHOUT owning the node's
+    # ``PROMOTED.json`` — it is a read-only follower, the marker may belong
+    # to another consumer on the node.  These entries advertise that
+    # inventory as a chunk-only peer source: replica N+1 pulls the delta
+    # from replica N instead of the shared tier, so fleet-wide shared-tier
+    # bytes stay ~one delta however large the fleet.  Chunk-only means
+    # readers must never plan shard files or manifests against them —
+    # ``near_peers`` folds them in, ``warm_peers`` (the shard fabric's
+    # source) never does.
+
+    def _follower_path(self, node: str) -> Path:
+        return self.root / FOLLOWER_DIRNAME / f"{node}.json"
+
+    def publish_follower(self, node: str, *, step: int, local_root,
+                         tier: str = "local",
+                         baseline_step: Optional[int] = None,
+                         chunk_count: Optional[int] = None) -> dict:
+        """Record that follower ``node`` holds all chunks of ``step`` under
+        ``local_root`` (one file per node under ``followers/``, atomic,
+        superseded by the node's next sync).  Advisory like every entry:
+        the chunk plane re-pins manifest CRCs per chunk, so a lying or GC'd
+        follower cache costs a per-chunk fallback, never wrong bytes."""
+        entry = {
+            "node": node,
+            "step": int(step),
+            "kind": "follower",
+            "local_root": str(local_root),
+            "tier": tier,
+            "published_at": time.time(),
+        }
+        if baseline_step is not None:
+            entry["baseline_step"] = int(baseline_step)
+        if chunk_count is not None:
+            entry["chunk_count"] = int(chunk_count)
+        self._atomic_write(self._follower_path(node), entry)
+        return entry
+
+    def withdraw_follower(self, node: str) -> None:
+        """Drop ``node``'s follower-cache entry (its local tier was
+        invalidated, or the replica left the fleet)."""
+        self._follower_path(node).unlink(missing_ok=True)
+
+    def follower_entries(self) -> dict[str, dict]:
+        """All parseable follower-cache entries, keyed by node (same torn-
+        file tolerance as ``entries``)."""
+        out: dict[str, dict] = {}
+        fdir = self.root / FOLLOWER_DIRNAME
+        if not fdir.is_dir():
+            return out
+        for p in sorted(fdir.glob("*.json")):
+            try:
+                e = json.loads(p.read_text())
+            except (ValueError, OSError):
+                continue
+            if (isinstance(e, dict) and e.get("node")
+                    and isinstance(e.get("step"), int)
+                    and e.get("local_root")):
+                e.setdefault("kind", "follower")
+                out[e["node"]] = e
+        return out
 
     def entries(self) -> dict[str, dict]:
         """All parseable entries, keyed by node.  Torn/malformed files read
@@ -129,20 +216,33 @@ class CacheRegistry:
                 if e["step"] == int(step) and n not in ex}
 
     def near_peers(self, step: int, exclude: Iterable[Optional[str]] = (),
-                   max_lag: Optional[int] = None) -> dict[str, dict]:
-        """Entries caching some OTHER step than ``step`` — stale for the
-        shard fabric, but a chunk-plane (delta) restore resolves by content
-        hash, so these peers still serve every chunk shared with the target
-        step.  Ordered nearest-step-first (the closer the cached step, the
-        larger the expected chunk overlap); ``max_lag`` drops entries more
-        than that many steps away.  Advisory, like everything here."""
+                   max_lag: Optional[int] = None,
+                   include_followers: bool = True) -> dict[str, dict]:
+        """Chunk-capable peer entries for ``step``: promoted caches of some
+        OTHER step — stale for the shard fabric, but a chunk-plane (delta)
+        restore resolves by content hash, so these peers still serve every
+        chunk shared with the target step — plus (by default) follower-
+        cache entries at ANY step within ``max_lag``, including exactly
+        ``step``: a follower that synced the target step serves its whole
+        delta, but only chunk-wise (no marker, no manifest), so even an
+        exact-step follower belongs here and never in ``warm_peers``.
+        Ordered nearest-step-first (the closer the cached step, the larger
+        the expected chunk overlap), a node's nearest entry winning when it
+        has both kinds.  Advisory, like everything here."""
         ex = {n for n in exclude if n}
         step = int(step)
         cands = [(abs(e["step"] - step), n, e)
                  for n, e in self.entries().items()
-                 if e["step"] != step and n not in ex
-                 and (max_lag is None or abs(e["step"] - step) <= max_lag)]
-        return {n: e for _, n, e in sorted(cands)}
+                 if e["step"] != step and n not in ex]
+        if include_followers:
+            cands += [(abs(e["step"] - step), n, e)
+                      for n, e in self.follower_entries().items()
+                      if n not in ex]
+        out: dict[str, dict] = {}
+        for lag, n, e in sorted(cands, key=lambda c: (c[0], c[1])):
+            if n not in out and (max_lag is None or lag <= max_lag):
+                out[n] = e
+        return out
 
     # -- weight-push plane (serving fleet) ------------------------------
     # The publisher (a fine-tune/RLHF trainer) announces each committed
@@ -170,11 +270,7 @@ class CacheRegistry:
             ann["manifest_version"] = int(manifest_version)
         if meta:
             ann["meta"] = meta
-        self.root.mkdir(parents=True, exist_ok=True)
-        p = self._push_path()
-        tmp = p.with_name(p.name + ".tmp")
-        tmp.write_text(json.dumps(ann))
-        tmp.rename(p)
+        self._atomic_write(self._push_path(), ann)
         return ann
 
     def latest_push(self) -> Optional[dict]:
@@ -209,11 +305,7 @@ class CacheRegistry:
             entry["target_step"] = int(target_step)
         if stats:
             entry["stats"] = stats
-        p = self._replica_path(replica)
-        p.parent.mkdir(parents=True, exist_ok=True)
-        tmp = p.with_name(p.name + ".tmp")
-        tmp.write_text(json.dumps(entry))
-        tmp.rename(p)
+        self._atomic_write(self._replica_path(replica), entry)
         return entry
 
     def replica_status(self) -> dict[str, dict]:
@@ -233,7 +325,12 @@ class CacheRegistry:
                 continue
             if not (isinstance(e, dict) and e.get("replica")):
                 continue
-            e["lag"] = (latest - e["step"]
+            # clamped at 0 like WeightSyncClient.lag(): a replica AHEAD of
+            # the announcement (stale/torn PUSH.json, or it restored a step
+            # the publisher has not announced yet) is current, not
+            # negatively lagged — dashboards must agree with the replica's
+            # own staleness gate
+            e["lag"] = (max(0, latest - e["step"])
                         if latest is not None and isinstance(e.get("step"), int)
                         else None)
             out[e["replica"]] = e

@@ -86,9 +86,13 @@ class Engine:
     """Minimal batched serving engine with checkpointable generation state."""
 
     def __init__(self, cfg: ModelConfig, mesh, params, *, batch: int,
-                 max_seq: int, impl: Optional[str] = None):
+                 max_seq: int, impl: Optional[str] = None, sync_client=None):
         self.cfg = cfg
         self.mesh = mesh
+        # optional WeightSyncClient: wires the staleness gate into the
+        # serving loop as ADMISSION CONTROL (admit() below) instead of a
+        # mid-batch failure
+        self.sync_client = sync_client
         # swap-safe weights: the engine serves ``param_handle.current`` and
         # commits a staged update (weight_sync's double buffer) only at
         # generation boundaries — a decode loop can never see a torn tree.
@@ -115,6 +119,15 @@ class Engine:
         any.  Called automatically at the entry of ``prefill``/``generate``;
         exposed so a serving loop can also swap between batches."""
         return self.param_handle.commit_pending()
+
+    def admit(self) -> bool:
+        """Admission gate for NEW generations: False while the attached
+        ``WeightSyncClient`` is draining (replica too stale to take new
+        work — finish in-flight generations, catch up, re-admit).  Always
+        True without a sync client.  The serving loop calls this BEFORE
+        ``prefill``; ``generate`` on already-admitted work never gates, so
+        a draining replica finishes what it started."""
+        return self.sync_client is None or self.sync_client.admit()
 
     def prefill(self, prompts: dict):
         self.maybe_swap()

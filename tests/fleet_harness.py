@@ -1,0 +1,318 @@
+"""Multi-process serving-fleet harness.
+
+PR 7's bench iterated the fleet's replicas inside one process; this module
+runs each follower as a REAL OS process — its own interpreter, its own
+``TieredStore`` mount over a private node-local root, its own
+``WeightSyncClient`` — so the replica-to-replica fabric, the follower-cache
+advertisements, and the draining admission control are exercised with true
+concurrency (the paper's cluster story: cooperating processes, not a loop).
+
+The child (``python tests/fleet_harness.py <config.json>``) speaks exactly
+the ``launch/serve.py --follow`` protocol — poll the push plane, fetch
+deltas read-only with ``follower_cache=True``, gate admissions on staleness
+— minus the jax engine: "generation" is a sleep, so dozens of replicas fit
+in a test/bench run.  Results come back as one JSON file per replica.
+
+Used by tests/test_fleet.py (3-process zero-shared-bytes e2e) and
+benchmarks/bench_weight_push.py (``weight_push_fleet`` row).
+
+Child config keys (all through ``replica_config``):
+
+  root             fleet root directory (shared tier + registry + results)
+  name             replica/node identity
+  batches          generations to serve before exiting
+  final_step       keep serving until this step is swapped in
+  gen_s            simulated generation duration per batch
+  poll_s           push-plane poll interval
+  max_lag_steps    staleness bound (None: no gate)
+  on_stale         "drain" | "raise"
+  pipeline_uploads overlap to_native(N) with fetch(N+1)
+  gate_on_peers    before fetching a step, wait (bounded) until some OTHER
+                   replica advertises a follower cache for it — the fleet's
+                   "seed one, then go replica-to-replica" policy; the seed
+                   replica runs ungated
+  gate_timeout_s   fall back to the shared tier after this long
+  deadline_s       hard exit bound for the whole child
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+SRC = REPO_ROOT / "src"
+CHUNK = 1 << 16
+
+
+def tree_digest(tree: dict) -> str:
+    """Order-independent content digest of a flat {name: ndarray} tree —
+    what "the fleet converged byte-identically" means across processes."""
+    h = hashlib.blake2b(digest_size=16)
+    for k in sorted(tree):
+        a = np.ascontiguousarray(tree[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(tuple(a.shape)).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def template_from_manifest(manifest: dict) -> dict:
+    """Rebuild a same-shape host tree from a manifest's leaf metadata, so a
+    follower process needs NO out-of-band model config — the checkpoint
+    itself says what to allocate."""
+    return {e["path"]: np.zeros(tuple(e["shape"]), dtype=e["dtype"])
+            for e in manifest["leaves"]}
+
+
+# ---------------------------------------------------------------------------
+# parent side: publisher + process management
+# ---------------------------------------------------------------------------
+
+class FleetPublisher:
+    """The trainer side of the push plane, fleet-topology edition: commits
+    delta checkpoints to the SHARED tier only (``promote="off"`` — no
+    publisher-side warm cache, so every non-shared byte a replica reads is
+    replica-to-replica by construction) and announces each push."""
+
+    def __init__(self, root: Path, *, chunk_bytes: int = CHUNK,
+                 sim_io_factor: float = 0.0):
+        from repro.checkpoint.manager import (CheckpointManager,
+                                              CheckpointPolicy)
+        from repro.checkpoint.store import TieredStore
+        from repro.sched.cache_registry import CacheRegistry
+        self.root = Path(root)
+        self.registry = CacheRegistry(self.root / "registry")
+        self.manager = CheckpointManager(
+            TieredStore(self.root / "ck", seed=0,
+                        sim_io_factor=sim_io_factor),
+            CheckpointPolicy(replicas=1, delta=True,
+                             chunk_bytes=chunk_bytes, promote="off"),
+            node="pub", registry=self.registry)
+
+    def push(self, step: int, tree: dict) -> dict:
+        save_stats = self.manager.save(step, tree)
+        man = self.manager.commit(step)
+        self.registry.announce_push(
+            step=step, node="pub",
+            manifest_version=man.get("manifest_version"))
+        return {"manifest": man, "save_stats": save_stats,
+                "announced_at": time.time()}
+
+    def announce_uncommitted(self, step: int) -> None:
+        """Announce a step that was never committed — the paused/crashed
+        publisher scenario that drives followers into draining."""
+        self.registry.announce_push(step=step, node="pub")
+
+    def close(self) -> None:
+        self.manager.close()
+
+
+def replica_config(root: Path, name: str, **kw) -> dict:
+    cfg = {
+        "root": str(root),
+        "name": name,
+        "batches": 2,
+        "final_step": None,
+        "gen_s": 0.01,
+        "poll_s": 0.02,
+        "max_lag_steps": None,
+        "on_stale": "drain",
+        "pipeline_uploads": False,
+        "gate_on_peers": False,
+        "gate_timeout_s": 20.0,
+        "deadline_s": 120.0,
+        "chunk_bytes": CHUNK,
+        "sim_io_factor": 0.0,
+        "restore_workers": 0,
+    }
+    cfg.update(kw)
+    return cfg
+
+
+def spawn_replica(cfg: dict) -> subprocess.Popen:
+    """Launch one follower child.  The config rides a JSON file (not the
+    command line) and the result comes back the same way — no pickling, no
+    multiprocessing spawn-method coupling."""
+    root = Path(cfg["root"])
+    cfg_dir = root / "fleet_cfg"
+    cfg_dir.mkdir(parents=True, exist_ok=True)
+    cfg_path = cfg_dir / f"{cfg['name']}.json"
+    cfg_path.write_text(json.dumps(cfg))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(SRC) + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else str(SRC))
+    return subprocess.Popen(
+        [sys.executable, str(Path(__file__).resolve()), str(cfg_path)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+
+
+def result_path(cfg: dict) -> Path:
+    return Path(cfg["root"]) / "fleet_results" / f"{cfg['name']}.json"
+
+
+def wait_fleet(procs: list[tuple[dict, subprocess.Popen]],
+               timeout_s: float = 180.0) -> dict[str, dict]:
+    """Join every child and collect its result JSON; a child that died
+    without writing one surfaces as an ``error`` result carrying its
+    stderr, so test failures say WHY the replica fell over."""
+    out: dict[str, dict] = {}
+    deadline = time.monotonic() + timeout_s
+    for cfg, p in procs:
+        left = max(1.0, deadline - time.monotonic())
+        try:
+            stdout, stderr = p.communicate(timeout=left)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            stdout, stderr = p.communicate()
+            stderr = f"TIMEOUT after {timeout_s}s\n{stderr}"
+        rp = result_path(cfg)
+        if rp.exists():
+            res = json.loads(rp.read_text())
+        else:
+            res = {"name": cfg["name"],
+                   "error": f"no result file (rc={p.returncode})"}
+        if p.returncode != 0 and "error" not in res:
+            res["error"] = f"rc={p.returncode}"
+        res["stdout"], res["stderr"] = stdout, stderr
+        out[cfg["name"]] = res
+    return out
+
+
+def run_fleet(configs: list[dict], timeout_s: float = 180.0
+              ) -> dict[str, dict]:
+    return wait_fleet([(c, spawn_replica(c)) for c in configs], timeout_s)
+
+
+# ---------------------------------------------------------------------------
+# child side
+# ---------------------------------------------------------------------------
+
+def _wait_for_first_push(mgr, deadline: float) -> None:
+    while time.monotonic() < deadline:
+        if mgr.steps():
+            return
+        time.sleep(0.02)
+    raise TimeoutError("no committed push appeared")
+
+
+def _wait_for_peer_advert(registry, name: str, step: int,
+                          timeout_s: float) -> bool:
+    """The gate: block (bounded) until some OTHER replica advertises a
+    follower cache at >= ``step``.  Returns False on timeout — the caller
+    falls back to the shared tier rather than hanging the fleet."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        for n, e in registry.follower_entries().items():
+            if n != name and e["step"] >= step:
+                return True
+        time.sleep(0.01)
+    return False
+
+
+def serve_replica(cfg: dict) -> dict:
+    from repro.checkpoint.manager import (CheckpointManager,
+                                          CheckpointPolicy)
+    from repro.checkpoint.store import TieredStore, node_local_tier_roots
+    from repro.sched.cache_registry import CacheRegistry
+    from repro.serve.weight_sync import ParamHandle, WeightSyncClient
+
+    root = Path(cfg["root"])
+    name = cfg["name"]
+    deadline = time.monotonic() + cfg["deadline_s"]
+    registry = CacheRegistry(root / "registry")
+    store = TieredStore(
+        root / "ck", seed=0, sim_io_factor=cfg["sim_io_factor"],
+        tier_roots=node_local_tier_roots(root / "nodes" / name))
+    mgr = CheckpointManager(
+        store,
+        CheckpointPolicy(replicas=1, delta=True,
+                         chunk_bytes=cfg["chunk_bytes"], promote="off",
+                         restore_workers=cfg["restore_workers"]),
+        node=name, registry=registry)
+    _wait_for_first_push(mgr, deadline)
+    template = template_from_manifest(mgr.read_manifest(mgr.steps()[0]))
+
+    handle = ParamHandle(None, step=None)
+    client = WeightSyncClient(
+        mgr, handle, template, registry=registry, replica=name,
+        max_lag_steps=cfg["max_lag_steps"], on_stale=cfg["on_stale"],
+        pipeline_uploads=cfg["pipeline_uploads"])
+    syncs: list[dict] = []
+    served = 0
+    final_step = cfg["final_step"]
+
+    def sync():
+        target = client.published_step()
+        have = handle.newest_step
+        if (cfg["gate_on_peers"] and target is not None
+                and (have is None or target > have)
+                and target in mgr.steps()):
+            _wait_for_peer_advert(registry, name, target,
+                                  cfg["gate_timeout_s"])
+        rec = client.sync_once()
+        if rec is not None:
+            rec["completed_at"] = time.time()
+            syncs.append(rec)
+
+    while time.monotonic() < deadline:
+        sync()
+        if client.admit():
+            # simulated generation: the admission gate, not the decode
+            # loop, is what this harness exercises
+            time.sleep(cfg["gen_s"])
+            handle.commit_pending()
+            served += 1
+        else:
+            time.sleep(cfg["poll_s"])
+        done_step = (final_step is None
+                     or (handle.step is not None
+                         and handle.step >= final_step))
+        if served >= cfg["batches"] and done_step and not client.draining:
+            break
+        if not client.draining:
+            time.sleep(cfg["poll_s"] / 4)
+    client.close()
+    tree = handle.current
+    res = {
+        "name": name,
+        "served": served,
+        "final_step": handle.step,
+        "digest": tree_digest(tree) if tree is not None else None,
+        "drain_count": client.drain_count,
+        "readmit_count": client.readmit_count,
+        "syncs": syncs,
+        "follower_advertised": any(r.get("follower_advertised")
+                                   for r in syncs),
+    }
+    mgr.close()
+    return res
+
+
+def main(argv: list[str]) -> int:
+    cfg = json.loads(Path(argv[0]).read_text())
+    rp = result_path(cfg)
+    rp.parent.mkdir(parents=True, exist_ok=True)
+    try:
+        res = serve_replica(cfg)
+        rc = 0
+    except Exception:                                   # noqa: BLE001
+        res = {"name": cfg.get("name"),
+               "error": traceback.format_exc()}
+        rc = 1
+    tmp = rp.with_suffix(f".{os.getpid()}.tmp")
+    tmp.write_text(json.dumps(res))
+    os.replace(tmp, rp)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

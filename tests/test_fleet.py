@@ -1,0 +1,149 @@
+"""Multi-process serving-fleet e2e: real follower processes, replica-to-
+replica delta propagation, draining admission control.
+
+Each replica is a separate interpreter (tests/fleet_harness.py child)
+mounting its own node-local tier over one shared checkpoint root — the
+closest a test gets to the paper's cooperating-cluster restart without a
+cluster.  The headline invariant: with one ungated "seed" replica, every
+OTHER replica reads ZERO shared-tier payload bytes — the whole model and
+every delta arrive through follower-cache peer tiers.
+"""
+import time
+
+import numpy as np
+import pytest
+
+import fleet_harness as fh
+
+pytestmark = pytest.mark.slow
+
+
+def _wait_status(registry, names, pred, timeout_s=60.0, what=""):
+    """Poll the fleet view until ``pred(entry)`` holds for every replica in
+    ``names`` — how the parent paces pushes against live children."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        status = registry.replica_status()
+        if all(n in status and pred(status[n]) for n in names):
+            return status
+        time.sleep(0.02)
+    raise TimeoutError(
+        f"fleet never reached {what}: {registry.replica_status()}")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(7)
+
+
+def _tree(rng, n_leaves=4, elems=60_000):
+    return {f"l{i}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def _mutate(tree, names, delta=1.0, elems=128):
+    out = dict(tree)
+    for k in names:
+        a = out[k].copy()
+        a[:elems] += delta
+        out[k] = a
+    return out
+
+
+def _shared_payload_bytes(res: dict) -> int:
+    return sum(r["bytes_by_tier"].get("shared", 0) for r in res["syncs"])
+
+
+def _peer_payload_bytes(res: dict) -> int:
+    return sum(v for r in res["syncs"]
+               for t, v in r["bytes_by_tier"].items()
+               if t.startswith("peer:"))
+
+
+def test_three_process_fleet_zero_shared_bytes_and_convergence(
+        tmp_path, rng):
+    pub = fh.FleetPublisher(tmp_path)
+    tree = _tree(rng)
+    pub.push(1, tree)
+
+    # r1 is the ungated seed (it pays the 1x shared fetch); r2/r3 gate on a
+    # peer advertisement before every fetch, so their bytes are
+    # replica-to-replica by construction, not by race luck
+    cfgs = [fh.replica_config(tmp_path, "r1", batches=2, final_step=3),
+            fh.replica_config(tmp_path, "r2", batches=2, final_step=3,
+                              gate_on_peers=True),
+            fh.replica_config(tmp_path, "r3", batches=2, final_step=3,
+                              gate_on_peers=True, pipeline_uploads=True)]
+    procs = [(c, fh.spawn_replica(c)) for c in cfgs]
+    names = [c["name"] for c in cfgs]
+
+    # two delta pushes land while the fleet is LIVE — each one only after
+    # every replica synced the previous step, so all three processes see
+    # all three steps (skipping intermediates is legal, just not what this
+    # test is about)
+    for step, leaf in ((2, "l0"), (3, "l2")):
+        _wait_status(pub.registry, names,
+                     lambda e, s=step: (e.get("step") or 0) >= s - 1,
+                     what=f"step {step - 1}")
+        tree = _mutate(tree, [leaf])
+        pub.push(step, tree)
+
+    results = fh.wait_fleet(procs, timeout_s=120.0)
+    for name, res in results.items():
+        assert "error" not in res, (name, res.get("error"),
+                                    res.get("stderr"))
+        assert res["final_step"] == 3, (name, res)
+        assert res["follower_advertised"], (name, res)
+        assert [r["step"] for r in res["syncs"]] == [1, 2, 3], (name, res)
+
+    # replica 2+ read ZERO shared-tier bytes: every byte (full tree at
+    # step 1, both deltas) was served by another replica's follower cache
+    for name in ("r2", "r3"):
+        assert _shared_payload_bytes(results[name]) == 0, (
+            name, [r["bytes_by_tier"] for r in results[name]["syncs"]])
+        assert _peer_payload_bytes(results[name]) > 0, (name, results[name])
+    # the seed paid the shared tier (there was nobody to peer from)
+    assert _shared_payload_bytes(results["r1"]) > 0
+
+    # ...and the fleet converged byte-identically to the publisher's tree
+    want = fh.tree_digest(tree)
+    assert [results[n]["digest"] for n in ("r1", "r2", "r3")] == [want] * 3
+    pub.close()
+
+
+def test_fleet_drains_and_readmits_under_paused_publisher(tmp_path, rng):
+    pub = fh.FleetPublisher(tmp_path)
+    tree = _tree(rng, n_leaves=2, elems=30_000)
+    pub.push(1, tree)
+
+    cfgs = [fh.replica_config(tmp_path, f"d{i}", batches=3, final_step=9,
+                              max_lag_steps=2, gen_s=0.005)
+            for i in range(2)]
+    procs = [(c, fh.spawn_replica(c)) for c in cfgs]
+    names = [c["name"] for c in cfgs]
+
+    # wait until the fleet serves step 1, then stall the publisher
+    # mid-push: announced, never committed — every replica must DRAIN
+    # (no StaleReplicaError, no exit) ...
+    _wait_status(pub.registry, names,
+                 lambda e: (e.get("step") or 0) >= 1, what="step 1")
+    pub.announce_uncommitted(9)
+    status = _wait_status(pub.registry, names,
+                          lambda e: e["phase"] == "draining",
+                          what="draining")
+    # ... then recover once the commit lands
+    tree = _mutate(tree, ["l0", "l1"])
+    pub.push(9, tree)
+
+    results = fh.wait_fleet(procs, timeout_s=120.0)
+    for name, res in results.items():
+        assert "error" not in res, (name, res.get("error"),
+                                    res.get("stderr"))
+        assert res["drain_count"] >= 1, (name, res)
+        assert res["readmit_count"] >= 1, (name, res)
+        assert res["final_step"] == 9, (name, res)
+        assert res["digest"] == fh.tree_digest(tree), name
+    # the fleet view saw the draining phase while the publisher was stalled
+    drained_seen = [e for e in status.values() if e["phase"] == "draining"]
+    assert drained_seen, status
+    pub.close()

@@ -6,6 +6,7 @@ Everything except the engine boundary test drives numpy trees — the sync
 protocol is deliberately jax-free.
 """
 import json
+import threading
 import time
 
 import numpy as np
@@ -250,8 +251,9 @@ def test_max_lag_gate_forces_swap_when_exceeded(tmp_path, rng):
 
 def test_max_lag_gate_fails_replica_under_paused_publisher(tmp_path, rng):
     # the publisher ANNOUNCED a step it never committed (crashed mid-push):
-    # the replica keeps serving within the bound, and fails out of rotation
-    # — rather than serving unboundedly stale weights — once past it
+    # the replica keeps serving within the bound; with on_stale="raise" it
+    # fails out of rotation — rather than serving unboundedly stale
+    # weights — once past it (the drain path is tested below)
     fab = Fabric(tmp_path)
     pub = fab.publisher()
     tree1 = _tree(rng)
@@ -261,7 +263,8 @@ def test_max_lag_gate_fails_replica_under_paused_publisher(tmp_path, rng):
     mgr.wait_promotions()
     handle = ParamHandle(host, step=1)
     client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
-                              replica="r0", max_lag_steps=2)
+                              replica="r0", max_lag_steps=2,
+                              on_stale="raise")
 
     fab.registry.announce_push(step=9, node="pub")  # never committed
     assert client.sync_once() is None               # keeps serving step 1
@@ -295,6 +298,299 @@ def test_follow_loop_applies_pushes(tmp_path, rng):
     assert n == 1 and [r["step"] for r in seen] == [2]
     assert handle.pending_step == 2                # swap stays engine-owned
     mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# draining admission control (on_stale="drain", the default)
+# ---------------------------------------------------------------------------
+
+def test_drain_and_readmit_under_paused_publisher(tmp_path, rng):
+    # same paused-publisher situation as above, default policy: the replica
+    # DRAINS (refuses new admissions, keeps serving what it started, shows
+    # "draining" fleet-wide) instead of raising mid-batch, and re-admits on
+    # the first boundary after it catches up
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", max_lag_steps=2)
+
+    assert client.admit() and not client.draining   # healthy: admitted
+
+    fab.registry.announce_push(step=9, node="pub")  # never committed
+    assert client.ensure_fresh() == 8               # returns lag, no raise
+    assert client.draining and client.drain_count == 1
+    assert not client.admit()                       # new work refused
+    assert client.admit() is False                  # stays draining...
+    assert client.drain_count == 1                  # ...but counted ONCE
+    assert fab.registry.replica_status()["r0"]["phase"] == "draining"
+    assert handle.step == 1                         # still serving step 1
+
+    # the publisher recovers and actually commits step 9
+    tree9 = _mutate(tree1, ["l0", "l3"])
+    fab.push(pub, 9, tree9)
+    assert client.admit()                           # caught up: re-admitted
+    assert not client.draining and client.readmit_count == 1
+    assert handle.step == 9                         # gate forced the swap
+    _assert_trees_equal(handle.current, tree9)
+    assert fab.registry.replica_status()["r0"]["phase"] == "serving"
+    mgr.close()
+    pub.close()
+
+
+def test_engine_admit_gates_on_sync_client(tmp_path, rng):
+    # Engine.admit() without a sync client is always True; with one it
+    # mirrors the client's drain state (numpy-only: build Engine lazily
+    # via object.__new__ to skip jit compilation)
+    from repro.serve.engine import Engine
+
+    eng = object.__new__(Engine)
+    eng.sync_client = None
+    assert eng.admit()
+
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", max_lag_steps=1)
+    eng.sync_client = client
+    assert eng.admit()
+    fab.registry.announce_push(step=7, node="pub")  # uncommitted: can't close
+    assert not eng.admit()
+    mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# thread safety: follow() thread + boundary ensure_fresh() must never
+# double-fetch one step or tear history
+# ---------------------------------------------------------------------------
+
+def test_sync_once_thread_safe_no_double_fetch(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", max_lag_steps=0)
+
+    # a slow, concurrency-counting restore: without the sync lock both
+    # threads pass the "target <= have" check before either stages, and
+    # the step is fetched twice
+    orig = mgr.restore
+    calls = {"n": 0, "live": 0, "max_live": 0}
+    mu = threading.Lock()
+
+    def slow_restore(*a, **kw):
+        with mu:
+            calls["n"] += 1
+            calls["live"] += 1
+            calls["max_live"] = max(calls["max_live"], calls["live"])
+        try:
+            time.sleep(0.05)
+            return orig(*a, **kw)
+        finally:
+            with mu:
+                calls["live"] -= 1
+    mgr.restore = slow_restore
+
+    tree2 = _mutate(tree1, ["l0"])
+    fab.push(pub, 2, tree2)
+    start = threading.Barrier(2)
+    errs = []
+
+    def worker(fn):
+        try:
+            start.wait()
+            fn()
+        except Exception as e:                      # noqa: BLE001
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(client.sync_once,)),
+          threading.Thread(target=worker, args=(client.ensure_fresh,))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs
+    assert calls["n"] == 1, "the same step was fetched twice"
+    assert calls["max_live"] == 1, "restores overlapped"
+    assert [r["step"] for r in client.history] == [2]
+    handle.commit_pending()
+    _assert_trees_equal(handle.current, tree2)
+    mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# registry fixes: negative-lag clamp + unique-tmp atomic writes
+# ---------------------------------------------------------------------------
+
+def test_replica_status_clamps_replica_ahead_of_announcement(tmp_path):
+    reg = CacheRegistry(tmp_path / "registry")
+    reg.announce_push(step=3, node="pub")           # stale announcement
+    reg.publish_replica("r0", step=5, phase="serving")  # replica is AHEAD
+    status = reg.replica_status()
+    # must agree with WeightSyncClient.lag()'s max(0, ...) clamp, not -2
+    assert status["r0"]["lag"] == 0
+
+
+def test_registry_atomic_writes_survive_concurrent_writers(tmp_path):
+    # the old fixed `<name>.json.tmp` path let two writers interleave
+    # write/rename: one renames the other's half-written tmp (or crashes on
+    # a vanished tmp), publishing torn-in-content JSON.  With mkstemp each
+    # writer renames only bytes it wrote in full.
+    reg = CacheRegistry(tmp_path / "registry")
+    stop = threading.Event()
+    errs: list = []
+    torn: list = []
+
+    def writer(tid):
+        try:
+            for i in range(200):
+                reg.announce_push(step=i, node=f"w{tid}")
+        except Exception as e:                      # noqa: BLE001
+            errs.append(e)
+        finally:
+            stop.set()
+
+    def reader():
+        while not stop.is_set():
+            ann = reg.latest_push()
+            if ann is not None and ann["node"] not in ("w0", "w1"):
+                torn.append(ann)
+
+    ts = [threading.Thread(target=writer, args=(i,)) for i in range(2)]
+    rt = threading.Thread(target=reader)
+    rt.start()
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not errs, errs
+    assert not torn, torn
+    assert reg.latest_push() is not None            # final entry parseable
+    assert not list((tmp_path / "registry").glob("*.tmp"))  # none leaked
+
+
+# ---------------------------------------------------------------------------
+# pipelined device upload: to_native of push N overlaps the next fetch
+# ---------------------------------------------------------------------------
+
+def test_pipelined_upload_counts_inflight_and_stages_in_order(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    pub = fab.publisher()
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+    mgr = fab.replica_manager("r0")
+    host, _ = mgr.restore(tree1)
+    mgr.wait_promotions()
+    handle = ParamHandle(host, step=1)
+
+    uploaded = []
+    gate = threading.Event()
+
+    def slow_to_native(tree):                       # a fake device upload
+        gate.wait(5.0)
+        uploaded.append(threading.current_thread().name)
+        return tree
+
+    client = WeightSyncClient(mgr, handle, tree1, registry=fab.registry,
+                              replica="r0", to_native=slow_to_native,
+                              pipeline_uploads=True)
+
+    tree2 = _mutate(tree1, ["l0"])
+    fab.push(pub, 2, tree2)
+    rec = client.sync_once()                        # returns BEFORE upload
+    assert rec is not None and rec["pipelined"]
+    assert not uploaded                             # upload still in flight
+    assert client.lag() == 0, "in-flight upload must count as have"
+    assert client.sync_once() is None               # and dedup the poll
+
+    tree3 = _mutate(tree2, ["l1"])
+    fab.push(pub, 3, tree3)
+    assert client.sync_once()["step"] == 3          # fetch overlaps upload 2
+    gate.set()
+    client.wait_uploads()
+    assert len(uploaded) == 2
+    assert all("weight-upload" in n for n in uploaded)
+    handle.commit_pending()
+    _assert_trees_equal(handle.current, tree3)      # ordered: 3 supersedes 2
+    client.close()
+    mgr.close()
+    pub.close()
+
+
+# ---------------------------------------------------------------------------
+# the tentpole, single-process: a follower that synced step N advertises its
+# chunk inventory, and the NEXT replica pulls the delta from it — zero
+# shared-tier bytes
+# ---------------------------------------------------------------------------
+
+def test_follower_advertises_and_serves_next_replica(tmp_path, rng):
+    fab = Fabric(tmp_path)
+    # publisher never promotes: the ONLY non-shared source any replica can
+    # use is another replica's follower cache
+    pub = CheckpointManager(fab.store_for("pub"), _pol(promote="off"),
+                            node="pub", registry=fab.registry)
+    tree1 = _tree(rng)
+    fab.push(pub, 1, tree1)
+
+    mgr1 = fab.replica_manager("r1")
+    host1, _ = mgr1.restore(tree1, 1, promote=False, follower_cache=True)
+    st1 = mgr1.last_restore_stats
+    assert st1["follower_advertised"] and st1["chunks_teed"] > 0
+    ent = fab.registry.follower_entries()
+    assert ent["r1"]["step"] == 1 and ent["r1"]["kind"] == "follower"
+    # chunk-only entries never reach the shard fabric's source list
+    assert "r1" not in fab.registry.warm_peers(1)
+    assert "r1" in fab.registry.near_peers(1)
+
+    handle1 = ParamHandle(host1, step=1)
+    client1 = WeightSyncClient(mgr1, handle1, tree1, registry=fab.registry,
+                               replica="r1")
+    tree2 = _mutate(tree1, ["l0"])
+    save_stats = pub.save(2, tree2)
+    fab.push(pub, 2, tree2)
+    delta_bytes = save_stats["delta"]["bytes_written"]
+    rec1 = client1.sync_once()
+    assert rec1["follower_advertised"]
+    assert fab.registry.follower_entries()["r1"]["step"] == 2
+
+    # replica 2, cold on this node family: the whole step-2 fetch must be
+    # served by r1's follower cache — zero shared-tier payload bytes
+    mgr2 = fab.replica_manager("r2")
+    host2, _ = mgr2.restore(tree1, 2, promote=False, follower_cache=True)
+    st2 = mgr2.last_restore_stats
+    by_tier = st2["bytes_by_tier"]
+    assert by_tier.get("shared", 0) == 0, by_tier
+    peer_bytes = sum(v for t, v in by_tier.items() if is_peer_tier(t))
+    assert peer_bytes > delta_bytes                 # full tree, from r1
+    _assert_trees_equal(host2, tree2)
+    assert fab.registry.follower_entries()["r2"]["step"] == 2
+
+    # invalidation withdraws the follower entry with the cache
+    mgr2.invalidate_promoted()
+    assert "r2" not in fab.registry.follower_entries()
+    mgr1.close()
+    mgr2.close()
     pub.close()
 
 
