@@ -328,23 +328,8 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
     }
 
 
-def _stamp_run_meta(patch: dict) -> dict:
-    """Merge hash-engine provenance into the artifact's run_meta.
-    ``merge_bench_ckpt_io`` replaces top-level keys wholesale, so run_meta is
-    read back and updated rather than overwritten (run.py writes it before
-    any module runs; a direct module invocation starts from empty)."""
-    art = Path(__file__).resolve().parents[1] / "BENCH_ckpt_io.json"
-    meta: dict = {}
-    try:
-        meta = json.loads(art.read_text()).get("run_meta") or {}
-    except (FileNotFoundError, ValueError, OSError):
-        pass
-    meta.update(patch)
-    return meta
-
-
 def run(results_dir: Path | None = None, smoke: bool = False):
-    from benchmarks.bench_startup import merge_bench_ckpt_io
+    from benchmarks.bench_startup import merge_bench_ckpt_io, stamp_run_meta
     from repro.checkpoint.serialization import (ENV_HASH_WORKERS,
                                                 auto_hash_workers)
 
@@ -352,7 +337,7 @@ def run(results_dir: Path | None = None, smoke: bool = False):
     detail_save = _delta_save_detail(payload_mb)
     detail_overlap = _delta_overlap_detail(payload_mb)
     detail_peer = _delta_peer_fetch_detail(payload_mb)
-    run_meta = _stamp_run_meta({
+    run_meta = stamp_run_meta({
         "hash_workers": detail_save["hash_workers"],
         "hash_workers_auto": auto_hash_workers(),
         ENV_HASH_WORKERS: os.environ.get(ENV_HASH_WORKERS),

@@ -140,6 +140,22 @@ def merge_bench_ckpt_io(updates: dict) -> None:
     tmp.rename(path)
 
 
+def stamp_run_meta(patch: dict) -> dict:
+    """Merge provenance keys into the artifact's run_meta and return the
+    merged dict (ready to hand to ``merge_bench_ckpt_io``).
+    ``merge_bench_ckpt_io`` replaces top-level keys wholesale, so run_meta is
+    read back and updated rather than overwritten (run.py writes it before
+    any module runs; a direct module invocation starts from empty)."""
+    path = Path(__file__).resolve().parents[1] / "BENCH_ckpt_io.json"
+    meta: dict = {}
+    try:
+        meta = json.loads(path.read_text()).get("run_meta") or {}
+    except (FileNotFoundError, ValueError, OSError):
+        pass
+    meta.update(patch)
+    return meta
+
+
 def _placement_requeue_detail(shard_mb: float, n_nodes: int = 2,
                               cycles: int = 4) -> dict:
     """Placed-vs-blind requeue latency curve (the tentpole's payoff): each

@@ -40,7 +40,6 @@ import json
 import threading
 import time
 import warnings
-import zlib
 from pathlib import Path
 from typing import Optional
 
@@ -259,6 +258,14 @@ class CheckpointManager:
         # hash engine (0 = auto / $REPRO_HASH_WORKERS, 1 = serial).
         self.fingerprint = policy.fingerprint
         self.hash_workers = policy.hash_workers
+        # compress: per-chunk frame level in the dedup store (0 = frameless
+        # raw bytes, the PR-8-and-earlier format).  Hashes/CRCs/fingerprints
+        # are always over UNCOMPRESSED content, so mixing levels across
+        # steps — or reading another manager's frameless chunks — is safe.
+        self.compress = policy.compress
+        # io_batch: ranges per batched read submission on restore (0 = env
+        # knob $REPRO_IO_BATCH / default, 1 = per-range reads)
+        self.io_batch = policy.io_batch
         self._hash_engine: Optional[SER.ChunkHashEngine] = None
         # pre-dump (precommit) state: hashed/pre-written snapshot of a step,
         # produced on a background pool, consumed by the next _save_delta
@@ -501,6 +508,7 @@ class CheckpointManager:
             # before swapping.
             prev = self._predump
             written: set = set((prev or {}).get("written") or ())
+            cbytes: dict = dict((prev or {}).get("cbytes") or {})
             # markers travel with the write set they protect: a superseded
             # pre-dump's marker stays up until the save that consumes (and
             # sweeps) the carried chunks finally lands
@@ -518,12 +526,16 @@ class CheckpointManager:
                     # path; the save re-checks existence before trusting a
                     # pre-written chunk, so a reap between now and then is
                     # repaired, not served
-                    self.store.put_chunk(self.tier, self.prefix, h, v,
+                    blob = (SER.frame_chunk(v, self.compress)
+                            if self.compress else v)
+                    self.store.put_chunk(self.tier, self.prefix, h, blob,
                                          replicas=self.replicas, force=True)
                     written.add(h)
+                    cbytes[h] = len(blob)
             self._predump = {
                 "step": step, "chunk_bytes": self.chunk_bytes,
                 "leaves": leaves, "written": written, "markers": markers,
+                "cbytes": cbytes,
                 "hash_s": hash_s, "write_s": time.perf_counter() - t1,
             }
 
@@ -587,9 +599,17 @@ class CheckpointManager:
         index_rel = f"{sdir}/shard_w{self.worker_id:05d}.chunks"
         parent = self._parent_manifest()
         parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        # carried compressed sizes: a reused chunk's on-disk frame size is
+        # whatever the step that WROTE it recorded — levels can change
+        # between steps without rewriting anything
+        parent_cbytes = {c["hash"]: c["cbytes"]
+                         for e in (parent or {}).get("leaves", ())
+                         for c in (e.get("chunks") or ())
+                         if "cbytes" in c}
         pre = self._consume_predump()
         pre_leaves = (pre or {}).get("leaves") or {}
         pre_written = (pre or {}).get("written") or set()
+        pre_cbytes = (pre or {}).get("cbytes") or {}
         pre_markers = (pre or {}).get("markers") or []
         parent_leaves = {}
         if self.fingerprint and parent is not None:
@@ -646,6 +666,8 @@ class CheckpointManager:
             for c, v in zip(chunks, views):
                 chunks_total += 1
                 bytes_total += c["nbytes"]
+                if c["hash"] in parent_cbytes:
+                    c["cbytes"] = parent_cbytes[c["hash"]]
                 if c["hash"] in parent_hashes:
                     continue
                 fresh += 1
@@ -704,18 +726,33 @@ class CheckpointManager:
                                        "t": time.time()}).encode(),
                            replicas=1)
             t1 = time.perf_counter()
-            written_b = written_c = predumped = 0
+            written_b = written_c = predumped = cbytes_b = 0
+            cbytes_out: dict[str, int] = {}
             for h, v in new_views.items():
                 if h in pre_written and self.store.exists(
                         self.tier, chunk_rel(self.prefix, h)):
                     predumped += 1
+                    if h in pre_cbytes:
+                        cbytes_out[h] = pre_cbytes[h]
                     continue
-                if self.store.put_chunk(self.tier, self.prefix, h, v,
+                # the frame wraps the STORED bytes only: h stays the blake2b
+                # of the raw view, so dedup/fingerprints are codec-blind
+                blob = (SER.frame_chunk(v, self.compress)
+                        if self.compress else v)
+                if self.store.put_chunk(self.tier, self.prefix, h, blob,
                                         replicas=self.replicas, force=True):
                     written_c += 1
                     written_b += v.nbytes
+                    cbytes_out[h] = len(blob)
+                    cbytes_b += len(blob)
+            if self.compress and cbytes_out:
+                for e in entries:
+                    for c in e["chunks"]:
+                        if c["hash"] in cbytes_out:
+                            c["cbytes"] = cbytes_out[c["hash"]]
             part["delta"]["chunks_written"] = written_c
             part["delta"]["bytes_written"] = written_b
+            part["delta"]["cbytes_written"] = cbytes_b
             part["delta"]["chunks_predumped"] = predumped
             if pre_written and self.num_workers == 1:
                 # pre-dumped chunks the live state no longer contains are
@@ -884,6 +921,12 @@ class CheckpointManager:
                 by_file.setdefault(e["file"], []).append(e)   # chunk plane
         return by_file
 
+    def _engine(self) -> ParallelRestorer:
+        """One restore engine per restore call, carrying this policy's
+        worker count and batched-submission width."""
+        return ParallelRestorer(self.store, workers=self.restore_workers,
+                                io_batch=self.io_batch)
+
     def _restore_chunked(self, sources: list[str], manifest: dict,
                          tee=None):
         """Chunk-plane restore against an ordered source list (stale local
@@ -894,7 +937,7 @@ class CheckpointManager:
         verified chunk — the follower-cache write-behind hangs off it."""
         leaves = manifest["leaves"]
         chunked = [e for e in leaves if "chunks" in e]
-        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        engine = self._engine()
         named, st = engine.restore_chunked(sources, chunked,
                                            prefix=self.prefix, tee=tee)
         stats = {"mode": "chunked", "tier": sources[-1], "delta": True,
@@ -933,7 +976,7 @@ class CheckpointManager:
                     named[e["path"]] = tensors[e["path"]]
             return named, {"mode": "serial", "tier": tier,
                            "files": len(by_file), "workers": 1}
-        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        engine = self._engine()
         named, st = engine.restore(tier, by_file)
         return named, {"mode": "parallel", "tier": tier, **st.as_dict()}
 
@@ -1044,8 +1087,7 @@ class CheckpointManager:
             elif len(sources) == 1:
                 named, stats = self._restore_files(sources[0], manifest)
             else:
-                engine = ParallelRestorer(self.store,
-                                          workers=self.restore_workers)
+                engine = self._engine()
                 named, st = engine.restore_multi(sources,
                                                  self._by_file(manifest))
                 stats = {"mode": "parallel", "tier": sources[-1],
@@ -1233,7 +1275,7 @@ class CheckpointManager:
         if not peer_tiers:
             return None
         sources = [self.promote_tier] + peer_tiers + [self.tier]
-        engine = ParallelRestorer(self.store, workers=self.restore_workers)
+        engine = self._engine()
         try:
             named, st = engine.restore_multi(sources, self._by_file(manifest))
         except (SER.ChecksumError, OSError, ValueError, KeyError):
@@ -1249,7 +1291,9 @@ class CheckpointManager:
     def _follower_tee(self, state: dict):
         """Write-behind for the serving fleet: park every chunk the restore
         fetched from a NON-local source in this node's promote tier as a
-        plain content-addressed file.  The promotion MARKER is never
+        plain content-addressed file (the on-disk FILE bytes — framed when
+        the step was written compressed — so the parked copy is
+        byte-identical to the source replica).  The promotion MARKER is never
         written — the follower does not own ``PROMOTED.json`` — so the
         ``promote=False`` read-only contract holds; what the tee builds is
         exactly the inventory ``publish_follower`` advertises.  Runs on the
@@ -1507,10 +1551,12 @@ class CheckpointManager:
             try:
                 self.store.copy_file(src, rel, self.promote_tier)
                 if kind == "chunk":
+                    # unframe_chunk verifies the raw CRC whether the copied
+                    # file is a frameless chunk or a compressed frame — the
+                    # promoted copy is the FILE, so both must verify
                     data = self.store.get(self.promote_tier, rel)
-                    if (len(data) != info["nbytes"]
-                            or zlib.crc32(data) != info["crc32"]):
-                        raise SER.ChecksumError(f"chunk crc mismatch: {rel}")
+                    SER.unframe_chunk(data, info["nbytes"],
+                                      crc32=info["crc32"])
                 else:
                     self.store.read_shard_leaves(
                         self.promote_tier, rel, [e["path"] for e in info],

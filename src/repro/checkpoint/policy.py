@@ -42,9 +42,13 @@ class CheckpointPolicy:
       ``incremental``
     * delta/chunk plane: ``delta``, ``chunk_bytes``, ``rebase_every``,
       ``fingerprint``, ``hash_workers`` (pre-dump rides on these — see
-      ``CheckpointManager.precommit``)
+      ``CheckpointManager.precommit``), ``compress`` (per-chunk frame
+      level: 0 = frameless raw, >=1 = zstd/zlib at that level; hashes stay
+      over uncompressed content so dedup and fingerprints are unaffected)
     * retention: ``keep_last``
-    * restore: ``restore_workers`` (0 = auto, 1 = serial)
+    * restore: ``restore_workers`` (0 = auto, 1 = serial), ``io_batch``
+      (ranges per batched read submission: 0 = $REPRO_IO_BATCH / default,
+      1 = per-range reads)
     * promotion: ``promote`` ("off"/"on_restore"/"eager"), ``promote_tier``
     """
 
@@ -62,10 +66,12 @@ class CheckpointPolicy:
     rebase_every: int = 8
     fingerprint: bool = False
     hash_workers: int = 0
+    compress: int = 0              # per-chunk frame level; 0 = frameless raw
     # -- retention ------------------------------------------------------
     keep_last: int = 3
     # -- restore --------------------------------------------------------
     restore_workers: int = 0
+    io_batch: int = 0              # ranges per submission; 0 = env/default
     # -- promotion ------------------------------------------------------
     promote: str = "off"
     promote_tier: str = "local"
@@ -104,6 +110,16 @@ class CheckpointPolicy:
             raise ValueError(
                 "delta chunk_bytes must be a positive multiple of 4 "
                 f"(fingerprint word stream), got {self.chunk_bytes}")
+        # 22 is zstd's max standard level; zlib callers are clamped to 9 at
+        # frame time.  compress only shapes the chunk plane's on-disk frame,
+        # so it is legal (and a no-op) without delta — but a negative level
+        # is always a typo.
+        if not 0 <= self.compress <= 22:
+            raise ValueError(
+                f"compress must be in [0, 22], got {self.compress}")
+        if self.io_batch < 0:
+            raise ValueError(
+                f"io_batch must be >= 0 (0 = auto), got {self.io_batch}")
 
     # field-name set for the __init__ shim (and the shim-equivalence test)
     @classmethod

@@ -56,10 +56,17 @@ import numpy as np
 
 from repro.checkpoint import serialization as SER
 from repro.checkpoint.store import chunk_rel, is_peer_tier
+from repro.utils.env import env_positive_int
 
 DEFAULT_SPLIT_BYTES = 32 << 20      # target max payload bytes per range task
 
 ENV_RESTORE_WORKERS = "REPRO_RESTORE_WORKERS"
+ENV_IO_BATCH = "REPRO_IO_BATCH"
+# ranges per batched submission: enough to amortize the per-submission
+# latency across a plan's small ranges, small enough that one failed batch
+# retries cheaply.  1 disables batching (the per-range legacy path, kept as
+# the benchmark baseline).
+DEFAULT_IO_BATCH = 16
 
 log = logging.getLogger(__name__)
 
@@ -74,22 +81,22 @@ def auto_workers(cap: Optional[int] = None) -> int:
     A mangled override (non-integer, zero, negative) degrades to auto sizing
     with a logged warning — an operator typo in a job script must never turn
     into a ``ValueError`` at restore time, which is exactly when the job can
-    least afford to die."""
-    env = os.environ.get(ENV_RESTORE_WORKERS, "").strip()
-    if env:
-        try:
-            n = int(env)
-        except ValueError:
-            n = None
-        if n is not None and n >= 1:
-            return n
-        log.warning(
-            "ignoring invalid %s=%r (want a positive integer); "
-            "falling back to auto worker sizing", ENV_RESTORE_WORKERS, env)
+    least afford to die (the parse contract lives in ``utils.env``)."""
+    n = env_positive_int(ENV_RESTORE_WORKERS, logger=log)
+    if n is not None:
+        return n
     n = max(2, os.cpu_count() or 2)
     if cap:
         n = min(n, max(1, cap))
     return n
+
+
+def auto_io_batch() -> int:
+    """Ranges per batched submission.  ``REPRO_IO_BATCH`` wins when set to a
+    positive integer; a mangled value degrades to the default with a logged
+    warning — the same contract as the two worker knobs."""
+    n = env_positive_int(ENV_IO_BATCH, logger=log)
+    return n if n is not None else DEFAULT_IO_BATCH
 
 
 @dataclasses.dataclass
@@ -103,7 +110,7 @@ class _ShardPlan:
 class _RangeTask:
     rel: str
     sources: list[tuple[str, Path]]  # ordered (tier, path) fallback chain
-    run: list[dict]                  # one contiguous run of header entries
+    runs: list[list[dict]]           # contiguous runs, one submission all-up
     nbytes: int
 
 
@@ -147,10 +154,15 @@ class ParallelRestorer:
     """
 
     def __init__(self, store, *, workers: int = 0,
-                 split_bytes: int = DEFAULT_SPLIT_BYTES):
+                 split_bytes: int = DEFAULT_SPLIT_BYTES,
+                 io_batch: int = 0):
         self.store = store
         self.workers = workers          # 0 = auto-size per restore (tier-aware)
         self.split_bytes = split_bytes
+        # ranges per submission: 0 = $REPRO_IO_BATCH / default, 1 = the
+        # per-range path (one pread per run — the pre-batching engine and
+        # the benchmark baseline), N = up to N ranges per pread_batch
+        self.io_batch = io_batch if io_batch > 0 else auto_io_batch()
 
     def _effective_workers(self, sources: list[str]) -> int:
         if self.workers > 0:
@@ -204,23 +216,49 @@ class ParallelRestorer:
             f"no intact replica for {'/'.join(sources)}:{rel}: {errs}")
 
     # -- execute -------------------------------------------------------
+    @staticmethod
+    def _run_span(run: list[dict]) -> tuple[int, int]:
+        start = run[0]["offset"]
+        return start, run[-1]["offset"] + run[-1]["nbytes"] - start
+
     def _exec_task(self, task: _RangeTask):
-        """One ranged read with fallback down the (tier, path) source chain;
-        returns the task's leaves plus (bytes_read, fallback_count, tier)."""
+        """One submission with fallback down the (tier, path) source chain;
+        returns the task's leaves plus (bytes_read, fallback_count, tier).
+
+        A multi-run task is drained as ONE batched submission
+        (``pread_batch``: vectored/direct reads, one slot, one simulated
+        latency); a single-run task — and every task when ``io_batch == 1``
+        — keeps the per-range ``pread``, byte-identical either way.  Any
+        failed range fails the source: the whole task falls back to the
+        next (tier, path), exactly the pre-batching semantics."""
         errs: list[tuple[str, str, str]] = []
         for i, (tier, p) in enumerate(task.sources):
             out: dict[str, np.ndarray] = {}
             try:
                 with self.store.tier_slots(tier):
-                    nbytes = SER.read_run(
-                        lambda off, n: self.store.pread(tier, p, off, n),
-                        task.run, out)
+                    if len(task.runs) > 1:
+                        spans = [self._run_span(r) for r in task.runs]
+                        got = self.store.pread_batch(
+                            tier, [(p, s, n) for s, n in spans])
+                        nbytes = 0
+                        for run, (start, _n), blob in zip(task.runs, spans,
+                                                          got):
+                            if isinstance(blob, Exception):
+                                raise blob
+                            nbytes += SER.read_run(
+                                lambda off, n, b=blob, s=start:
+                                    b[off - s:off - s + n],
+                                run, out)
+                    else:
+                        nbytes = SER.read_run(
+                            lambda off, n: self.store.pread(tier, p, off, n),
+                            task.runs[0], out)
                 return out, nbytes, i, tier
             except (SER.ChecksumError, OSError, ValueError) as e:
                 errs.append((tier, str(p), repr(e)))
         raise SER.ChecksumError(
             f"no intact replica for {task.rel}"
-            f"@{task.run[0]['offset']}+{task.nbytes}: {errs}")
+            f"@{task.runs[0][0]['offset']}+{task.nbytes}: {errs}")
 
     # -- public --------------------------------------------------------
     def restore(self, tier: str, by_file: dict[str, list[dict]]):
@@ -321,25 +359,76 @@ class ParallelRestorer:
                         stats.bytes_by_tier.get(tier, 0) + n)
         return self._finish_chunked(leaves, buffers, stats)
 
+    def _chunk_done(self, w: _ChunkWork, blob: bytes, raw: bytes, tier: str,
+                    by_tier: dict, buffers: dict, prefix: str, tee) -> None:
+        """Account + scatter one verified chunk.  ``blob`` is the on-disk
+        file (possibly compression-framed), ``raw`` the verified content;
+        byte attribution and the tee both use the FILE bytes, so
+        ``bytes_by_tier`` reports what actually moved over each tier and a
+        follower cache parks the same framed file the source tier holds."""
+        by_tier[tier] = by_tier.get(tier, 0) + len(blob)
+        if tee is not None:
+            tee(chunk_rel(prefix, w.digest), blob, tier)
+        for leaf_path, off in w.users:
+            memoryview(buffers[leaf_path])[off:off + w.nbytes] = raw
+
     def _exec_chunk_task(self, srcs: list[str], index: int,
                          ws: list[_ChunkWork], buffers: dict,
                          prefix: str = "", tee=None):
-        """Fetch one batch of chunks, each with independent fallback down its
-        own source chain, and scatter the verified bytes into the leaf
-        buffers (disjoint regions, so no locking)."""
+        """Fetch one batch of chunks and scatter the verified bytes into the
+        leaf buffers (disjoint regions, so no locking).
+
+        With ``io_batch > 1`` the task's chunks are grouped by their
+        first-choice source tier and each group drains as ONE batched
+        submission (whole chunk files — a compressed chunk's on-disk size
+        differs from its raw size, so the backend stats each file).  Any
+        chunk the batch could not serve — and every chunk at
+        ``io_batch == 1`` — retries independently down its own (tier, path)
+        chain, exactly the pre-batching fault model.  Chunk files are
+        unframed (``SER.unframe_chunk``) with the manifest CRC as arbiter,
+        so compressed and legacy frameless chunks verify identically."""
         by_tier: dict[str, int] = {}
         fallbacks = 0
-        for w in ws:
+        pending: list[_ChunkWork] = list(ws)
+        if self.io_batch > 1:
+            groups: dict[str, list[tuple[_ChunkWork, Path]]] = {}
+            unplaced: list[_ChunkWork] = []
+            for w in ws:
+                chain = [(t, p)
+                         for t in _ordered_tiers(srcs, w.by_tier, index)
+                         for p in w.by_tier[t]]
+                if chain:
+                    groups.setdefault(chain[0][0], []).append((w, chain[0][1]))
+                else:
+                    unplaced.append(w)
+            pending = unplaced
+            for tier, members in sorted(groups.items()):
+                with self.store.tier_slots(tier):
+                    got = self.store.pread_batch(
+                        tier, [(p, 0, None) for _, p in members])
+                for (w, _p), blob in zip(members, got):
+                    raw = None
+                    if isinstance(blob, bytes):
+                        try:
+                            raw = SER.unframe_chunk(blob, w.nbytes,
+                                                    crc32=w.crc32)
+                        except SER.ChecksumError:
+                            raw = None
+                    if raw is None:
+                        pending.append(w)   # per-chunk fallback below
+                    else:
+                        self._chunk_done(w, blob, raw, tier, by_tier,
+                                         buffers, prefix, tee)
+        for w in pending:
             errs: list[tuple[str, str, str]] = []
             chain = [(t, p) for t in _ordered_tiers(srcs, w.by_tier, index)
                      for p in w.by_tier[t]]
             for i, (tier, p) in enumerate(chain):
                 try:
                     with self.store.tier_slots(tier):
-                        raw = self.store.pread(tier, p, 0, w.nbytes)
-                    if w.crc32 is not None and zlib.crc32(raw) != w.crc32:
-                        raise SER.ChecksumError(
-                            f"crc mismatch for chunk {w.digest}")
+                        blob = self.store.pread(tier, p, 0,
+                                                os.stat(p).st_size)
+                    raw = SER.unframe_chunk(blob, w.nbytes, crc32=w.crc32)
                     break
                 except (SER.ChecksumError, OSError, ValueError) as e:
                     errs.append((tier, str(p), repr(e)))
@@ -347,11 +436,8 @@ class ParallelRestorer:
                 raise SER.ChecksumError(
                     f"no intact source for chunk {w.digest}: {errs}")
             fallbacks += i
-            by_tier[tier] = by_tier.get(tier, 0) + len(raw)
-            if tee is not None:
-                tee(chunk_rel(prefix, w.digest), raw, tier)
-            for leaf_path, off in w.users:
-                memoryview(buffers[leaf_path])[off:off + w.nbytes] = raw
+            self._chunk_done(w, blob, raw, tier, by_tier, buffers, prefix,
+                             tee)
         return by_tier, fallbacks
 
     @staticmethod
@@ -385,14 +471,32 @@ class ParallelRestorer:
             tasks = []
             j = 0
             for plan in plans:
-                for run in SER.coalesce_runs(plan.want,
-                                             max_run_bytes=self.split_bytes):
+                runs = SER.coalesce_runs(plan.want,
+                                         max_run_bytes=self.split_bytes)
+                # pack runs into one submission each, up to io_batch ranges
+                # and split_bytes total — small scattered leaves share one
+                # vectored read, a split_bytes-sized run stays its own task
+                # so LPT granularity (and the straggler bound) is unchanged
+                packs: list[list[list[dict]]] = []
+                cur: list[list[dict]] = []
+                cur_bytes = 0
+                for run in runs:
+                    rb = sum(t["nbytes"] for t in run)
+                    if cur and (len(cur) >= self.io_batch
+                                or cur_bytes + rb > self.split_bytes):
+                        packs.append(cur)
+                        cur, cur_bytes = [], 0
+                    cur.append(run)
+                    cur_bytes += rb
+                if cur:
+                    packs.append(cur)
+                for pack in packs:
                     chain = [(t, p)
                              for t in _ordered_tiers(sources, plan.by_tier, j)
                              for p in plan.by_tier[t]]
                     tasks.append(_RangeTask(
-                        rel=plan.rel, sources=chain, run=run,
-                        nbytes=sum(t["nbytes"] for t in run)))
+                        rel=plan.rel, sources=chain, runs=pack,
+                        nbytes=sum(t["nbytes"] for r in pack for t in r)))
                     j += 1
             tasks.sort(key=lambda t: t.nbytes, reverse=True)   # LPT order
             stats.tasks = len(tasks)

@@ -54,6 +54,7 @@ from typing import BinaryIO, Callable, Optional
 import jax
 import numpy as np
 
+from repro.utils.env import env_positive_int
 from repro.utils.tree import flatten_with_names, unflatten_like
 
 log = logging.getLogger(__name__)
@@ -75,6 +76,114 @@ DELTA_CHUNK_BYTES = 1 << 20
 
 class ChecksumError(RuntimeError):
     pass
+
+
+# -- per-chunk compression frame (the dedup store's on-disk unit) -----------
+#
+# A chunk FILE may carry a 4-byte frame header in front of its payload:
+#
+#   [3B magic b'RCK'][1B codec]  codec 0 = raw, 1 = zlib, 2 = zstd
+#
+# Hashes, per-chunk CRCs and fingerprints are always over the UNCOMPRESSED
+# content — the frame changes only what sits on disk, so dedup, the
+# fingerprint pre-filter and the pre-dump pipeline are untouched, and two
+# stores at different compression levels still agree on every chunk name.
+# Frameless files (every chunk written before compression existed, and all
+# writes at ``compress=0``) stay readable: ``unframe_chunk`` disambiguates
+# by the known raw size, with the caller's CRC as the final arbiter for the
+# pathological raw-bytes-that-look-framed case.
+
+CHUNK_FRAME_MAGIC = b"RCK"
+CHUNK_FRAME_LEN = 4
+CODEC_RAW = 0
+CODEC_ZLIB = 1
+CODEC_ZSTD = 2
+
+try:                                    # optional: not in every environment
+    import zstandard as _zstd           # pragma: no cover - env-dependent
+except ImportError:
+    _zstd = None
+
+
+def zstd_available() -> bool:
+    return _zstd is not None
+
+
+def preferred_codec() -> int:
+    """zstd when the binding is importable, else stdlib zlib — compression
+    must degrade, never become an install requirement."""
+    return CODEC_ZSTD if _zstd is not None else CODEC_ZLIB
+
+
+def frame_chunk(data, level: int, codec: Optional[int] = None) -> bytes:
+    """Compress + frame one chunk payload for the dedup store.
+
+    ``level`` is the policy's ``compress`` level (>= 1; level 0 means "no
+    framing at all" and must be handled by the caller — existing stores stay
+    byte-identical by default).  A chunk that compresses to no gain is
+    framed with ``CODEC_RAW`` instead, so the reader never pays an inflate
+    for incompressible float noise and ``cbytes`` stays honest (raw + 4)."""
+    if level < 1:
+        raise ValueError(f"frame_chunk wants level >= 1, got {level}")
+    raw = bytes(data)
+    codec = preferred_codec() if codec is None else codec
+    if codec == CODEC_ZSTD and _zstd is not None:
+        comp = _zstd.ZstdCompressor(level=level).compress(raw)
+    elif codec in (CODEC_ZSTD, CODEC_ZLIB):
+        codec = CODEC_ZLIB
+        comp = zlib.compress(raw, min(level, 9))
+    elif codec == CODEC_RAW:
+        comp = raw
+    else:
+        raise ValueError(f"unknown chunk codec {codec}")
+    if len(comp) >= len(raw):
+        codec, comp = CODEC_RAW, raw
+    return CHUNK_FRAME_MAGIC + bytes([codec]) + comp
+
+
+def _inflate_chunk(codec: int, payload: bytes, raw_nbytes: int) -> bytes:
+    if codec == CODEC_RAW:
+        return payload
+    if codec == CODEC_ZLIB:
+        return zlib.decompress(payload)
+    if codec == CODEC_ZSTD:
+        if _zstd is None:
+            raise ChecksumError(
+                "chunk framed with zstd but no zstd binding is available")
+        return _zstd.ZstdDecompressor().decompress(
+            payload, max_output_size=raw_nbytes)
+    raise ChecksumError(f"unknown chunk codec {codec}")
+
+
+def unframe_chunk(blob: bytes, raw_nbytes: int,
+                  crc32: Optional[int] = None) -> bytes:
+    """Recover the raw chunk content from an on-disk chunk file.
+
+    Speaks both generations: framed files (4-byte header) and legacy
+    frameless files (payload only).  Disambiguation: a frameless chunk's
+    file length equals its raw ``nbytes`` exactly, a framed one's almost
+    never does — and in the one ambiguous corner (raw content that happens
+    to start with the frame magic AND a framed file whose length equals the
+    raw size) the caller-pinned ``crc32`` decides.  Raises ``ChecksumError``
+    when no interpretation yields ``raw_nbytes`` verified bytes."""
+    framed = (len(blob) >= CHUNK_FRAME_LEN
+              and blob[:len(CHUNK_FRAME_MAGIC)] == CHUNK_FRAME_MAGIC)
+    legacy_sized = len(blob) == raw_nbytes
+    if framed:
+        try:
+            raw = _inflate_chunk(blob[3], blob[CHUNK_FRAME_LEN:], raw_nbytes)
+        except (zlib.error, ValueError, ChecksumError):
+            raw = None
+        if (raw is not None and len(raw) == raw_nbytes
+                and (crc32 is None or zlib.crc32(raw) == crc32)):
+            return raw
+        # framed parse failed (or mismatched the pinned CRC): raw content
+        # starting with the magic bytes is still a legal legacy file
+    if legacy_sized and (crc32 is None or zlib.crc32(blob) == crc32):
+        return blob
+    raise ChecksumError(
+        f"chunk file unreadable as framed or raw ({len(blob)} bytes, "
+        f"want {raw_nbytes} raw)")
 
 
 # ---------------------------------------------------------------------------
@@ -306,18 +415,10 @@ def auto_hash_workers(cap: Optional[int] = None) -> int:
     ``REPRO_HASH_WORKERS`` wins outright when set to a positive integer;
     otherwise the CPU count (min 2, optionally capped).  A mangled override
     degrades to auto sizing with a logged warning — an operator typo must
-    never kill a save."""
-    env = os.environ.get(ENV_HASH_WORKERS, "").strip()
-    if env:
-        try:
-            n = int(env)
-        except ValueError:
-            n = None
-        if n is not None and n >= 1:
-            return n
-        log.warning(
-            "ignoring invalid %s=%r (want a positive integer); "
-            "falling back to auto worker sizing", ENV_HASH_WORKERS, env)
+    never kill a save (the parse contract lives in ``utils.env``)."""
+    n = env_positive_int(ENV_HASH_WORKERS, logger=log)
+    if n is not None:
+        return n
     n = max(2, os.cpu_count() or 2)
     if cap:
         n = min(n, max(1, cap))

@@ -14,6 +14,8 @@ import time
 from pathlib import Path
 from typing import Optional
 
+from repro.utils.atomic import atomic_write_json
+
 
 class WalltimeTracker:
     def __init__(self, limit_s: float, margin_s: float = 30.0,
@@ -93,7 +95,8 @@ class RequeueFile:
             # the warm-peer roots this attempt knew about: a scheduler-less
             # restart can still source its restore from them (peer fabric)
             rec["peer_roots"] = {str(k): str(v) for k, v in peers.items()}
-        tmp = self.path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(rec))
-        tmp.rename(self.path)
+        # unique-tmp atomic publish: two attempts racing a requeue record
+        # (a dying process and its replacement) must never interleave
+        # write/rename on one fixed tmp path
+        atomic_write_json(self.path, rec)
         return rec

@@ -91,6 +91,15 @@ def build_argparser():
     ap.add_argument("--hash-workers", type=int, default=0,
                     help="parallel chunk hash/CRC pool size for delta saves "
                          "(0=auto / $REPRO_HASH_WORKERS, 1=serial)")
+    ap.add_argument("--ckpt-compress", type=int, default=0,
+                    help="per-chunk compression level for delta chunk files "
+                         "(0=off; >=1 frames each stored chunk with zstd "
+                         "when available, else zlib — hashes stay over the "
+                         "raw bytes, so dedup and fingerprints are "
+                         "unaffected)")
+    ap.add_argument("--io-batch", type=int, default=0,
+                    help="ranges per batched restore-read submission "
+                         "(0=auto / $REPRO_IO_BATCH, 1=per-range reads)")
     ap.add_argument("--ckpt-fingerprint", action="store_true",
                     help="delta saves stamp per-chunk 32-bit fingerprints "
                          "and use the parent step's as a dirty-chunk "
@@ -167,6 +176,8 @@ def main(argv=None) -> int:
                               restore_workers=args.restore_workers,
                               fingerprint=args.ckpt_fingerprint,
                               hash_workers=args.hash_workers,
+                              compress=args.ckpt_compress,
+                              io_batch=args.io_batch,
                               promote=args.ckpt_promote,
                               promote_tier=args.ckpt_promote_tier)
     ckpt = CheckpointManager(store, policy, worker_id=args.worker_id,

@@ -30,11 +30,11 @@ whatever the registry holds.
 from __future__ import annotations
 
 import json
-import os
-import tempfile
 import time
 from pathlib import Path
 from typing import Iterable, Optional
+
+from repro.utils.atomic import atomic_write_json
 
 ENV_PEER_ROOTS = "REPRO_PEER_ROOTS"
 REGISTRY_DIRNAME = "peer_registry"
@@ -68,28 +68,11 @@ class CacheRegistry:
         return self.root / f"{node}.json"
 
     def _atomic_write(self, p: Path, obj: dict) -> None:
-        """Atomic JSON publish with a UNIQUE tmp name.  A fixed
-        ``<name>.json.tmp`` path would let two concurrent writers of the
-        same key (a requeued publisher racing its predecessor, two threads
-        of one process) interleave write/rename: one renames the other's
-        half-written tmp, publishing a file that parses as JSON but mixes
-        two entries — exactly the torn-in-content state atomicity is meant
-        to rule out.  ``mkstemp`` in the target's own directory keeps the
-        rename same-filesystem (hence atomic), and each writer renames only
-        bytes it wrote in full."""
-        p.parent.mkdir(parents=True, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(prefix=p.name + ".", suffix=".tmp",
-                                   dir=p.parent)
-        try:
-            with os.fdopen(fd, "w") as f:
-                f.write(json.dumps(obj))
-            os.replace(tmp, p)
-        except BaseException:
-            try:
-                os.unlink(tmp)
-            except OSError:
-                pass
-            raise
+        """Atomic JSON publish with a UNIQUE tmp name — the shared
+        ``utils.atomic`` contract (see that module for why a fixed
+        ``<name>.json.tmp`` path would tear under concurrent writers of
+        the same key)."""
+        atomic_write_json(p, obj)
 
     def publish(self, node: str, *, step: int, files: Iterable[str],
                 local_root, tier: str = "local",

@@ -627,6 +627,9 @@ def test_bench_artifact_prunes_stale_keys(tmp_path):
     from benchmarks import bench_delta
     assert set(bench_delta.BENCH_KEYS) == {"delta_save", "delta_save_overlap",
                                            "delta_peer_fetch"}
+    # and the io-plane row is declared so the pruner never reaps it
+    from benchmarks import bench_cr_overhead
+    assert "restore_engine_io" in bench_cr_overhead.BENCH_KEYS
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,463 @@
+"""Honest I/O plane: batched ranged-read submission (``pread_batch`` /
+``get_ranges``), direct-I/O aligned reads, the per-chunk compression frame,
+calibrated tier profiles, and the shared atomic-write/env-knob helpers."""
+import json
+import logging
+import os
+import zlib
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import calibrate as CAL
+from repro.checkpoint import io_backend as IOB
+from repro.checkpoint import serialization as SER
+from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+from repro.checkpoint.restore_engine import (ENV_IO_BATCH, DEFAULT_IO_BATCH,
+                                             ParallelRestorer, auto_io_batch)
+from repro.checkpoint.store import TieredStore
+from repro.utils.atomic import atomic_write_bytes, atomic_write_json
+from tests.faults import ByteCountingStoreMixin, PreadFaults
+
+
+def _edge_tree(rng):
+    """Leaves exercising every alignment corner: zero-byte, sub-alignment,
+    unaligned tails, and a few normal multi-chunk leaves."""
+    return {
+        "zero": np.zeros(0, dtype=np.float32),
+        "tiny": rng.standard_normal(3).astype(np.float64),      # 24 bytes
+        "tail": rng.standard_normal(33_333).astype(np.float32),  # odd tail
+        "big0": rng.standard_normal(80_000).astype(np.float32),
+        "big1": rng.integers(0, 8, 80_000).astype(np.float32),   # compressible
+    }
+
+
+def _assert_trees_equal(got, want):
+    for k, a in want.items():
+        assert np.asarray(got[k]).dtype == np.asarray(a).dtype, k
+        assert np.array_equal(np.asarray(got[k]), np.asarray(a)), k
+
+
+# ---------------------------------------------------------------------------
+# chunk frame codec
+# ---------------------------------------------------------------------------
+
+def test_frame_round_trip_all_corners():
+    for data in (b"", b"x", b"hello " * 4096, os.urandom(10_000)):
+        for level in (1, 3, 9):
+            blob = SER.frame_chunk(data, level)
+            assert blob[:3] == SER.CHUNK_FRAME_MAGIC
+            out = SER.unframe_chunk(blob, len(data), crc32=zlib.crc32(data))
+            assert out == data
+        # legacy frameless blobs pass through untouched
+        assert SER.unframe_chunk(data, len(data),
+                                 crc32=zlib.crc32(data)) == data
+
+
+def test_frame_stores_raw_when_compression_does_not_pay():
+    data = os.urandom(4096)          # incompressible: deflate would GROW it
+    blob = SER.frame_chunk(data, 9)
+    assert blob[3] == SER.CODEC_RAW
+    assert len(blob) == len(data) + SER.CHUNK_FRAME_LEN
+    assert SER.unframe_chunk(blob, len(data)) == data
+
+
+def test_frame_ambiguity_corner_crc_arbiter():
+    # a LEGACY chunk whose raw content starts with the magic and whose length
+    # could parse either way: the CRC must arbitrate, never the guess
+    legacy = SER.CHUNK_FRAME_MAGIC + bytes([SER.CODEC_RAW]) + b"\x07" * 96
+    out = SER.unframe_chunk(legacy, len(legacy), crc32=zlib.crc32(legacy))
+    assert out == legacy
+    # and the framed reading of the same bytes wins when ITS payload matches
+    payload = legacy[SER.CHUNK_FRAME_LEN:]
+    out = SER.unframe_chunk(legacy, len(payload), crc32=zlib.crc32(payload))
+    assert out == payload
+
+
+def test_frame_corruption_raises_checksum_error():
+    data = b"payload " * 512
+    blob = bytearray(SER.frame_chunk(data, 3))
+    blob[10] ^= 0xFF
+    with pytest.raises(SER.ChecksumError):
+        SER.unframe_chunk(bytes(blob), len(data), crc32=zlib.crc32(data))
+
+
+# ---------------------------------------------------------------------------
+# io_backend: batched submission + direct I/O
+# ---------------------------------------------------------------------------
+
+def _scatter_files(tmp_path, rng):
+    files = {}
+    for name, n in (("a.bin", 100_000), ("b.bin", 4096), ("c.bin", 1)):
+        p = tmp_path / name
+        p.write_bytes(bytes(rng.integers(0, 256, n, dtype=np.uint8)))
+        files[name] = p
+    return files
+
+
+def _mixed_requests(files):
+    a, b, c = files["a.bin"], files["b.bin"], files["c.bin"]
+    return [
+        (a, 0, 10),            # head
+        (a, 99_990, 10),       # exact tail
+        (a, 4095, 2),          # straddles an alignment boundary
+        (a, 50_000, 0),        # zero-byte range
+        (b, 0, 4096),          # whole file
+        (b, 1, 17),            # sub-alignment offset AND length
+        (c, 0, 1),             # one-byte file
+        (a, 12_345, 4321),
+    ]
+
+
+def test_read_ranges_buffered_matches_slices(tmp_path, rng):
+    files = _scatter_files(tmp_path, rng)
+    reqs = _mixed_requests(files)
+    got = IOB.read_ranges(reqs)
+    for (p, off, n), out in zip(reqs, got):
+        assert out == p.read_bytes()[off:off + n]
+
+
+def test_read_ranges_direct_io_matches_buffered(tmp_path, rng):
+    align = IOB.probe_direct_io(tmp_path)
+    if align is None:
+        pytest.skip("filesystem rejects O_DIRECT")
+    files = _scatter_files(tmp_path, rng)
+    reqs = _mixed_requests(files)
+    direct = IOB.read_ranges(reqs, direct_align=align)
+    buffered = IOB.read_ranges(reqs)
+    assert direct == buffered
+
+
+def test_read_ranges_direct_falls_back_cleanly(tmp_path, rng, monkeypatch):
+    """An O_DIRECT open failing mid-batch must degrade to buffered for that
+    file — same results, no exception slots."""
+    files = _scatter_files(tmp_path, rng)
+    reqs = _mixed_requests(files)
+    real_open = os.open
+
+    def no_direct(path, flags, *a, **kw):
+        if flags & getattr(os, "O_DIRECT", 0):
+            raise OSError(22, "injected: O_DIRECT unsupported")
+        return real_open(path, flags, *a, **kw)
+
+    monkeypatch.setattr(os, "open", no_direct)
+    got = IOB.read_ranges(reqs, direct_align=4096)
+    for (p, off, n), out in zip(reqs, got):
+        assert out == p.read_bytes()[off:off + n]
+
+
+def test_read_ranges_missing_file_fails_per_slot(tmp_path, rng):
+    ok = tmp_path / "ok.bin"
+    ok.write_bytes(b"k" * 64)
+    got = IOB.read_ranges([(ok, 0, 8), (tmp_path / "gone.bin", 0, 8)])
+    assert got[0] == b"k" * 8
+    assert isinstance(got[1], OSError)
+
+
+def test_probe_direct_io_cached_per_directory(tmp_path, monkeypatch):
+    IOB.reset_direct_io_cache()
+    calls = {"n": 0}
+    real_open = os.open
+
+    def counting(path, flags, *a, **kw):
+        if flags & getattr(os, "O_DIRECT", 0):
+            calls["n"] += 1
+        return real_open(path, flags, *a, **kw)
+
+    monkeypatch.setattr(os, "open", counting)
+    first = IOB.probe_direct_io(tmp_path)
+    again = IOB.probe_direct_io(tmp_path)
+    assert first == again
+    assert calls["n"] <= 1          # second call served from the cache
+    IOB.reset_direct_io_cache()
+
+
+# ---------------------------------------------------------------------------
+# store: pread_batch / get_ranges
+# ---------------------------------------------------------------------------
+
+def _ranged_store(tmp_path, rng, cls=TieredStore):
+    store = cls(tmp_path, seed=0)
+    store.put("shared", "f/a.bin",
+              bytes(rng.integers(0, 256, 60_000, dtype=np.uint8)),
+              replicas=2)
+    store.put("shared", "f/b.bin", b"B" * 5000, replicas=1)
+    return store
+
+
+def test_get_ranges_matches_get_range(tmp_path, rng):
+    store = _ranged_store(tmp_path, rng)
+    reqs = [("f/a.bin", 0, 100), ("f/a.bin", 59_990, 10),
+            ("f/b.bin", 4096, 904), ("f/a.bin", 500, 0),
+            ("f/b.bin", 3, 17)]
+    assert store.get_ranges("shared", reqs) == [
+        store.get_range("shared", r, o, n) for r, o, n in reqs]
+    store.close()
+
+
+def test_pread_batch_whole_file_and_missing(tmp_path, rng):
+    store = _ranged_store(tmp_path, rng)
+    p = store.replica_paths("shared", "f/b.bin")[0]
+    out = store.pread_batch("shared", [(p, 0, None), (p, 4000, None),
+                                       (tmp_path / "nope.bin", 0, None)])
+    assert out[0] == b"B" * 5000
+    assert out[1] == b"B" * 1000
+    assert isinstance(out[2], Exception)
+    store.close()
+
+
+def test_get_ranges_replica_fallback_on_fault(tmp_path, rng):
+    store = _ranged_store(tmp_path, rng)
+    want = [store.get_range("shared", "f/a.bin", o, n)
+            for o, n in ((0, 64), (1000, 512))]
+    # first replica's reads die; get_ranges must fall back per-range
+    victim = store.replica_paths("shared", "f/a.bin")[0]
+    with PreadFaults(store, lambda p, off, n: Path(p) == Path(victim)):
+        got = store.get_ranges("shared", [("f/a.bin", 0, 64),
+                                          ("f/a.bin", 1000, 512)])
+    assert got == want
+    store.close()
+
+
+def test_pread_batch_composes_with_pread_hooks(tmp_path, rng):
+    """Instrumented stores override ``_pread``; the batch plane must degrade
+    to per-range reads through the hook so every byte stays observed."""
+
+    class Counting(ByteCountingStoreMixin, TieredStore):
+        pass
+
+    store = _ranged_store(tmp_path, rng, cls=Counting)
+    got = store.get_ranges("shared", [("f/a.bin", 0, 1000),
+                                      ("f/b.bin", 0, 5000)])
+    assert [len(b) for b in got] == [1000, 5000]
+    assert store.read_by_tier.get("shared") == 6000
+    store.close()
+
+
+def test_direct_io_mode_switch(tmp_path, rng):
+    store = _ranged_store(tmp_path, rng)
+    store.direct_io = False
+    assert store._direct_alignment("shared",
+                                   store.replica_paths("shared",
+                                                       "f/a.bin")[0]) is None
+    store.direct_io = True          # probe every tier, even hot ones
+    p = store.replica_paths("shared", "f/a.bin")[0]
+    align = store._direct_alignment("shared", p)
+    if align is not None:           # host-dependent; correctness either way
+        got = store.get_ranges("shared", [("f/a.bin", 1, 17)])
+        assert got == [store.get_range("shared", "f/a.bin", 1, 17)]
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# restore engine: batched + compressed byte-identity (v2 AND v3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compress", [0, 3])
+def test_batched_restore_identity_v3(tmp_path, rng, compress):
+    tree = _edge_tree(rng)
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, CheckpointPolicy(
+        delta=True, replicas=2, chunk_bytes=1 << 16, compress=compress))
+    m.save(1, tree)
+    m.commit(1, num_workers=1)
+    m.close()
+    # serial raw-path reference (io_batch=1, one worker) vs batched pool
+    serial = CheckpointManager(store, CheckpointPolicy(
+        delta=True, restore_workers=1, io_batch=1))
+    batched = CheckpointManager(store, CheckpointPolicy(
+        delta=True, restore_workers=4, io_batch=16))
+    out_s = serial.restore(tree)
+    out_b = batched.restore(tree)
+    named_s = out_s[0] if isinstance(out_s, tuple) else out_s
+    named_b = out_b[0] if isinstance(out_b, tuple) else out_b
+    _assert_trees_equal(named_s, tree)
+    _assert_trees_equal(named_b, tree)
+    for k in tree:
+        assert np.asarray(named_b[k]).tobytes() == \
+            np.asarray(named_s[k]).tobytes()
+    serial.close()
+    batched.close()
+    store.close()
+
+
+def test_batched_restore_identity_v2(tmp_path, rng):
+    tree = _edge_tree(rng)
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, CheckpointPolicy(replicas=2))
+    m.save(1, tree)
+    m.commit(1, num_workers=1)
+    m.close()
+    for workers, io_batch in ((1, 1), (4, 16)):
+        mr = CheckpointManager(store, CheckpointPolicy(
+            restore_workers=workers, io_batch=io_batch))
+        out = mr.restore(tree)
+        named = out[0] if isinstance(out, tuple) else out
+        _assert_trees_equal(named, tree)
+        mr.close()
+    store.close()
+
+
+def test_compressed_manifest_records_cbytes_and_carries_them(tmp_path, rng):
+    tree = _edge_tree(rng)
+    store = TieredStore(tmp_path, seed=0)
+    m = CheckpointManager(store, CheckpointPolicy(
+        delta=True, replicas=1, chunk_bytes=1 << 16, compress=3))
+    m.save(1, tree)
+    m.commit(1, num_workers=1)
+    man1 = m.read_manifest(1)
+    chunks1 = [c for e in man1["leaves"] for c in e["chunks"]]
+    assert all("cbytes" in c for c in chunks1)
+    # the compressible leaf must actually shrink on disk
+    assert sum(c["cbytes"] for c in chunks1) < sum(c["nbytes"]
+                                                   for c in chunks1)
+    # a delta step reuses the parent's chunks and CARRIES their cbytes
+    tree2 = dict(tree)
+    tree2["big0"] = tree["big0"] + 1.0
+    m.save(2, tree2)
+    m.commit(2, num_workers=1)
+    man2 = m.read_manifest(2)
+    by_hash1 = {c["hash"]: c["cbytes"] for c in chunks1}
+    reused = [c for e in man2["leaves"] for c in e["chunks"]
+              if c["hash"] in by_hash1]
+    assert reused and all(c["cbytes"] == by_hash1[c["hash"]] for c in reused)
+    m.close()
+    store.close()
+
+
+def test_compressed_promotion_restore(tmp_path, rng):
+    """Promotion copies the FRAMED file; the verify must speak the frame."""
+    tree = _edge_tree(rng)
+    store = TieredStore(tmp_path, seed=0)
+    pol = CheckpointPolicy(delta=True, replicas=1, chunk_bytes=1 << 16,
+                           compress=3, promote="on_restore")
+    m = CheckpointManager(store, pol)
+    m.save(1, tree)
+    m.commit(1, num_workers=1)
+    out = m.restore(tree)
+    m.wait_promotions()
+    assert not m.promote_failures
+    m2 = CheckpointManager(store, pol)
+    out2 = m2.restore(tree)
+    named = out2[0] if isinstance(out2, tuple) else out2
+    _assert_trees_equal(named, tree)
+    assert (m2.last_restore_stats or {}).get("promoted")
+    m.close()
+    m2.close()
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# env knob + policy validation
+# ---------------------------------------------------------------------------
+
+def test_io_batch_env_knob(monkeypatch):
+    monkeypatch.setenv(ENV_IO_BATCH, "7")
+    assert auto_io_batch() == 7
+    monkeypatch.delenv(ENV_IO_BATCH)
+    assert auto_io_batch() == DEFAULT_IO_BATCH
+
+
+@pytest.mark.parametrize("bad", ["zero?", "0", "-3", "1.5"])
+def test_io_batch_env_knob_invalid_warns_and_falls_back(monkeypatch, caplog,
+                                                        bad):
+    monkeypatch.setenv(ENV_IO_BATCH, bad)
+    with caplog.at_level(logging.WARNING):
+        assert auto_io_batch() == DEFAULT_IO_BATCH
+    assert any(ENV_IO_BATCH in r.message for r in caplog.records)
+
+
+def test_io_batch_env_whitespace_is_unset(monkeypatch, caplog):
+    monkeypatch.setenv(ENV_IO_BATCH, "  ")
+    with caplog.at_level(logging.WARNING):
+        assert auto_io_batch() == DEFAULT_IO_BATCH
+    assert not caplog.records          # empty = unset, not a typo
+
+
+def test_policy_validates_compress_and_io_batch():
+    with pytest.raises(ValueError):
+        CheckpointPolicy(compress=-1)
+    with pytest.raises(ValueError):
+        CheckpointPolicy(compress=23)
+    with pytest.raises(ValueError):
+        CheckpointPolicy(io_batch=-1)
+    assert CheckpointPolicy(compress=22, io_batch=1)
+
+
+def test_engine_io_batch_plumbing(tmp_path, monkeypatch):
+    store = TieredStore(tmp_path, seed=0)
+    assert ParallelRestorer(store, io_batch=5).io_batch == 5
+    monkeypatch.setenv(ENV_IO_BATCH, "9")
+    assert ParallelRestorer(store).io_batch == 9
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def test_calibrate_tiers_measures_applies_and_caches(tmp_path, monkeypatch):
+    store = TieredStore(tmp_path, seed=0)
+    before = {t: s.bandwidth_gbps for t, s in store.tiers.items()}
+    prof = CAL.calibrate_tiers(store, file_bytes=1 << 18, ranges=4)
+    assert (tmp_path / CAL.CALIB_FILENAME).exists()
+    for t, spec in store.tiers.items():
+        assert CAL._MIN_CONC <= spec.concurrency <= CAL._MAX_CONC
+        assert spec.bandwidth_gbps > 0 and spec.latency_s > 0
+    assert {t for t in before} == set(store.tiers)
+    # second call must serve the cache, not re-measure
+    calls = {"n": 0}
+    real = CAL._measure_root
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    monkeypatch.setattr(CAL, "_measure_root", counting)
+    prof2 = CAL.calibrate_tiers(store, file_bytes=1 << 18, ranges=4)
+    assert calls["n"] == 0
+    assert prof2["roots"] == prof["roots"]
+    # force re-measures
+    CAL.calibrate_tiers(store, force=True, file_bytes=1 << 18, ranges=4)
+    assert calls["n"] >= 1
+    store.close()
+
+
+def test_calibrate_skips_peer_tiers(tmp_path):
+    store = TieredStore(tmp_path / "me", seed=0)
+    peer_tier = store.add_peer("other", tmp_path / "other")
+    spec_before = store.tiers[peer_tier]
+    CAL.calibrate_tiers(store, file_bytes=1 << 18, ranges=4)
+    assert store.tiers[peer_tier] is spec_before
+    assert not (tmp_path / "other").exists()    # no cross-node side effects
+    store.close()
+
+
+# ---------------------------------------------------------------------------
+# atomic write helper
+# ---------------------------------------------------------------------------
+
+def test_atomic_write_bytes_and_json(tmp_path):
+    p = tmp_path / "deep" / "rec.json"
+    atomic_write_json(p, {"a": 1})
+    assert json.loads(p.read_text()) == {"a": 1}
+    atomic_write_bytes(p, b"raw")
+    assert p.read_bytes() == b"raw"
+    # no tmp litter after successful writes
+    assert [f.name for f in p.parent.iterdir()] == ["rec.json"]
+
+
+def test_atomic_write_failure_leaves_no_litter(tmp_path, monkeypatch):
+    p = tmp_path / "rec.json"
+    atomic_write_json(p, {"keep": True})
+
+    def boom(src, dst):
+        raise OSError("injected replace failure")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="injected"):
+        atomic_write_bytes(p, b"clobber")
+    monkeypatch.undo()
+    assert json.loads(p.read_text()) == {"keep": True}
+    assert [f.name for f in tmp_path.iterdir()] == ["rec.json"]
