@@ -34,7 +34,8 @@ from pathlib import Path
 import numpy as np
 
 # keys this module owns in BENCH_ckpt_io.json (run.py prunes stale ones)
-BENCH_KEYS = ("delta_save", "delta_save_overlap", "delta_peer_fetch")
+BENCH_KEYS = ("delta_save", "delta_save_overlap", "delta_peer_fetch",
+              "delta_save_device", "delta_predump_iterative")
 
 # workers ≥ 4 per the hash-engine acceptance bar; forced explicitly so the
 # row measures the parallel engine even on a small CI/container CPU budget
@@ -328,6 +329,144 @@ def _delta_peer_fetch_detail(payload_mb: int, n_leaves: int = 8,
     }
 
 
+def _delta_save_device_detail(payload_mb: int, n_leaves: int = 8,
+                              chunk_bytes: int = 256 << 10,
+                              steps: int = 3) -> dict:
+    """Device-resident dirty detection vs the host delta path on the SAME
+    mutation pattern (one dirty chunk per interval).  The host path
+    snapshots the whole tree before diffing — ``d2h_bytes`` ≈ the payload
+    every step (ratio ~1.0).  The device_fp path fingerprints the live
+    leaves first and gathers only fp-dirty chunk runs, so its
+    ``d2h_bytes / bytes_total`` should track the churn fraction, not the
+    model size.  Byte-identity of the two paths is a TEST
+    (tests/test_device_fp.py); this row measures the D2H bill."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+    from repro.checkpoint.store import TieredStore
+
+    rng = np.random.default_rng(0)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+
+    def arm(root: Path, device_fp: bool) -> list[dict]:
+        store = TieredStore(root, seed=0, sim_io_factor=SIM_IO)
+        m = CheckpointManager(store, CheckpointPolicy(
+            replicas=1, delta=True, chunk_bytes=chunk_bytes,
+            fingerprint=True, device_fp=device_fp,
+            hash_workers=HASH_WORKERS))
+        m.save(1, tree)
+        m.commit(1)
+        cur, rows = tree, []
+        for i, s in enumerate(range(2, 3 + steps)):
+            cur = _mutate(cur, 1.0 / n_leaves, chunk_bytes // 8)
+            t0 = time.perf_counter()
+            p = m.save(s, cur)
+            wall = time.perf_counter() - t0
+            m.commit(s)
+            if i == 0:
+                continue               # warm-up, as in _delta_save_detail
+            d_ = p["delta"]
+            rows.append({"step": s, "wall_s": wall,
+                         "bytes_total": d_["bytes_total"],
+                         "chunks_total": d_["chunks_total"],
+                         "chunks_hashed": d_["chunks_hashed"],
+                         "chunks_clean_device": d_["chunks_clean_device"],
+                         "d2h_bytes": d_["d2h_bytes"],
+                         "d2h_s": d_["d2h_s"],
+                         "fp_device_s": d_["fp_device_s"],
+                         "stall_s": d_["stall_s"]})
+        m.close()
+        return rows
+
+    with tempfile.TemporaryDirectory() as d:
+        host_rows = arm(Path(d) / "host", False)
+        dev_rows = arm(Path(d) / "device", True)
+
+    mean = lambda rows, k: float(np.mean([r[k] for r in rows]))  # noqa: E731
+    ratio = lambda rows: float(np.mean(                          # noqa: E731
+        [r["d2h_bytes"] / max(r["bytes_total"], 1) for r in rows]))
+    churn = float(np.mean([r["chunks_hashed"] / max(r["chunks_total"], 1)
+                           for r in dev_rows]))
+    return {
+        "payload_mb": sum(a.nbytes for a in tree.values()) / 1e6,
+        "chunk_bytes": chunk_bytes,
+        "host_steps": host_rows,
+        "device_steps": dev_rows,
+        "host_d2h_bytes_ratio": ratio(host_rows),
+        "d2h_bytes_ratio": ratio(dev_rows),
+        "churn_chunk_fraction": churn,
+        "fp_device_s": mean(dev_rows, "fp_device_s"),
+        "d2h_s": mean(dev_rows, "d2h_s"),
+        "host_stall_s": mean(host_rows, "stall_s"),
+        "device_stall_s": mean(dev_rows, "stall_s"),
+    }
+
+
+def _delta_predump_iterative_detail(payload_mb: int, n_leaves: int = 8,
+                                    chunk_bytes: int = 256 << 10) -> dict:
+    """Iterative pre-copy (CRIU): two pre-dump leads before the save, the
+    second using the first as its fingerprint reference.  Churn pattern:
+    a BIG dirtying between the parent and lead 1 (two chunks per leaf), a
+    small one between the leads (one chunk in two leaves), nothing after
+    lead 2.  Lead 1 hashes the big churn, lead 2 only the small one, the
+    save ~nothing — against a single early pre-dump, where the save itself
+    pays for everything dirtied after it."""
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager, CheckpointPolicy
+    from repro.checkpoint.store import TieredStore
+
+    rng = np.random.default_rng(0)
+    elems = payload_mb * (1 << 20) // 4 // n_leaves
+    tree = {f"l{i:02d}": rng.standard_normal(elems).astype(np.float32)
+            for i in range(n_leaves)}
+    big = chunk_bytes // 2                    # elems: dirties 2 chunks/leaf
+    small = chunk_bytes // 8
+
+    def arm(root: Path, leads: int) -> dict:
+        store = TieredStore(root, seed=0, sim_io_factor=SIM_IO)
+        m = CheckpointManager(store, CheckpointPolicy(
+            replicas=1, delta=True, chunk_bytes=chunk_bytes,
+            fingerprint=True, hash_workers=HASH_WORKERS))
+        m.save(1, tree)
+        m.commit(1)
+        cur = _mutate(tree, 1.0, big)
+        lead_stats = []
+        m.precommit(2, cur)                   # lead N-2 (or the only lead)
+        lead_stats.append(m.wait_predump())
+        cur = _mutate(cur, 2.0 / n_leaves, small)
+        if leads > 1:
+            m.precommit(3, cur)               # lead N-1: only the small churn
+            lead_stats.append(m.wait_predump())
+        t0 = time.perf_counter()
+        p = m.save(4, cur)
+        stall = time.perf_counter() - t0
+        m.commit(4)
+        m.close()
+        return {"leads": lead_stats, "save_stall_s": stall,
+                "save_chunks_hashed": p["delta"]["chunks_hashed"],
+                "save_chunks_predumped": p["delta"]["chunks_predumped"]}
+
+    with tempfile.TemporaryDirectory() as d:
+        single = arm(Path(d) / "single", 1)
+        iterative = arm(Path(d) / "iter", 2)
+
+    return {
+        "payload_mb": sum(a.nbytes for a in tree.values()) / 1e6,
+        "chunk_bytes": chunk_bytes,
+        "single": single,
+        "iterative": iterative,
+        "lead1_chunks_hashed": iterative["leads"][0]["chunks_hashed"],
+        "lead2_chunks_hashed": iterative["leads"][1]["chunks_hashed"],
+        "single_save_chunks_hashed": single["save_chunks_hashed"],
+        "iter_save_chunks_hashed": iterative["save_chunks_hashed"],
+        "single_save_stall_s": single["save_stall_s"],
+        "iter_save_stall_s": iterative["save_stall_s"],
+    }
+
+
 def run(results_dir: Path | None = None, smoke: bool = False):
     from benchmarks.bench_startup import merge_bench_ckpt_io, stamp_run_meta
     from repro.checkpoint.serialization import (ENV_HASH_WORKERS,
@@ -337,6 +476,8 @@ def run(results_dir: Path | None = None, smoke: bool = False):
     detail_save = _delta_save_detail(payload_mb)
     detail_overlap = _delta_overlap_detail(payload_mb)
     detail_peer = _delta_peer_fetch_detail(payload_mb)
+    detail_device = _delta_save_device_detail(payload_mb)
+    detail_iter = _delta_predump_iterative_detail(payload_mb)
     run_meta = stamp_run_meta({
         "hash_workers": detail_save["hash_workers"],
         "hash_workers_auto": auto_hash_workers(),
@@ -345,13 +486,17 @@ def run(results_dir: Path | None = None, smoke: bool = False):
     merge_bench_ckpt_io({"delta_save": detail_save,
                          "delta_save_overlap": detail_overlap,
                          "delta_peer_fetch": detail_peer,
+                         "delta_save_device": detail_device,
+                         "delta_predump_iterative": detail_iter,
                          "run_meta": run_meta})
     if results_dir:
         results_dir.mkdir(parents=True, exist_ok=True)
         (results_dir / "delta.json").write_text(json.dumps(
             {"delta_save": detail_save,
              "delta_save_overlap": detail_overlap,
-             "delta_peer_fetch": detail_peer},
+             "delta_peer_fetch": detail_peer,
+             "delta_save_device": detail_device,
+             "delta_predump_iterative": detail_iter},
             indent=1))
     rows = [
         {
@@ -383,6 +528,25 @@ def run(results_dir: Path | None = None, smoke: bool = False):
                 f"delta_bytes={detail_peer['delta_bytes_committed']} "
                 f"shared={detail_peer['shared_bytes']} "
                 f"speedup_vs_cold={detail_peer['speedup_vs_cold']:.1f}x"),
+        },
+        {
+            "name": "ckpt_delta_save_device",
+            "us_per_call": detail_device["device_stall_s"] * 1e6,
+            "derived": (
+                f"d2h_ratio={detail_device['d2h_bytes_ratio']:.3f} "
+                f"host_d2h_ratio={detail_device['host_d2h_bytes_ratio']:.3f} "
+                f"churn={detail_device['churn_chunk_fraction']:.3f} "
+                f"fp_device={detail_device['fp_device_s']*1e3:.2f}ms"),
+        },
+        {
+            "name": "ckpt_delta_predump_iterative",
+            "us_per_call": detail_iter["iter_save_stall_s"] * 1e6,
+            "derived": (
+                f"lead1_hashed={detail_iter['lead1_chunks_hashed']} "
+                f"lead2_hashed={detail_iter['lead2_chunks_hashed']} "
+                f"save_hashed={detail_iter['iter_save_chunks_hashed']} "
+                f"single_save_hashed="
+                f"{detail_iter['single_save_chunks_hashed']}"),
         },
     ]
     return rows

@@ -37,6 +37,7 @@ shards.
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 import warnings
@@ -257,6 +258,19 @@ class CheckpointManager:
         # the full-hash guarantee.  hash_workers sizes the parallel chunk
         # hash engine (0 = auto / $REPRO_HASH_WORKERS, 1 = serial).
         self.fingerprint = policy.fingerprint
+        # device_fp=True: dirty detection happens ON the accelerator —
+        # ``save(step, tree)`` takes the live DEVICE tree, runs the chunk
+        # fingerprint kernel over every resident leaf, and device_gets only
+        # the chunks whose fingerprint differs from the pre-dump/parent
+        # reference; clean chunks reuse the reference entries with zero
+        # device->host bytes.  Entries always carry ``fp`` so the
+        # comparison survives restarts (the manifest persists the vector).
+        # Same 32-bit-collision trade-off as fingerprint=True, accepted by
+        # opting in.  ``device_fp_impl`` picks the kernel backend
+        # (auto=jnp oracle, pallas, pallas_interpret; env override for
+        # tests and TPU rollout).
+        self.device_fp = policy.device_fp
+        self.device_fp_impl = os.environ.get("REPRO_DEVICE_FP_IMPL", "auto")
         self.hash_workers = policy.hash_workers
         # compress: per-chunk frame level in the dedup store (0 = frameless
         # raw bytes, the PR-8-and-earlier format).  Hashes/CRCs/fingerprints
@@ -321,6 +335,11 @@ class CheckpointManager:
         view, and serves as both the incremental diff key and the stored shard
         checksum — see the ``diff`` comment below for where it is computed.
         """
+        if self.delta and self.device_fp:
+            # device-resident dirty detection: NO full snapshot — the
+            # fingerprint pass runs on the live tree and only fp-dirty
+            # chunk ranges are device_get'd
+            return self._save_delta_device(step, tree, extra_meta)
         t0 = time.time()
         records = SER.tree_to_records(tree)            # snapshot (device_get)
         snap_s = time.time() - t0
@@ -471,12 +490,18 @@ class CheckpointManager:
         """
         if not self.delta:
             raise ValueError("precommit requires delta mode")
+        if self.device_fp:
+            return self._precommit_device(step, tree)
         t0 = time.time()
         records = SER.tree_to_records(tree)        # snapshot (device_get)
         snap_s = time.time() - t0
+        snap_bytes = sum(np.asarray(a).nbytes for _, a in records)
         mine = self._my_leaves(records)
         parent = self._parent_manifest()
         parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        parent_leaves = {e["path"]: e["chunks"]
+                         for e in (parent or {}).get("leaves", ())
+                         if "chunks" in e}
 
         def do_predump():
             # intent marker FIRST: the coordinator's orphan sweep
@@ -490,15 +515,6 @@ class CheckpointManager:
                                        "worker": self.worker_id,
                                        "t": time.time()}).encode(),
                            replicas=1)
-            t1 = time.perf_counter()
-            fps = {name: SER.fingerprint_chunks(
-                       SER.as_byte_view(np.asarray(arr)), self.chunk_bytes)
-                   for _, name, arr in mine}
-            hashed, _ = self.hash_engine.chunk_records(
-                [(name, arr) for _, name, arr in mine], self.chunk_bytes,
-                fps=fps)
-            hash_s = time.perf_counter() - t1
-            t1 = time.perf_counter()
             # superseding an unconsumed pre-dump must not drop its write
             # set: those chunks are referenced by no manifest, so only the
             # consuming save's sweep can ever reclaim them.  Carrying them
@@ -507,6 +523,39 @@ class CheckpointManager:
             # run serially on one pool and _consume_predump drains it
             # before swapping.
             prev = self._predump
+            if prev is not None and prev.get("chunk_bytes") != self.chunk_bytes:
+                prev_leaves = {}
+            else:
+                prev_leaves = (prev or {}).get("leaves") or {}
+            t1 = time.perf_counter()
+            fps = {name: SER.fingerprint_chunks(
+                       SER.as_byte_view(np.asarray(arr)), self.chunk_bytes)
+                   for _, name, arr in mine}
+            # iterative pre-copy (CRIU): at lead k the PREVIOUS lead's
+            # entries (else the parent manifest's) are the reference — an
+            # fp-clean chunk reuses its hash/CRC outright, so lead N-1
+            # hashes only what dirtied since lead N-2, not the whole tree.
+            # Same 32-bit trust the pre-dump consumption path already
+            # accepts (fps are stamped on every pre-dump entry).
+            known: dict = {}
+            for _, name, _arr in mine:
+                fp = fps[name]
+                if name in prev_leaves:
+                    refs = prev_leaves[name]["entries"]
+                else:
+                    refs = parent_leaves.get(name)
+                if not refs:
+                    continue
+                kmap = {i: e for i, e in enumerate(refs)
+                        if i < len(fp) and e.get("fp") is not None
+                        and int(fp[i]) == int(e["fp"])}
+                if kmap:
+                    known[name] = kmap
+            hashed, hstats = self.hash_engine.chunk_records(
+                [(name, arr) for _, name, arr in mine], self.chunk_bytes,
+                known=known, fps=fps)
+            hash_s = time.perf_counter() - t1
+            t1 = time.perf_counter()
             written: set = set((prev or {}).get("written") or ())
             cbytes: dict = dict((prev or {}).get("cbytes") or {})
             # markers travel with the write set they protect: a superseded
@@ -515,6 +564,7 @@ class CheckpointManager:
             markers = list((prev or {}).get("markers") or ())
             markers.append(marker_rel)
             leaves = {}
+            prewritten_n = 0
             for _, name, _arr in mine:
                 entries, views, leaf_crc = hashed[name]
                 leaves[name] = {"entries": entries, "crc32": leaf_crc}
@@ -532,11 +582,17 @@ class CheckpointManager:
                                          replicas=self.replicas, force=True)
                     written.add(h)
                     cbytes[h] = len(blob)
+                    prewritten_n += 1
             self._predump = {
                 "step": step, "chunk_bytes": self.chunk_bytes,
                 "leaves": leaves, "written": written, "markers": markers,
                 "cbytes": cbytes,
                 "hash_s": hash_s, "write_s": time.perf_counter() - t1,
+                "chunks_hashed": hstats["chunks_hashed"],
+                "chunks_prewritten": prewritten_n,
+                "d2h_bytes": snap_bytes, "d2h_s": snap_s,
+                "fp_device_s": 0.0,
+                "chunks_clean_device": 0,
             }
 
         self._predump_pending = True
@@ -571,6 +627,111 @@ class CheckpointManager:
                 self.store.delete_file(self.tier, rel)
             return None
         return pre
+
+    def _precommit_device(self, step: int, tree) -> dict:
+        """Device-side pre-dump: the fingerprint pass and the ranged D2H of
+        dirty chunk runs happen HERE on the training thread (donation-safe
+        — no deferred device reads), so the step-visible cost is already
+        proportional to what dirtied; hashing and the pre-write then run on
+        the pool as usual.  At lead k the previous lead's entries are the
+        fp reference, so iterative pre-dumps each touch only the bytes that
+        changed since the one before (CRIU pre-copy)."""
+        t0 = time.time()
+        # drain (don't consume) any running pre-dump so its entries are
+        # readable as this round's reference
+        self.wait_predump()
+        prev = self._predump
+        prev_ok = (prev is not None
+                   and prev.get("chunk_bytes") == self.chunk_bytes)
+        prev_leaves = (prev.get("leaves") or {}) if prev_ok else {}
+        prev_written = (prev.get("written") or set()) if prev_ok else set()
+        from repro.utils.tree import flatten_with_names
+
+        named = flatten_with_names(tree)
+        mine = [(i, name, leaf) for i, (name, leaf) in enumerate(named)
+                if i % self.num_workers == self.worker_id]
+        parent = self._parent_manifest()
+        parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        parent_leaves = {e["path"]: e for e in (parent or {}).get(
+            "leaves", ()) if "chunks" in e}
+
+        def refs_for(name):
+            if name in prev_leaves:
+                return prev_leaves[name]["entries"]
+            pl = parent_leaves.get(name)
+            return pl["chunks"] if pl else None
+
+        def trust(h):
+            # no existence probe at pre-dump time — the consuming save
+            # re-verifies every pre-written hash before trusting it, so a
+            # reap between now and then is repaired there
+            return h in parent_hashes or h in prev_written
+
+        plans, dstats = self._device_scan(mine, refs_for, trust)
+        snap_s = time.time() - t0
+
+        def do_predump():
+            # marker-first + carry semantics identical to the host pre-dump
+            # above; see the comments there
+            marker_rel = self._inflight_rel("predump", step)
+            self.store.put(self.tier, marker_rel,
+                           json.dumps({"kind": "predump", "step": step,
+                                       "worker": self.worker_id,
+                                       "t": time.time()}).encode(),
+                           replicas=1)
+            prev2 = self._predump
+            written: set = set((prev2 or {}).get("written") or ())
+            cbytes: dict = dict((prev2 or {}).get("cbytes") or {})
+            markers = list((prev2 or {}).get("markers") or ())
+            markers.append(marker_rel)
+            t1 = time.perf_counter()
+            hashed, hashed_n = self._plans_to_leaves(plans)
+            hash_s = time.perf_counter() - t1
+            t1 = time.perf_counter()
+            leaves = {}
+            prewritten_n = 0
+            for _idx, name, _dtype, _shape, _nbytes, _slots in plans:
+                entries, views, leaf_crc = hashed[name]
+                leaves[name] = {"entries": entries, "crc32": leaf_crc}
+                for e, v in zip(entries, views):
+                    h = e["hash"]
+                    # v is None for fp-clean slots: their bytes never left
+                    # the device, and their chunk is already durable (parent
+                    # manifest or a previous lead's pre-write)
+                    if h in parent_hashes or h in written or v is None:
+                        continue
+                    blob = (SER.frame_chunk(v, self.compress)
+                            if self.compress else v)
+                    self.store.put_chunk(self.tier, self.prefix, h, blob,
+                                         replicas=self.replicas, force=True)
+                    written.add(h)
+                    cbytes[h] = len(blob)
+                    prewritten_n += 1
+            self._predump = {
+                "step": step, "chunk_bytes": self.chunk_bytes,
+                "leaves": leaves, "written": written, "markers": markers,
+                "cbytes": cbytes,
+                "hash_s": hash_s, "write_s": time.perf_counter() - t1,
+                "chunks_hashed": hashed_n,
+                "chunks_prewritten": prewritten_n,
+                "d2h_bytes": dstats["d2h_bytes"],
+                "d2h_s": dstats["d2h_s"],
+                "fp_device_s": dstats["fp_device_s"],
+                "chunks_clean_device": dstats["chunks_clean_device"],
+            }
+
+        self._predump_pending = True
+        pool = self._writer
+        if pool is None:
+            if self._predumper is None:
+                self._predumper = WorkPool(max_inflight=2, workers=1,
+                                           name="ckpt-predump")
+            pool = self._predumper
+        pool.submit(do_predump)
+        return {"step": step, "snapshot_s": snap_s,
+                "fp_device_s": dstats["fp_device_s"],
+                "d2h_bytes": dstats["d2h_bytes"],
+                "d2h_s": dstats["d2h_s"]}
 
     def _save_delta(self, step: int, records, snap_s: float,
                     extra_meta: Optional[dict]) -> dict:
@@ -703,8 +864,41 @@ class CheckpointManager:
                 "hash_workers": hstats["hash_workers"],
                 "predump_step": pre["step"] if pre else None,
                 "fp_s": fp_s, "hash_s": hash_s, "diff_s": diff_s,
+                # D2H accounting, host-path baseline: save() snapshotted the
+                # ENTIRE tree before this method ran, so the device->host
+                # cost is the full payload regardless of churn — exactly
+                # the contrast the delta_save_device bench row draws
+                "d2h_bytes": sum(
+                    np.asarray(a).nbytes for _, a in records),
+                "d2h_s": snap_s,
+                "fp_device_s": 0.0,
+                "chunks_clean_device": 0,
             },
         }
+        return self._finish_delta(step, part, entries, new_views,
+                                  pre=pre, parent=parent,
+                                  snap_s=snap_s, t_entry=t_entry)
+
+    def _finish_delta(self, step: int, part: dict, entries: list,
+                      new_views: dict, *, pre: Optional[dict],
+                      parent: Optional[dict], snap_s: float,
+                      t_entry: float) -> dict:
+        """Shared write tail of the host (``_save_delta``) and device
+        (``_save_delta_device``) delta paths: intent marker, chunk writes,
+        single-worker orphan sweep, v3 index, wpart, marker teardown, and
+        the stall stamp.  ``new_views`` maps hash -> byte view; the device
+        path may map a hash to ``None`` when the bytes were never fetched
+        (clean since the pre-dump, pre-written, existence-verified during
+        the save's sync phase) — if such a chunk vanishes before the write
+        loop re-checks it, the save fails LOUDLY (no manifest is cut; the
+        two-phase commit keeps the previous step restorable) rather than
+        committing a dangling reference."""
+        sdir = _step_dir(self.prefix, step)
+        index_rel = f"{sdir}/shard_w{self.worker_id:05d}.chunks"
+        parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        pre_written = (pre or {}).get("written") or set()
+        pre_cbytes = (pre or {}).get("cbytes") or {}
+        pre_markers = (pre or {}).get("markers") or []
 
         def do_write():
             # store writes only; the diff above already decided what moves.
@@ -735,6 +929,17 @@ class CheckpointManager:
                     if h in pre_cbytes:
                         cbytes_out[h] = pre_cbytes[h]
                     continue
+                if v is None:
+                    # device path, clean-since-pre-dump chunk: the bytes were
+                    # never gathered off the device because the pre-written
+                    # file existed during the sync phase.  Gone now means a
+                    # reap won the race (same TOCTOU family the force=True
+                    # note documents) — with no bytes in hand the only safe
+                    # move is to abort this save before any manifest names
+                    # the hash; the previous committed step stays restorable
+                    raise RuntimeError(
+                        f"pre-written chunk {h} disappeared before the "
+                        f"step-{step} write; aborting save (no manifest cut)")
                 # the frame wraps the STORED bytes only: h stays the blake2b
                 # of the raw view, so dedup/fingerprints are codec-blind
                 blob = (SER.frame_chunk(v, self.compress)
@@ -832,16 +1037,261 @@ class CheckpointManager:
             part["delta"]["stall_s"] = snap_s + (time.perf_counter() - t_entry)
         return part
 
+    # -- device-resident dirty detection (delta + device_fp) ------------
+    def _device_scan(self, mine, refs_for, trust):
+        """Fingerprint every owned leaf ON DEVICE and gather only fp-dirty
+        chunk ranges host-side.
+
+        ``mine``: [(index, name, leaf)] with leaves still device-resident
+        (numpy trees ride the same path through ``leaf_words``'s host fast
+        path).  ``refs_for(name)`` returns the reference entry list (the
+        previous pre-dump's first, else the parent manifest's) or None.
+        ``trust(hash)`` says whether an fp-clean chunk may be reused
+        WITHOUT bytes in hand — callers answer with the parent-manifest
+        keep-set plus whatever existence guarantee fits their phase; a
+        distrusted clean chunk is simply reclassified dirty and refetched.
+
+        Every device read happens HERE, synchronously on the calling
+        (training) thread — donation-safety: nothing defers a read of a
+        buffer the next jitted step might invalidate.  Dirty slots are
+        coalesced into runs and each run is one ranged ``device_get`` of
+        the covering ELEMENT span (chunk boundaries need not align with
+        the leaf's itemsize — the byte view into the fetched span is
+        re-offset).
+
+        Returns ``(plans, stats)``: per-leaf
+        ``(index, name, dtype, shape, nbytes, slots)`` with slots
+        ``(nbytes, fp, ref_entry_or_None, view_or_None)`` — exactly one of
+        entry/view is set — and the D2H accounting stats.
+        """
+        from repro.kernels import ops as KOPS
+
+        t0 = time.perf_counter()
+        fps = KOPS.tree_chunk_fingerprints(
+            [(name, leaf) for _, name, leaf in mine], self.chunk_bytes,
+            impl=self.device_fp_impl)
+        fp_device_s = time.perf_counter() - t0
+
+        cb = self.chunk_bytes
+        d2h_bytes, d2h_s, clean = 0, 0.0, 0
+        plans = []
+        for idx, name, leaf in mine:
+            shape = list(leaf.shape)
+            itemsize = leaf.dtype.itemsize
+            nelems = int(np.prod(shape, dtype=np.int64)) if shape else 1
+            nbytes = nelems * itemsize
+            nchunks = -(-nbytes // cb) if nbytes else 0
+            fp = fps.get(name)
+            refs = refs_for(name)
+            slots: list = [None] * nchunks
+            dirty = []
+            for i in range(nchunks):
+                sn = min(cb, nbytes - i * cb)
+                fpi = int(fp[i])
+                e = refs[i] if refs and i < len(refs) else None
+                if (e is not None and e.get("fp") is not None
+                        and int(e["fp"]) == fpi and e.get("nbytes") == sn
+                        and trust(e["hash"])):
+                    slots[i] = (sn, fpi, e, None)
+                    clean += 1
+                else:
+                    slots[i] = (sn, fpi, None, None)
+                    dirty.append(i)
+            if dirty:
+                flat = leaf.reshape(-1)
+                runs, a, b = [], dirty[0], dirty[0]
+                for s in dirty[1:]:
+                    if s == b + 1:
+                        b = s
+                    else:
+                        runs.append((a, b))
+                        a = b = s
+                runs.append((a, b))
+                for a, b in runs:
+                    b0 = a * cb
+                    b1 = min((b + 1) * cb, nbytes)
+                    e0 = b0 // itemsize
+                    e1 = -(-b1 // itemsize)
+                    t1 = time.perf_counter()
+                    seg = np.ascontiguousarray(np.asarray(flat[e0:e1]))
+                    d2h_s += time.perf_counter() - t1
+                    d2h_bytes += seg.nbytes
+                    segb = memoryview(seg.view(np.uint8).reshape(-1))
+                    off = b0 - e0 * itemsize
+                    for s in range(a, b + 1):
+                        sn, fpi, _, _ = slots[s]
+                        sb = off + (s - a) * cb
+                        slots[s] = (sn, fpi, None, segb[sb:sb + sn])
+            plans.append((idx, name, str(leaf.dtype), shape, nbytes, slots))
+        stats = {"fp_device_s": fp_device_s, "d2h_s": d2h_s,
+                 "d2h_bytes": d2h_bytes, "chunks_clean_device": clean}
+        return plans, stats
+
+    def _plans_to_leaves(self, plans):
+        """Scan plans -> ``{name: (entries, views, leaf_crc)}``: dirty slots
+        are digested on the hash engine pool (all leaves in flight at
+        once), clean slots copy the reference entry into a FRESH dict (a
+        cached parent manifest is never mutated).  Every entry carries
+        ``fp`` — the device path persists the fingerprint vector
+        unconditionally so the next restartable comparison never needs the
+        bytes.  Returns ``(leaves, chunks_hashed)``."""
+        todo: list = []                      # (entries, slot index, view)
+        shaped: dict = {}
+        for _idx, name, _dtype, _shape, _nbytes, slots in plans:
+            entries: list = [None] * len(slots)
+            views: list = [None] * len(slots)
+            for i, (sn, fpi, e, v) in enumerate(slots):
+                if e is not None:
+                    entries[i] = {"hash": e["hash"], "nbytes": sn,
+                                  "crc32": e["crc32"], "fp": fpi}
+                else:
+                    entries[i] = {"nbytes": sn, "fp": fpi}
+                    views[i] = v
+                    todo.append((entries, i, v))
+            shaped[name] = (entries, views)
+        digests = self.hash_engine.digest_views([v for _, _, v in todo])
+        for (entries, i, _v), (h, crc) in zip(todo, digests):
+            e = entries[i]
+            entries[i] = {"hash": h, "nbytes": e["nbytes"], "crc32": crc,
+                          "fp": e["fp"]}
+        leaves = {}
+        for name, (entries, views) in shaped.items():
+            leaf_crc = 0
+            for e in entries:
+                leaf_crc = SER.crc32_combine(leaf_crc, e["crc32"],
+                                             e["nbytes"])
+            leaves[name] = (entries, views, leaf_crc)
+        return leaves, len(todo)
+
+    def _save_delta_device(self, step: int, tree,
+                           extra_meta: Optional[dict]) -> dict:
+        """Delta save with dirty detection on the accelerator: the Pallas/
+        jnp fingerprint pass runs over the LIVE device-resident leaves, and
+        only fp-dirty chunk runs cross the device->host link — at low churn
+        the D2H bill drops from the full model to ~the changed bytes
+        (``d2h_bytes`` in ``part["delta"]`` measures it).  Clean chunks
+        reuse the pre-dump/parent entries verbatim; pre-written-but-
+        uncommitted hashes are existence-verified synchronously here and
+        refetched from the device if a reap won the race."""
+        t_entry = time.perf_counter()
+        from repro.utils.tree import flatten_with_names
+
+        named = flatten_with_names(tree)
+        mine = [(i, name, leaf) for i, (name, leaf) in enumerate(named)
+                if i % self.num_workers == self.worker_id]
+        parent = self._parent_manifest()
+        parent_hashes = manifest_chunk_hashes(parent) if parent else set()
+        parent_cbytes = {c["hash"]: c["cbytes"]
+                         for e in (parent or {}).get("leaves", ())
+                         for c in (e.get("chunks") or ())
+                         if "cbytes" in c}
+        pre = self._consume_predump()
+        pre_leaves = (pre or {}).get("leaves") or {}
+        pre_written = (pre or {}).get("written") or set()
+        parent_leaves = {e["path"]: e for e in (parent or {}).get(
+            "leaves", ()) if "chunks" in e}
+
+        def refs_for(name):
+            if name in pre_leaves:
+                return pre_leaves[name]["entries"]
+            pl = parent_leaves.get(name)
+            return pl["chunks"] if pl else None
+
+        def trust(h):
+            if h in parent_hashes:
+                return True     # GC keep set: cannot be reaped under us
+            return h in pre_written and self.store.exists(
+                self.tier, chunk_rel(self.prefix, h))
+
+        plans, dstats = self._device_scan(mine, refs_for, trust)
+        t0 = time.perf_counter()
+        leaves, hashed_n = self._plans_to_leaves(plans)
+        hash_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        entries: list[dict] = []
+        new_views: dict[str, object] = {}
+        new_sizes: dict[str, int] = {}
+        chunks_total = bytes_total = 0
+        for idx, name, dtype, shape, nbytes, _slots in plans:
+            chunks, views, leaf_crc = leaves[name]
+            fresh = 0
+            for c, v in zip(chunks, views):
+                chunks_total += 1
+                bytes_total += c["nbytes"]
+                if c["hash"] in parent_cbytes:
+                    c["cbytes"] = parent_cbytes[c["hash"]]
+                if c["hash"] in parent_hashes:
+                    continue
+                fresh += 1
+                # keep a real view if ANY duplicate slot fetched one — the
+                # write loop can then repair a reaped pre-write instead of
+                # aborting on the None placeholder
+                if (c["hash"] not in new_views
+                        or (new_views[c["hash"]] is None and v is not None)):
+                    new_views[c["hash"]] = v
+                    new_sizes[c["hash"]] = c["nbytes"]
+            entries.append({
+                "path": name, "index": idx, "crc32": leaf_crc,
+                "dtype": dtype, "shape": shape,
+                "nbytes": nbytes, "chunks": chunks,
+                "reused": not fresh,
+            })
+        diff_s = time.perf_counter() - t0
+        part = {
+            "worker_id": self.worker_id,
+            "num_workers": self.num_workers,
+            "step": step,
+            "leaves": entries,
+            "snapshot_s": 0.0,              # no full snapshot on this path
+            "meta": extra_meta or {},
+            "delta": {
+                "chunk_bytes": self.chunk_bytes,
+                "chunks_total": chunks_total,
+                "bytes_total": bytes_total,
+                "chunks_new": len(new_views),
+                "bytes_new": sum(new_sizes.values()),
+                "parent_step": parent["step"] if parent else None,
+                "chunks_hashed": hashed_n,
+                "chunks_fp_clean": dstats["chunks_clean_device"],
+                "hash_workers": self.hash_engine.workers,
+                "predump_step": pre["step"] if pre else None,
+                "fp_s": dstats["fp_device_s"],
+                "hash_s": hash_s, "diff_s": diff_s,
+                "d2h_bytes": dstats["d2h_bytes"],
+                "d2h_s": dstats["d2h_s"],
+                "fp_device_s": dstats["fp_device_s"],
+                "chunks_clean_device": dstats["chunks_clean_device"],
+            },
+        }
+        return self._finish_delta(step, part, entries, new_views,
+                                  pre=pre, parent=parent,
+                                  snap_s=0.0, t_entry=t_entry)
+
     def wait_writes(self, timeout: Optional[float] = None) -> None:
         if self._writer is not None:
             self._writer.wait(timeout)
 
-    def wait_predump(self, timeout: Optional[float] = None) -> None:
+    def wait_predump(self, timeout: Optional[float] = None) -> Optional[dict]:
         """Drain a pending background pre-dump without consuming it (tests/
-        shutdown; ``save()`` itself waits via ``_consume_predump``)."""
+        shutdown; ``save()`` itself waits via ``_consume_predump``).
+
+        Returns the drained pre-dump's accounting stats (``step``,
+        ``hash_s``/``write_s``, ``chunks_hashed``/``chunks_prewritten`` and
+        the D2H plane: ``d2h_bytes``/``d2h_s``/``fp_device_s``/
+        ``chunks_clean_device``) or None if no pre-dump is buffered — the
+        iterative-pre-copy bench reads these to show each lead hashing only
+        what dirtied since the lead before."""
         pool = self._writer if self._writer is not None else self._predumper
         if self._predump_pending and pool is not None:
             pool.wait(timeout)
+        pre = self._predump
+        if pre is None:
+            return None
+        return {k: pre[k] for k in (
+            "step", "hash_s", "write_s", "chunks_hashed",
+            "chunks_prewritten", "d2h_bytes", "d2h_s", "fp_device_s",
+            "chunks_clean_device") if k in pre}
 
     # ------------------------------------------------------------------
     def commit(self, step: int, *, num_workers: Optional[int] = None,

@@ -65,6 +65,7 @@ class CheckpointPolicy:
     chunk_bytes: Optional[int] = None      # None -> DELTA_CHUNK_BYTES
     rebase_every: int = 8
     fingerprint: bool = False
+    device_fp: bool = False        # dirty detection on device (delta only)
     hash_workers: int = 0
     compress: int = 0              # per-chunk frame level; 0 = frameless raw
     # -- retention ------------------------------------------------------
@@ -110,6 +111,18 @@ class CheckpointPolicy:
             raise ValueError(
                 "delta chunk_bytes must be a positive multiple of 4 "
                 f"(fingerprint word stream), got {self.chunk_bytes}")
+        # device_fp runs the fingerprint kernel on live device residents and
+        # gathers only fp-dirty chunks host-side — it IS a delta-plane mode
+        if self.device_fp and not self.delta:
+            raise ValueError("device_fp requires delta mode")
+        # the Pallas fingerprint kernel folds its XOR reduction with a
+        # reshape-halving tree, so the per-chunk word count must be a power
+        # of two; fail at construction, not inside a jitted save
+        if (self.device_fp and self.chunk_bytes is not None
+                and (self.chunk_bytes // 4) & (self.chunk_bytes // 4 - 1)):
+            raise ValueError(
+                "device_fp chunk_bytes must be 4 * a power of two "
+                f"(Pallas fold), got {self.chunk_bytes}")
         # 22 is zstd's max standard level; zlib callers are clamped to 9 at
         # frame time.  compress only shapes the chunk plane's on-disk frame,
         # so it is legal (and a no-op) without delta — but a negative level

@@ -465,6 +465,29 @@ class ChunkHashEngine:
         out, _ = self.chunk_records([("", np.asarray(arr))], chunk_bytes)
         return out[""]
 
+    def digest_views(self, views) -> list[tuple[str, int]]:
+        """``(blake2b hash, crc32)`` per byte view, all in flight at once on
+        the pool (sub-threshold views digested inline, same policy as
+        ``chunk_records``).  The device-resident delta path uses this for
+        the DIRTY chunks it gathered — it has no per-leaf arrays to hand
+        to ``chunk_records``, just the fetched slices."""
+        slots: list = [None] * len(views)
+        pool = self._ensure_pool()
+        if pool is None:
+            for i, v in enumerate(views):
+                slots[i] = self._digest(v)
+            return slots
+
+        def task(i, part):
+            slots[i] = self._digest(part)
+        for i, v in enumerate(views):
+            if v.nbytes < INLINE_HASH_BYTES:
+                slots[i] = self._digest(v)
+            else:
+                pool.submit(functools.partial(task, i, v))
+        pool.wait()
+        return slots
+
     def chunk_records(self, items, chunk_bytes: int = DELTA_CHUNK_BYTES, *,
                       known: Optional[dict] = None,
                       fps: Optional[dict] = None):

@@ -98,7 +98,11 @@ class CRManager:
     def _save_fn(self, step: int, state_fn, extra_meta: dict):
         def save(label=None):
             state = state_fn()
-            host = fetch_tree(state)        # quiesce point: device -> host
+            # device_fp: the manager fingerprints LIVE device leaves and
+            # gathers only dirty chunks itself — a full fetch here would
+            # pay the D2H bill the mode exists to avoid
+            host = (state if getattr(self.ckpt, "device_fp", False)
+                    else fetch_tree(state))  # quiesce point: device -> host
             meta = dict(extra_meta)
             meta["next_step"] = step + 1
             meta["run_manifest"] = capture_manifest(self.cfg)
@@ -147,7 +151,9 @@ class CRManager:
                 and getattr(self.ckpt, "delta", False)):
             from repro.train.step import predump_boundary
             if predump_boundary(step, self.interval_steps, self.predump_lead):
-                host = fetch_tree(state_fn())   # quiesce: device -> host only
+                state = state_fn()
+                host = (state if getattr(self.ckpt, "device_fp", False)
+                        else fetch_tree(state))  # quiesce: device -> host only
                 info = self.ckpt.precommit(step, host)
                 self.events.append({"step": step, "reason": "predump",
                                     **info})

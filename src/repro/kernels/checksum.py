@@ -106,27 +106,9 @@ def _chunk_fp_kernel(w_ref, o_ref, *, chunk_words):
     o_ref[0] = x[0] + jnp.sum(mixed, dtype=jnp.uint32)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk_words", "interpret"))
-def chunk_fingerprints_pallas(words: jax.Array, *, chunk_words: int,
-                              interpret: bool = False) -> jax.Array:
-    """Per-chunk fingerprints of a uint32 word stream, on device.
-
-    words: (N,) uint32 -> (ceil(N / chunk_words),) uint32, one digest per
-    fixed-size chunk (the delta plane's dirty-chunk pre-filter: comparing
-    these against the parent step's marks which chunks even need a content
-    hash, at HBM bandwidth instead of host hash speed).  A ragged tail is
-    zero-padded — same convention as every other impl, so the three agree
-    bit-for-bit.  Same tiling idiom as ``checksum_pallas``: a 1-d grid over
-    blocks with the per-chunk digest landing in SMEM; no scratch, since
-    chunks don't combine across grid steps.
-    """
-    require_pow2(chunk_words, name="chunk_words")
-    n = words.shape[0]
-    if n == 0:
-        return jnp.zeros((0,), jnp.uint32)
-    pad = (-n) % chunk_words
-    if pad:
-        words = jnp.pad(words, (0, pad))
+def _chunk_fp_call(words: jax.Array, chunk_words: int,
+                   interpret: bool) -> jax.Array:
+    """pallas_call over an ALIGNED word stream (len % chunk_words == 0)."""
     nc = words.shape[0] // chunk_words
     kernel = functools.partial(_chunk_fp_kernel, chunk_words=chunk_words)
     return pl.pallas_call(
@@ -138,3 +120,35 @@ def chunk_fingerprints_pallas(words: jax.Array, *, chunk_words: int,
         out_shape=jax.ShapeDtypeStruct((nc,), jnp.uint32),
         interpret=interpret,
     )(words)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_words", "interpret"))
+def chunk_fingerprints_pallas(words: jax.Array, *, chunk_words: int,
+                              interpret: bool = False) -> jax.Array:
+    """Per-chunk fingerprints of a uint32 word stream, on device.
+
+    words: (N,) uint32 -> (ceil(N / chunk_words),) uint32, one digest per
+    fixed-size chunk (the delta plane's dirty-chunk pre-filter: comparing
+    these against the parent step's marks which chunks even need a content
+    hash, at HBM bandwidth instead of host hash speed).  A ragged tail is
+    zero-padded — same convention as every other impl, so the three agree
+    bit-for-bit.  The pad touches ONLY the tail chunk (body and padded tail
+    go through separate grids), so fingerprinting a big device-resident
+    leaf never materializes an O(leaf) padded copy in HBM.  Same tiling
+    idiom as ``checksum_pallas``: a 1-d grid over blocks with the per-chunk
+    digest landing in SMEM; no scratch, since chunks don't combine across
+    grid steps.
+    """
+    require_pow2(chunk_words, name="chunk_words")
+    n = words.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    rem = n % chunk_words
+    if not rem:
+        return _chunk_fp_call(words, chunk_words, interpret)
+    tail = jnp.pad(words[n - rem:], (0, chunk_words - rem))
+    tail_fp = _chunk_fp_call(tail, chunk_words, interpret)
+    if n == rem:
+        return tail_fp
+    body_fp = _chunk_fp_call(words[: n - rem], chunk_words, interpret)
+    return jnp.concatenate([body_fp, tail_fp])

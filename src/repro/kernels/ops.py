@@ -130,7 +130,8 @@ def chunk_fingerprints(words: jax.Array, *, chunk_words: int,
                        impl="auto") -> jax.Array:
     """Per-chunk uint32 fingerprints of a uint32 word stream — the delta
     plane's dirty-chunk pre-filter (one digest per fixed-size chunk, index
-    mixing chunk-local).  Input is zero-padded to a chunk multiple so every
+    mixing chunk-local).  A ragged tail is zero-padded INSIDE each impl
+    (only the tail chunk is padded — no O(stream) padded copy), so every
     impl (ref oracle, pallas, pallas_interpret, and the host-side
     serialization.fingerprint_chunks) agrees bit-for-bit."""
     from repro.kernels import checksum as ck
@@ -138,11 +139,122 @@ def chunk_fingerprints(words: jax.Array, *, chunk_words: int,
     ck.require_pow2(chunk_words, name="chunk_words")
     if words.shape[0] == 0:
         return jnp.zeros((0,), jnp.uint32)
-    pad = (-words.shape[0]) % chunk_words
-    if pad:
-        words = jnp.pad(words, (0, pad))
     if impl in ("pallas", "pallas_interpret"):
         return ck.chunk_fingerprints_pallas(
             words, chunk_words=chunk_words,
             interpret=(impl == "pallas_interpret"))
     return ref.chunk_fingerprints(words, chunk_words)
+
+
+def leaf_words(arr) -> jax.Array:
+    """Little-endian uint32 word stream over a leaf's payload bytes,
+    zero-padded to a word boundary — exactly the stream
+    ``serialization.fingerprint_chunks`` views host-side, but WITHOUT
+    leaving the device: a jax leaf is bitcast/recombined in place (uint32
+    out, never donated), so fingerprinting live params costs zero
+    device->host bytes.
+
+    numpy inputs take a pure-numpy fast path (a zero-copy ``<u4`` view when
+    the payload is word-aligned).  Going through jnp would silently downcast
+    float64 host arrays when x64 is disabled — the fast path keeps host
+    trees bit-exact as well as free.
+    """
+    import numpy as np
+
+    if not isinstance(arr, jax.Array):
+        a = np.ascontiguousarray(np.asarray(arr)).reshape(-1)
+        buf = a.view(np.uint8)
+        pad = (-buf.nbytes) % 4
+        if pad:
+            padded = np.zeros(buf.nbytes + pad, np.uint8)
+            padded[:buf.nbytes] = buf
+            buf = padded
+        return buf.view("<u4")
+    x = arr.reshape(-1)
+    if x.dtype == jnp.bool_:
+        # jnp.bool_ stores one byte per element holding 0/1 — same memory
+        # image astype produces, so the byte stream is preserved
+        x = x.astype(jnp.uint8)
+    itemsize = x.dtype.itemsize
+    if itemsize == 4:
+        return jax.lax.bitcast_convert_type(x, jnp.uint32)
+    if itemsize == 8:
+        # width-shrinking bitcast adds a minor dim, index 0 = low 32 bits —
+        # little-endian word order, matching the host <u4 view
+        return jax.lax.bitcast_convert_type(x, jnp.uint32).reshape(-1)
+    if itemsize == 2:
+        u16 = jax.lax.bitcast_convert_type(x, jnp.uint16)
+        if u16.shape[0] % 2:
+            u16 = jnp.pad(u16, (0, 1))
+        u16 = u16.astype(jnp.uint32)
+        return u16[0::2] | (u16[1::2] << 16)
+    if itemsize == 1:
+        u8 = (x if x.dtype == jnp.uint8
+              else jax.lax.bitcast_convert_type(x, jnp.uint8))
+        padw = (-u8.shape[0]) % 4
+        if padw:
+            u8 = jnp.pad(u8, (0, padw))
+        b = u8.reshape(-1, 4).astype(jnp.uint32)
+        return b[:, 0] | (b[:, 1] << 8) | (b[:, 2] << 16) | (b[:, 3] << 24)
+    raise TypeError(f"leaf_words: unsupported itemsize {itemsize} "
+                    f"for dtype {x.dtype}")
+
+
+def tree_chunk_fingerprints(named_leaves, chunk_bytes: int, *,
+                            impl="auto") -> dict:
+    """``{name: np.uint32[n_chunks]}`` per-chunk fingerprints for a list of
+    ``(name, leaf)`` pairs, computed ON DEVICE for jax leaves — the delta
+    plane's device-resident dirty detection (dirty chunks are decided
+    before any device->host copy; only fingerprint vectors, a few bytes per
+    MB of state, cross the link).
+
+    Values are bit-identical to ``serialization.fingerprint_chunks`` on the
+    same leaf bytes: each leaf's word stream is split into an ALIGNED body
+    (fingerprinted in place, no padded copy) and a ragged tail; all tails
+    are zero-padded and batched into ONE extra kernel call across the whole
+    tree, so non-multiple-of-4 / non-chunk-multiple leaves cost one launch
+    total, not one per leaf.  Inputs are only read — donation-safe.
+    """
+    import numpy as np
+
+    if chunk_bytes < 4 or chunk_bytes % 4:
+        raise ValueError(
+            f"chunk_bytes must be a multiple of 4, got {chunk_bytes}")
+    chunk_words = chunk_bytes // 4
+    out: dict = {}
+    body_fp: dict = {}
+    tails: list = []                       # (name, padded tail words)
+    for name, leaf in named_leaves:
+        w = leaf_words(leaf)
+        n = int(w.shape[0])
+        if n == 0:
+            out[name] = np.zeros(0, np.uint32)
+            continue
+        rem = n % chunk_words
+        nbody = n - rem
+        if nbody:
+            body_fp[name] = chunk_fingerprints(
+                jnp.asarray(w[:nbody]), chunk_words=chunk_words, impl=impl)
+        if rem:
+            tail = w[nbody:]
+            if isinstance(tail, np.ndarray):
+                t = np.zeros(chunk_words, np.uint32)
+                t[:rem] = tail
+                tail = t
+            else:
+                tail = jnp.pad(tail, (0, chunk_words - rem))
+            tails.append((name, tail))
+    tail_fp: dict = {}
+    if tails:
+        stacked = jnp.concatenate([jnp.asarray(t) for _, t in tails])
+        fps = np.asarray(chunk_fingerprints(
+            stacked, chunk_words=chunk_words, impl=impl))
+        for i, (name, _) in enumerate(tails):
+            tail_fp[name] = fps[i]
+    for name in body_fp:
+        out[name] = np.asarray(body_fp[name])
+    for name, fp in tail_fp.items():
+        prev = out.get(name)
+        out[name] = (np.append(prev, fp) if prev is not None
+                     else np.asarray([fp], np.uint32))
+    return out

@@ -147,13 +147,18 @@ def checksum(words: jax.Array) -> jax.Array:
 
 
 def chunk_fingerprints(words: jax.Array, chunk_words: int) -> jax.Array:
-    """Per-chunk digests: (N,) uint32 with N a multiple of ``chunk_words`` ->
-    (N // chunk_words,) uint32.  Same FNV-style mix as ``checksum`` but with
-    the index CHUNK-LOCAL, so each chunk's value is independent of its
-    position — the property the delta plane's dirty-chunk pre-filter needs.
-    Oracle for checksum.chunk_fingerprints_pallas and the numpy
+    """Per-chunk digests: (N,) uint32 -> (ceil(N / chunk_words),) uint32; a
+    ragged tail is zero-padded (the shared convention — a zero word still
+    mixes to a nonzero value, so padding is part of the definition).  Same
+    FNV-style mix as ``checksum`` but with the index CHUNK-LOCAL, so each
+    chunk's value is independent of its position — the property the delta
+    plane's dirty-chunk pre-filter needs.  Oracle for
+    checksum.chunk_fingerprints_pallas and the numpy
     serialization.fingerprint_chunks path (all three bit-identical)."""
     PRIME = jnp.uint32(16777619)
+    pad = (-words.shape[0]) % chunk_words
+    if pad:
+        words = jnp.pad(words, (0, pad))
     w = words.astype(jnp.uint32).reshape(-1, chunk_words)
     idx = jnp.arange(chunk_words, dtype=jnp.uint32)[None, :]
     mixed = (w ^ (idx * PRIME)) * (idx | jnp.uint32(1))

@@ -113,8 +113,21 @@ def build_argparser():
                          "bytes dirtied in the last --ckpt-predump-lead "
                          "steps (requires --ckpt-delta)")
     ap.add_argument("--ckpt-predump-lead", type=int, default=1,
-                    help="how many steps before the interval boundary the "
-                         "pre-dump fires")
+                    help="pre-dump window: a pre-dump fires at EVERY step "
+                         "in the last N steps before the interval boundary "
+                         "(iterative pre-copy — each lead re-hashes only "
+                         "what dirtied since the lead before)")
+    ap.add_argument("--ckpt-device-fp", action="store_true",
+                    help="device-resident dirty detection: run the "
+                         "fingerprint kernel on live device params and copy "
+                         "only fp-dirty chunks host-side — clean chunks "
+                         "cost zero device->host bytes (requires "
+                         "--ckpt-delta; set REPRO_DEVICE_FP_IMPL to pick "
+                         "the kernel impl)")
+    ap.add_argument("--ckpt-calibrate", action="store_true",
+                    help="measure per-tier store bandwidth/latency at "
+                         "startup (cached in tier_profile.json) and apply "
+                         "the profile to tier routing")
     ap.add_argument("--interval-steps", type=int, default=0)
     ap.add_argument("--walltime", type=float, default=0.0)
     ap.add_argument("--margin", type=float, default=5.0)
@@ -131,8 +144,10 @@ def main(argv=None) -> int:
     args = build_argparser().parse_args(argv)
     if args.ckpt_delta and args.ckpt_incremental:
         sys.exit("--ckpt-delta and --ckpt-incremental are mutually exclusive")
-    if (args.ckpt_predump or args.ckpt_fingerprint) and not args.ckpt_delta:
-        sys.exit("--ckpt-predump/--ckpt-fingerprint require --ckpt-delta")
+    if ((args.ckpt_predump or args.ckpt_fingerprint or args.ckpt_device_fp)
+            and not args.ckpt_delta):
+        sys.exit("--ckpt-predump/--ckpt-fingerprint/--ckpt-device-fp "
+                 "require --ckpt-delta")
     # trap preemption signals from the very start: a USR1 during jit compile /
     # restore must checkpoint-and-requeue, not kill the process (default USR1
     # action is terminate) — the paper's startup-time lesson (Fig. 2) applies
@@ -156,6 +171,12 @@ def main(argv=None) -> int:
     local_root = args.local_root or os.environ.get("REPRO_LOCAL_ROOT")
     tier_roots = node_local_tier_roots(local_root) if local_root else None
     store = TieredStore(Path(args.ckpt_dir), tier_roots=tier_roots)
+    if args.ckpt_calibrate:
+        # measured tier profile (cached in tier_profile.json under the store
+        # root) replaces the static tier table — restore sizing and promote
+        # routing then reflect THIS machine's actual I/O planes
+        from repro.checkpoint.calibrate import calibrate_tiers
+        calibrate_tiers(store)
     requeue_file = RequeueFile(Path(args.ckpt_dir) / "requeue.json")
     prior = requeue_file.load()
     # peer fabric: scheduler hint first, then whatever the last attempt
@@ -175,6 +196,7 @@ def main(argv=None) -> int:
                               rebase_every=args.ckpt_rebase_every,
                               restore_workers=args.restore_workers,
                               fingerprint=args.ckpt_fingerprint,
+                              device_fp=args.ckpt_device_fp,
                               hash_workers=args.hash_workers,
                               compress=args.ckpt_compress,
                               io_batch=args.io_batch,

@@ -28,19 +28,21 @@ def state_logical_axes(cfg: ModelConfig):
 
 
 def predump_boundary(step: int, interval: int, lead: int = 1) -> bool:
-    """True when ``step`` is where the pre-dump (``CheckpointManager.
-    precommit``) for the next interval checkpoint should fire: ``lead``
-    steps before each interval boundary, so the background hash/pre-write
-    overlaps the remaining training steps and the save at the boundary pays
-    only for what changed since.  ``lead >= interval`` would pre-dump a
-    state staler than the previous checkpoint — clamped to ``interval - 1``.
+    """True when ``step`` is inside the pre-dump window before an interval
+    checkpoint: EVERY step in the ``lead`` steps before each boundary fires
+    a ``CheckpointManager.precommit`` (iterative pre-copy, CRIU-style).
+    Each pre-dump uses the previous one as its fingerprint reference, so
+    lead N-1 re-hashes only what dirtied since lead N-2 and the save at the
+    boundary pays only for the last step's churn.  ``lead=1`` reproduces
+    the single-pre-dump schedule exactly.  ``lead >= interval`` would
+    pre-dump a state staler than the previous checkpoint — clamped to
+    ``interval - 1``.
     """
-    if interval <= 0 or step < 0:
-        return False
-    lead = max(1, min(lead, interval - 1)) if interval > 1 else 0
-    if lead == 0:
+    if interval <= 1 or step < 0:
         return False            # interval=1: every step saves; nothing to overlap
-    return (step + lead) % interval == 0
+    lead = max(1, min(lead, interval - 1))
+    r = (-step) % interval      # steps until the next boundary
+    return 1 <= r <= lead
 
 
 def abstract_train_state(cfg: ModelConfig, oc: adamw.OptConfig):

@@ -626,7 +626,9 @@ def test_bench_artifact_prunes_stale_keys(tmp_path):
     # declared keys cover everything bench_delta merges
     from benchmarks import bench_delta
     assert set(bench_delta.BENCH_KEYS) == {"delta_save", "delta_save_overlap",
-                                           "delta_peer_fetch"}
+                                           "delta_peer_fetch",
+                                           "delta_save_device",
+                                           "delta_predump_iterative"}
     # and the io-plane row is declared so the pruner never reaps it
     from benchmarks import bench_cr_overhead
     assert "restore_engine_io" in bench_cr_overhead.BENCH_KEYS

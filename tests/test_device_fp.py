@@ -1,0 +1,301 @@
+"""Device-resident dirty detection (``CheckpointPolicy.device_fp``).
+
+The invariant everything here guards: the device path is a pure
+OPTIMIZATION of the host delta path — same chunk hashes, same manifests,
+same restored bytes — whose only observable difference is the
+device->host accounting (``d2h_bytes`` tracks the churn, not the model
+size).  The word-stream and fingerprint layers are checked against the
+host serialization oracle bit-for-bit (including the Pallas kernel in
+interpret mode), then whole save chains are compared end to end.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint import serialization as SER  # noqa: E402
+from repro.checkpoint.manager import (CheckpointManager,  # noqa: E402
+                                      CheckpointPolicy)
+from repro.checkpoint.store import TieredStore  # noqa: E402
+from repro.kernels import ops  # noqa: E402
+
+CHUNK = 256                       # 64 words: power of two for the kernel
+
+
+def _words_oracle(a) -> np.ndarray:
+    """The host-side convention: little-endian payload bytes, zero-padded
+    to a word boundary, viewed <u4."""
+    b = np.asarray(a).tobytes()
+    pad = (-len(b)) % 4
+    return np.frombuffer(b + b"\0" * pad, dtype="<u4")
+
+
+# ---------------------------------------------------------------------------
+# layer 1: leaf_words == the host byte view, for every dtype width
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,n", [
+    (jnp.float32, 33), (jnp.int32, 7), (jnp.uint32, 8),
+    (jnp.float16, 9), (jnp.bfloat16, 10), (jnp.uint16, 11),
+    (jnp.int8, 7), (jnp.uint8, 13), (jnp.bool_, 11),
+    (jnp.float32, 0),
+])
+def test_leaf_words_matches_host_view(dtype, n):
+    rng = np.random.default_rng(3)
+    raw = rng.integers(0, 200, size=n)
+    if dtype == jnp.bool_:
+        x = jnp.asarray(raw % 2 == 0)
+    else:
+        x = jnp.asarray(raw).astype(dtype)
+    got = np.asarray(ops.leaf_words(x))
+    np.testing.assert_array_equal(got, _words_oracle(x))
+
+
+def test_leaf_words_scalar_and_numpy_paths():
+    # 0-d jax leaf
+    np.testing.assert_array_equal(
+        np.asarray(ops.leaf_words(jnp.float32(1.5))),
+        _words_oracle(jnp.float32(1.5)))
+    # numpy fast path keeps float64 bit-exact (jnp would downcast with
+    # x64 disabled) and handles 0-d / odd-length tails
+    rng = np.random.default_rng(4)
+    for a in (rng.standard_normal(5),                 # f64
+              np.float64(2.75),                       # 0-d
+              rng.integers(0, 9, 7).astype(np.int8),  # 7 bytes -> pad
+              np.zeros(0, np.float32)):
+        np.testing.assert_array_equal(np.asarray(ops.leaf_words(a)),
+                                      _words_oracle(a))
+
+
+# ---------------------------------------------------------------------------
+# layer 2: tree_chunk_fingerprints == serialization.fingerprint_chunks
+# ---------------------------------------------------------------------------
+
+def _fp_tree():
+    rng = np.random.default_rng(5)
+    return [
+        ("aligned", jnp.asarray(                      # exact chunk multiple
+            rng.standard_normal(CHUNK // 4 * 3).astype(np.float32))),
+        ("ragged", jnp.asarray(                       # ragged word tail
+            rng.standard_normal(CHUNK // 4 + 5).astype(np.float32))),
+        ("bytes", jnp.asarray(                        # tail not %4 bytes
+            rng.integers(0, 100, CHUNK + 7).astype(np.int8))),
+        ("tiny", jnp.asarray(rng.standard_normal(3).astype(np.float32))),
+        ("empty", jnp.zeros((0,), jnp.float32)),      # zero-byte leaf
+        ("host64", rng.standard_normal(CHUNK // 8 + 1)),   # numpy f64
+    ]
+
+
+@pytest.mark.parametrize("impl", ["auto", "pallas_interpret"])
+def test_tree_chunk_fingerprints_matches_serialization(impl):
+    leaves = _fp_tree()
+    got = ops.tree_chunk_fingerprints(leaves, CHUNK, impl=impl)
+    assert set(got) == {name for name, _ in leaves}
+    for name, leaf in leaves:
+        want = SER.fingerprint_chunks(np.asarray(leaf).tobytes(), CHUNK)
+        np.testing.assert_array_equal(
+            got[name], want, err_msg=f"leaf {name} ({impl})")
+        assert got[name].dtype == np.uint32
+
+
+def test_policy_device_fp_validation():
+    with pytest.raises(ValueError, match="requires delta"):
+        CheckpointPolicy(device_fp=True)
+    with pytest.raises(ValueError, match="power of two"):
+        CheckpointPolicy(delta=True, device_fp=True, chunk_bytes=12)
+    CheckpointPolicy(delta=True, device_fp=True, chunk_bytes=CHUNK)
+
+
+# ---------------------------------------------------------------------------
+# layer 3: whole save chains — device path byte-identical to host path
+# ---------------------------------------------------------------------------
+
+def _base_tree():
+    rng = np.random.default_rng(6)
+    return {
+        # 4 exact chunks: the D2H accounting below is byte-exact on it
+        "a": rng.standard_normal(CHUNK).astype(np.float32),
+        "b": rng.standard_normal(CHUNK // 4 + 9).astype(np.float32),
+        "c": rng.integers(0, 100, CHUNK + 7).astype(np.int8),  # ragged tail
+        "d": rng.standard_normal(5),                           # float64
+        "e": np.zeros(0, np.float32),                          # zero-byte
+        "f": np.float32(3.25),                                 # 0-d scalar
+    }
+
+
+def _mutate(tree, elems):
+    out = dict(tree)
+    a = out["a"].copy()
+    a[:elems] += 1.0
+    out["a"] = a
+    return out
+
+
+def _manifest_payload(m):
+    """The content-bearing part of a manifest: leaves (chunks incl. fp) and
+    the step — everything timing/meta is excluded."""
+    man = dict(m)
+    return {"step": man["step"], "leaves": man["leaves"]}
+
+
+def _save_chain(tmp, name, device_fp):
+    store = TieredStore(tmp / name, seed=0)
+    mgr = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK,
+        fingerprint=True, device_fp=device_fp))
+    tree = _base_tree()
+    parts, manifests = [], []
+    cur = tree
+    for s, elems in ((1, 0), (2, 96), (3, 40)):
+        if elems:
+            cur = _mutate(cur, elems)
+        parts.append(mgr.save(s, cur))
+        mgr.commit(s)
+        manifests.append(_manifest_payload(mgr.read_manifest(s)))
+    restored = []
+    for s in (1, 2, 3):
+        out, _ = mgr.restore(tree, s)
+        restored.append(out)
+    digests = store.chunk_digests("shared", "ckpt")
+    mgr.close()
+    return parts, manifests, restored, digests, cur
+
+
+def test_device_save_chain_bit_identical_to_host(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE_FP_IMPL", "pallas_interpret")
+    h_parts, h_man, h_res, h_dig, h_final = _save_chain(
+        tmp_path, "host", False)
+    d_parts, d_man, d_res, d_dig, d_final = _save_chain(
+        tmp_path, "dev", True)
+
+    # identical chunk stores, identical manifests, identical restores
+    assert d_dig == h_dig
+    assert d_man == h_man
+    for got, want in zip(d_res, h_res):
+        flat_g, flat_w = dict(SER.flatten_with_names(got)), dict(
+            SER.flatten_with_names(want))
+        assert set(flat_g) == set(flat_w)
+        for k in flat_w:
+            np.testing.assert_array_equal(flat_g[k], flat_w[k])
+            assert np.asarray(flat_g[k]).dtype == np.asarray(flat_w[k]).dtype
+
+    # D2H accounting: the host path snapshots the world every step...
+    payload = sum(np.asarray(a).nbytes for a in _base_tree().values())
+    assert h_parts[1]["delta"]["d2h_bytes"] == payload
+    assert h_parts[1]["delta"]["chunks_clean_device"] == 0
+    # ...the device path pays only for the dirty chunks: step 2 dirties
+    # exactly elements [0,96) of the 4-chunk f32 leaf "a" -> chunks 0-1
+    d2 = d_parts[1]["delta"]
+    assert d2["d2h_bytes"] == 2 * CHUNK
+    assert d2["chunks_clean_device"] > 0
+    assert d2["fp_device_s"] > 0.0
+    # step 3 dirties elements [0,40) -> chunk 0 only
+    assert d_parts[2]["delta"]["d2h_bytes"] == CHUNK
+
+
+def test_device_save_jnp_leaves_match_numpy_leaves(tmp_path, monkeypatch):
+    """The bitcast word streams feed the same manifests as host memory:
+    a device tree (jnp leaves, incl. sub-word dtypes) and its numpy twin
+    produce identical chunk plans."""
+    monkeypatch.setenv("REPRO_DEVICE_FP_IMPL", "pallas_interpret")
+    rng = np.random.default_rng(7)
+    base = {
+        "w32": rng.standard_normal(CHUNK // 2).astype(np.float32),
+        "w16": rng.standard_normal(CHUNK // 4 + 3).astype(np.float16),
+        "w8": rng.integers(0, 90, CHUNK - 5).astype(np.int8),
+        "flags": rng.integers(0, 2, 37).astype(bool),
+    }
+
+    def chain(name, to_leaf):
+        store = TieredStore(tmp_path / name, seed=0)
+        mgr = CheckpointManager(store, CheckpointPolicy(
+            replicas=1, delta=True, chunk_bytes=CHUNK,
+            fingerprint=True, device_fp=True))
+        tree = {k: to_leaf(v) for k, v in base.items()}
+        mgr.save(1, tree)
+        mgr.commit(1)
+        man = _manifest_payload(mgr.read_manifest(1))
+        out, _ = mgr.restore(base, 1)
+        mgr.close()
+        return man, out
+
+    man_np, out_np = chain("np", lambda v: v)
+    man_j, out_j = chain("jnp", jnp.asarray)
+    assert man_np == man_j
+    for k, v in base.items():
+        np.testing.assert_array_equal(np.asarray(out_j[k]), v)
+        np.testing.assert_array_equal(np.asarray(out_np[k]), v)
+
+
+# ---------------------------------------------------------------------------
+# iterative pre-copy on the device path
+# ---------------------------------------------------------------------------
+
+def test_device_iterative_predump_hashes_only_new_churn(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICE_FP_IMPL", "pallas_interpret")
+    store = TieredStore(tmp_path, seed=0)
+    mgr = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK,
+        fingerprint=True, device_fp=True))
+    tree = _base_tree()
+    mgr.save(1, tree)
+    mgr.commit(1)
+
+    # lead N-2: 2 chunks of "a" dirtied since the parent manifest
+    cur = _mutate(tree, 96)
+    mgr.precommit(2, cur)
+    s1 = mgr.wait_predump()
+    assert s1["chunks_hashed"] == 2 and s1["d2h_bytes"] == 2 * CHUNK
+
+    # lead N-1: only chunk 0 re-dirtied since lead N-2
+    cur = _mutate(cur, 40)
+    mgr.precommit(3, cur)
+    s2 = mgr.wait_predump()
+    assert s2["chunks_hashed"] == 1 and s2["d2h_bytes"] == CHUNK
+    assert s2["chunks_hashed"] < s1["chunks_hashed"]
+
+    # the save consumes lead N-1: nothing dirtied since -> zero D2H,
+    # zero hashing, and the manifest still restores bit-exactly
+    p = mgr.save(4, cur)
+    mgr.commit(4)
+    d = p["delta"]
+    assert d["chunks_hashed"] == 0 and d["d2h_bytes"] == 0
+    assert d["predump_step"] == 3
+    out, _ = mgr.restore(tree, 4)
+    flat_g, flat_w = dict(SER.flatten_with_names(out)), dict(
+        SER.flatten_with_names(cur))
+    for k in flat_w:
+        np.testing.assert_array_equal(flat_g[k], flat_w[k])
+    mgr.close()
+
+
+def test_host_iterative_predump_uses_previous_lead(tmp_path):
+    """The host pre-dump path reuses the previous lead's fp-clean entries
+    too (same iterative schedule, no device involved)."""
+    store = TieredStore(tmp_path, seed=0)
+    mgr = CheckpointManager(store, CheckpointPolicy(
+        replicas=1, delta=True, chunk_bytes=CHUNK, fingerprint=True))
+    tree = _base_tree()
+    mgr.save(1, tree)
+    mgr.commit(1)
+
+    cur = _mutate(tree, 96)
+    mgr.precommit(2, cur)
+    s1 = mgr.wait_predump()
+    cur = _mutate(cur, 40)
+    mgr.precommit(3, cur)
+    s2 = mgr.wait_predump()
+    assert s2["chunks_hashed"] < s1["chunks_hashed"] == 2
+    assert s2["chunks_hashed"] == 1
+
+    p = mgr.save(4, cur)
+    mgr.commit(4)
+    assert p["delta"]["chunks_hashed"] == 0
+    out, _ = mgr.restore(tree, 4)
+    flat_g, flat_w = dict(SER.flatten_with_names(out)), dict(
+        SER.flatten_with_names(cur))
+    for k in flat_w:
+        np.testing.assert_array_equal(flat_g[k], flat_w[k])
+    mgr.close()

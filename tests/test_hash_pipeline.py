@@ -367,8 +367,10 @@ def test_predump_boundary_schedule():
 
     fires = [s for s in range(12) if predump_boundary(s, 5, lead=1)]
     assert fires == [4, 9]                   # one step before 5, 10
+    # lead>1 opens a WINDOW: every step in the last `lead` before the
+    # boundary pre-dumps (iterative pre-copy)
     fires = [s for s in range(12) if predump_boundary(s, 5, lead=2)]
-    assert fires == [3, 8]
+    assert fires == [3, 4, 8, 9]
     # lead clamped below the interval; interval=1 never pre-dumps
     assert [s for s in range(6) if predump_boundary(s, 2, lead=7)] == [1, 3, 5]
     assert not any(predump_boundary(s, 1) for s in range(6))

@@ -197,6 +197,61 @@ def test_uncommitted_wpart_chunks_are_protected(tmp_path, rng):
         w.close()
 
 
+def test_elastic_worker_change_mid_predump(tmp_path, rng):
+    """Elastic resize mid-pre-dump: worker 1 of 2 pre-dumps, is preempted,
+    and the fleet comes back as ONE worker that saves and commits the next
+    step.  The departed worker's intent marker must keep its manifest-less
+    chunks alive (the resized commit's sweep backs off), and only after the
+    marker ages out may the sweep reclaim them — with both committed steps
+    still restorable."""
+    store = TieredStore(tmp_path, seed=0)
+    w0, w1 = _workers(store, 2)
+    tree1 = _tree(rng)
+    for w in (w0, w1):
+        w.save(1, tree1)
+    w0.commit(1, num_workers=2)
+
+    # worker 1 pre-dumps a snapshot no save will ever consume...
+    w1.precommit(2, _mutate(tree1, 0.5))
+    w1.wait_predump()
+    before = store.chunk_digests("shared", "ckpt")
+
+    # ...and the fleet resizes: a single fresh worker owns every leaf now
+    solo = CheckpointManager(store, _pol(), worker_id=0, num_workers=1)
+    tree2 = _mutate(tree1, 1.0)
+    solo.save(2, tree2)
+    solo.commit(2, num_workers=1)
+
+    keep = (manifest_chunk_hashes(solo.read_manifest(1))
+            | manifest_chunk_hashes(solo.read_manifest(2)))
+    orphans = before - keep
+    assert orphans, "scenario needs manifest-less pre-dump chunks"
+    # the departed worker's marker is fresh: the sweep defers (the resized
+    # single-worker commit no longer sweeps automatically, so the elastic
+    # coordinator must invoke it — and the marker barrier must still hold)
+    sweep = solo.sweep_orphan_chunks()
+    assert sweep["skipped"] == "in-flight saves"
+    assert orphans <= store.chunk_digests("shared", "ckpt")
+
+    # the worker never comes back; once its marker ages out the next sweep
+    # reclaims exactly the manifest-less pre-dump chunks
+    for rel in store.list_prefix("shared", "ckpt/inflight"):
+        store.put("shared", rel, json.dumps(
+            {"kind": "predump", "step": 2, "worker": 1,
+             "t": time.time() - 10_000}).encode())
+    sweep = solo.sweep_orphan_chunks(stale_marker_s=900.0)
+    assert sweep["skipped"] is None
+    assert orphans <= set(sweep["reaped"])
+    assert store.chunk_digests("shared", "ckpt") == keep
+
+    out2, _ = solo.restore(tree2, 2)
+    _assert_trees_equal(out2, tree2)
+    out1, _ = solo.restore(tree1, 1)
+    _assert_trees_equal(out1, tree1)
+    for w in (w0, w1, solo):
+        w.close()
+
+
 def test_unreadable_wpart_leaks_rather_than_tears(tmp_path, rng):
     store = TieredStore(tmp_path, seed=0)
     m = CheckpointManager(store, _pol(), num_workers=2)
